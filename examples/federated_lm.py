@@ -1,0 +1,28 @@
+"""DFL at LM scale: a 4-replica federation fine-tuning a reduced llama3
+on synthetic token streams — H local steps + reputation-weighted gossip,
+int8-compressed payloads, one simulated node failure.
+
+This is the pod-scale path (shard_map over the fed axis) run on host
+devices; the identical code lowers on the production meshes (see
+repro/launch/dryrun.py --dfl).
+
+    PYTHONPATH=src python examples/federated_lm.py
+"""
+import sys
+
+from repro.launch import train as train_mod
+
+
+def main():
+    train_mod.main([
+        "--arch", "llama3-8b", "--smoke", "--dfl",
+        "--host-devices", "4", "--fed", "4",
+        "--rounds", "8", "--local-steps", "2", "--ttl", "1",
+        "--compress", "int8",
+        "--fail-node", "3@5",
+        "--batch", "4", "--seq", "128",
+    ])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Batched serving example: prefill a prompt batch, then autoregressively
+decode with the per-layer-kind KV/recurrent caches (ring buffers for local
+attention, RG-LRU/xLSTM states for recurrent archs).
+
+    PYTHONPATH=src python examples/serve.py --arch recurrentgemma-2b
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, smoke_config
+from repro.models import transformer
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="recurrentgemma-2b", choices=ARCH_IDS)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args(argv)
+
+    cfg = smoke_config(args.arch)
+    if not cfg.supports_decode:
+        raise SystemExit(f"{args.arch} is encoder-only; no decode")
+    params, _ = transformer.init(jax.random.PRNGKey(0), cfg)
+    B, P = args.batch, args.prompt_len
+    max_seq = P + args.gen
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, P), 0,
+                                 cfg.vocab_size)
+    batch = {"tokens": prompts}
+    if cfg.frontend == "vision":
+        batch["patch_embeds"] = 0.01 * jnp.ones(
+            (B, cfg.num_patch_tokens, cfg.d_model), jnp.bfloat16)
+
+    cache, _ = transformer.cache_init(cfg, B, max_seq)
+    prefill = jax.jit(lambda p, b, c: transformer.prefill(p, cfg, b, c))
+    decode = jax.jit(lambda p, c, t, pos: transformer.decode_step(p, cfg, t, c, pos))
+
+    logits, cache = prefill(params, batch, cache)
+    tok = jnp.argmax(logits, -1)[:, None]
+    generated = [tok]
+    for i in range(args.gen - 1):
+        logits, cache = decode(params, cache, tok, jnp.asarray(P + i, jnp.int32))
+        tok = jnp.argmax(logits, -1)[:, None]
+        generated.append(tok)
+    out = jnp.concatenate(generated, axis=1)
+    print(f"[serve] arch={cfg.name} batch={B} prompt={P} generated={out.shape[1]}")
+    print("[serve] first row token ids:", np.asarray(out[0])[:16], "...")
+    print("[serve] all finite logits:", bool(jnp.isfinite(logits).all()))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Blockchain substrate: proof-of-contribution chain + p2p simulator."""
+from repro.chain import crypto, ledger, network, node, types  # noqa: F401

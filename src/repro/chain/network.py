@@ -1,0 +1,175 @@
+"""Tick-based p2p network simulator (paper §VI-D: "we introduce the tick
+time-keeping concept, a virtual time scale ... each node takes its actions in
+a random number of ticks").
+
+Simulates: topology (any adjacency; the paper uses fully-connected), per-edge
+latency, ttl-bounded transaction forwarding, receipt backflow, block
+generation with neighbor confirmations, malicious nodes, stragglers
+(slow-train nodes), and node failure/join (elasticity tests). Messages ride a
+heap-based event queue keyed by delivery tick.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import random
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.chain.node import DFLNode
+from repro.chain.types import Transaction
+
+
+@dataclasses.dataclass
+class SimConfig:
+    ticks: int = 1000
+    train_interval: tuple = (8, 16)     # uniform random ticks between trains
+    latency: tuple = (1, 3)             # per-edge delivery delay (ticks)
+    record_every: int = 10
+    seed: int = 0
+
+
+@dataclasses.dataclass(order=True)
+class _Msg:
+    tick: int
+    seq: int
+    kind: str = dataclasses.field(compare=False)    # "tx" | "receipt"
+    dest: str = dataclasses.field(compare=False)
+    src: str = dataclasses.field(compare=False)
+    tx: object = dataclasses.field(compare=False)   # Transaction | Receipt
+    params: object = dataclasses.field(compare=False)
+
+
+class Simulator:
+    """Drives DFLNodes over a virtual-time network."""
+
+    def __init__(self, nodes: Sequence[DFLNode], topology: Dict[str, List[str]],
+                 test_fn: Callable, cfg: SimConfig):
+        self.nodes = {n.name: n for n in nodes}
+        self.topology = topology
+        self.test_fn = test_fn            # params -> accuracy on global test set
+        self.cfg = cfg
+        self.rand = random.Random(cfg.seed)
+        self.queue: list[_Msg] = []
+        self._seq = 0
+        self.next_train = {
+            n: self.rand.randint(*cfg.train_interval) for n in self.nodes}
+        self.straggler_factor: Dict[str, int] = {}
+        self.dead: set[str] = set()
+        self.stats = {"tx_sent": 0, "tx_delivered": 0, "tx_dropped_dup": 0,
+                      "tx_dropped_expired": 0, "blocks": 0, "fedavg_rounds": 0}
+
+    # --------------------------------------------------------------- plumbing
+    def _push(self, tick: int, kind: str, dest: str, src: str, tx, params):
+        self._seq += 1
+        payload = tx.copy() if kind == "tx" else tx   # wire snapshot
+        heapq.heappush(self.queue,
+                       _Msg(tick, self._seq, kind, dest, src, payload, params))
+
+    def _addr_to_name(self, address: str):
+        for name, node in self.nodes.items():
+            if node.info.address == address:
+                return name
+        return None
+
+    def _latency(self) -> int:
+        return self.rand.randint(*self.cfg.latency)
+
+    def neighbors(self, name: str) -> List[str]:
+        return [p for p in self.topology.get(name, []) if p not in self.dead]
+
+    # ------------------------------------------------------------- lifecycle
+    def kill_node(self, name: str):
+        """Node failure: drops off the network; DFL needs no global action."""
+        self.dead.add(name)
+
+    def revive_node(self, name: str):
+        self.dead.discard(name)
+
+    def set_straggler(self, name: str, factor: int):
+        self.straggler_factor[name] = factor
+
+    # ------------------------------------------------------------------ steps
+    def _broadcast_tx(self, node: DFLNode, tick: int):
+        params, _ = node.train_local(tick)
+        tx = node.create_transaction(params, tick)
+        node.stash_for_block(tx)
+        self.stats["tx_sent"] += 1
+        for peer in self.neighbors(node.name):
+            self._push(tick + self._latency(), "tx", peer, node.name, tx, params)
+
+    def _deliver_tx(self, msg: _Msg, tick: int):
+        node = self.nodes[msg.dest]
+        if msg.dest in self.dead:
+            return
+        receipt, forward = node.receive_transaction(msg.tx, msg.params, tick)
+        if receipt is None:
+            key = ("tx_dropped_expired" if not msg.tx.verify(now=tick)
+                   else "tx_dropped_dup")
+            self.stats[key] += 1
+            return
+        self.stats["tx_delivered"] += 1
+        # receipt flows back to the generator (Fig 1) for block assembly
+        gen_name = self._addr_to_name(msg.tx.generator.address)
+        if gen_name and gen_name not in self.dead:
+            self._push(tick + self._latency(), "receipt", gen_name,
+                       node.name, receipt, None)
+        if node.maybe_update_model(tick):
+            self.stats["fedavg_rounds"] += 1
+        if forward:   # partial consensus: keep flooding while ttl remains
+            for peer in self.neighbors(node.name):
+                if peer != msg.src:
+                    self._push(tick + self._latency(), "tx", peer, node.name,
+                               msg.tx, msg.params)
+
+    def _maybe_block(self, node: DFLNode, tick: int):
+        if not node.ready_for_block():
+            return
+        draft = node.draft_block(tick)
+        confirmations = []
+        for peer in self.neighbors(node.name):
+            confirmations.extend(self.nodes[peer].confirm_block(draft))
+        if node.finalize_block(draft, confirmations):
+            self.stats["blocks"] += 1
+
+    # -------------------------------------------------------------------- run
+    def run(self, progress: Optional[Callable] = None):
+        for tick in range(self.cfg.ticks):
+            while self.queue and self.queue[0].tick <= tick:
+                msg = heapq.heappop(self.queue)
+                if msg.kind == "tx":
+                    self._deliver_tx(msg, tick)
+                elif msg.kind == "receipt" and msg.dest not in self.dead:
+                    self.nodes[msg.dest].attach_receipt(msg.tx)
+            for name, node in self.nodes.items():
+                if name in self.dead:
+                    continue
+                self.next_train[name] -= 1
+                if self.next_train[name] <= 0:
+                    self._broadcast_tx(node, tick)
+                    self._maybe_block(node, tick)
+                    base = self.rand.randint(*self.cfg.train_interval)
+                    self.next_train[name] = base * self.straggler_factor.get(name, 1)
+            if tick % self.cfg.record_every == 0:
+                for name, node in self.nodes.items():
+                    if name not in self.dead:
+                        node.record(tick, float(self.test_fn(node.params)))
+                if progress:
+                    progress(tick, self)
+        return self
+
+
+def fully_connected(names: Sequence[str]) -> Dict[str, List[str]]:
+    return {a: [b for b in names if b != a] for a in names}
+
+
+def ring(names: Sequence[str]) -> Dict[str, List[str]]:
+    n = len(names)
+    return {names[i]: [names[(i - 1) % n], names[(i + 1) % n]] for i in range(n)}
+
+
+def mean_reputation(nodes: Sequence[DFLNode], target_address: str) -> float:
+    """A node's reputation averaged over all other nodes' local views
+    (paper Fig 15/17 metric)."""
+    vals = [n.reputation.get(target_address) for n in nodes
+            if n.reputation.get(target_address) is not None]
+    return sum(vals) / len(vals) if vals else 1.0

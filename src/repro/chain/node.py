@@ -1,0 +1,194 @@
+"""A DFL node: the transaction/receipt/block/confirmation workflow of
+Figs 1-4, plus the FedAvg buffer and local reputation table (§IV-D).
+
+ML specifics are injected as callbacks so the same node drives LeNet (paper
+reproduction) or any LM from the zoo:
+
+    train_fn(params, rng)            -> (params, train_metrics)
+    eval_fn(params)                  -> accuracy on THIS node's data (receipts)
+    params are arbitrary pytrees; averaging uses repro.core.fedavg (Eq. 2/3,
+    optionally the wfedavg Pallas kernel via use_kernel=True).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.chain import crypto
+from repro.chain.ledger import Ledger
+from repro.chain.types import (Block, BlockConfirmation, NodeInformation,
+                               Receipt, Transaction)
+from repro.core import fedavg
+from repro.core.reputation import ReputationImpl
+
+
+@dataclasses.dataclass
+class BufferedModel:
+    sender: str
+    params: object
+    accuracy: float
+    tx_digest: str
+
+
+class DFLNode:
+    def __init__(self, *, name: str, model_structure: str, params,
+                 train_fn: Callable, eval_fn: Callable,
+                 rep_impl: ReputationImpl, ttl: int = 2,
+                 tx_per_block: int = 4, expire_after: float = 50.0,
+                 malicious: bool = False, rng: Optional[jax.Array] = None,
+                 use_kernel: bool = False):
+        self.name = name
+        self.kp = crypto.generate_keypair()
+        self.info = NodeInformation.from_keypair(self.kp)
+        self.ledger = Ledger(model_structure, self.info, self.kp)
+        self.params = params
+        self.train_fn = train_fn
+        self.eval_fn = eval_fn
+        self.rep_impl = rep_impl
+        self.ttl = ttl
+        self.tx_per_block = tx_per_block
+        self.expire_after = expire_after
+        self.malicious = malicious
+        self.rng = rng if rng is not None else jax.random.PRNGKey(0)
+        self.use_kernel = use_kernel
+
+        self.reputation: Dict[str, float] = {}   # address -> [0,1], local only
+        self.buffer: List[BufferedModel] = []
+        self.pending_tx: List[Transaction] = []  # receipts gathered, await block
+        self.seen_tx: set[str] = set()
+        # histories for the paper's figures
+        self.accuracy_history: List[tuple] = []
+        self.reputation_history: List[tuple] = []
+
+    # ------------------------------------------------------------ local train
+    def train_local(self, now: float):
+        self.rng, sub = jax.random.split(self.rng)
+        if self.malicious:
+            # model poisoning (§VI-E): broadcast an arbitrary random model
+            leaves, treedef = jax.tree.flatten(self.params)
+            keys = jax.random.split(sub, len(leaves))
+            bad = [jax.random.normal(k, l.shape, l.dtype) if jnp.issubdtype(l.dtype, jnp.floating) else l
+                   for k, l in zip(keys, leaves)]
+            poisoned = jax.tree.unflatten(treedef, bad)
+            return poisoned, {}
+        self.params, metrics = self.train_fn(self.params, sub)
+        return self.params, metrics
+
+    # ---------------------------------------------------- transactions (Fig 1)
+    def create_transaction(self, model_params, now: float) -> Transaction:
+        tx = Transaction(
+            generator=self.info,
+            create_time=now,
+            expire_time=now + self.expire_after,
+            ml_model=crypto.fingerprint_tree(model_params),
+            ttl=self.ttl,
+        ).seal(self.kp)
+        self.seen_tx.add(tx.d)
+        return tx
+
+    def receive_transaction(self, tx: Transaction, model_params, now: float):
+        """Verify, measure accuracy (the receipt), buffer the model, decide
+        forwarding. Returns (receipt | None, forward: bool)."""
+        if tx.d in self.seen_tx:
+            return None, False              # duplicate (§IV-A2)
+        self.seen_tx.add(tx.d)
+        if not tx.verify(now=now):
+            return None, False              # invalid/expired
+        acc = float(self.eval_fn(model_params))
+        receipt = Receipt(
+            creator=self.info,
+            transaction_digest=tx.d,
+            received_at_ttl=tx.next_received_at_ttl(),  # Eq. (1)
+            accuracy=acc,
+            create_time=now,
+        ).seal(self.kp)
+        tx.receipts.append(receipt)
+        sender = tx.generator.address
+        self.reputation.setdefault(sender, self.rep_impl.initial)
+        self.buffer.append(BufferedModel(sender, model_params, acc, tx.d))
+        forward = receipt.received_at_ttl > 0
+        return receipt, forward
+
+    # -------------------------------------------------- weighted FedAvg (Eq 3)
+    def maybe_update_model(self, now: float) -> bool:
+        if len(self.buffer) < self.rep_impl.buffer_size:
+            return False
+        buf = self.buffer[: self.rep_impl.buffer_size]
+        self.buffer = self.buffer[self.rep_impl.buffer_size:]
+        reps = jnp.asarray([self.reputation.get(b.sender, self.rep_impl.initial)
+                            for b in buf], jnp.float32)
+        accs = jnp.asarray([b.accuracy for b in buf], jnp.float32)
+        weights = fedavg.model_weights(reps, accs)          # Eq. 2
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *[b.params for b in buf])
+        if self.use_kernel:
+            from repro.kernels.wfedavg import ops as wf_ops
+            self.params = wf_ops.weighted_fedavg_tree(stacked, weights, self.params)
+        else:
+            self.params = fedavg.weighted_fedavg(stacked, weights, self.params)  # Eq. 3
+
+        # reputation: punish the lowest-accuracy sender(s) (§IV-D1)
+        worst = float(jnp.min(accs))
+        for b in buf:
+            if b.accuracy <= worst + 1e-9:
+                cur = self.reputation.get(b.sender, self.rep_impl.initial)
+                self.reputation[b.sender] = max(
+                    self.rep_impl.floor, cur - self.rep_impl.penalty)
+        return True
+
+    def attach_receipt(self, receipt: Receipt) -> bool:
+        """Generator side of Fig 1: collect receipts flowing back for my own
+        pending transactions (used later for block confirmations)."""
+        if not receipt.verify():
+            return False
+        for tx in self.pending_tx:
+            if tx.d == receipt.transaction_digest:
+                if all(r.d != receipt.d for r in tx.receipts):
+                    tx.receipts.append(receipt)
+                return True
+        return False
+
+    # ---------------------------------------------------------- blocks (Fig 2)
+    def stash_for_block(self, tx: Transaction):
+        self.pending_tx.append(tx)
+
+    def ready_for_block(self) -> bool:
+        # the paper: gather transactions AND their receipts before drafting —
+        # receiptless transactions cannot be witnessed (confirmed) yet
+        return sum(1 for t in self.pending_tx if t.receipts) >= self.tx_per_block
+
+    def draft_block(self, now: float) -> Block:
+        with_receipts = [t for t in self.pending_tx if t.receipts]
+        txs = with_receipts[: self.tx_per_block]
+        chosen = {t.d for t in txs}
+        self.pending_tx = [t for t in self.pending_tx if t.d not in chosen]
+        return self.ledger.new_draft([t.copy() for t in txs], now)
+
+    def confirm_block(self, draft: Block) -> List[BlockConfirmation]:
+        """Neighbor side of Fig 2: confirm every receipt I created."""
+        out = []
+        for t in draft.transactions:
+            for r in t.receipts:
+                if r.creator.address == self.info.address and r.verify():
+                    out.append(BlockConfirmation(
+                        creator=self.info,
+                        transaction_digest=t.d,
+                        receipt_digest=r.d,
+                        block_digest=draft.d,
+                    ).seal(self.kp))
+        return out
+
+    def finalize_block(self, draft: Block,
+                       confirmations: List[BlockConfirmation],
+                       min_confirmations_per_tx: int = 1) -> bool:
+        draft.confirmations = confirmations
+        draft.finalize()
+        return self.ledger.append(draft, min_confirmations_per_tx)
+
+    # ---------------------------------------------------------------- metrics
+    def record(self, now: float, test_accuracy: float):
+        self.accuracy_history.append((now, test_accuracy))
+        if self.reputation:
+            self.reputation_history.append((now, dict(self.reputation)))

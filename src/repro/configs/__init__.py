@@ -1,0 +1,72 @@
+"""Config registry: ``get_config(arch_id)`` + the assigned shape table."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (  # noqa: F401
+    ArchConfig,
+    InputShape,
+    MoEConfig,
+    SHAPES,
+    cell_status,
+)
+
+# arch-id -> module path (one module per assigned architecture).
+_REGISTRY = {
+    "recurrentgemma-2b": "repro.configs.recurrentgemma_2b",
+    "chatglm3-6b": "repro.configs.chatglm3_6b",
+    "command-r-35b": "repro.configs.command_r_35b",
+    "gemma3-12b": "repro.configs.gemma3_12b",
+    "llama3-8b": "repro.configs.llama3_8b",
+    "llava-next-mistral-7b": "repro.configs.llava_next_mistral_7b",
+    "hubert-xlarge": "repro.configs.hubert_xlarge",
+    "llama4-maverick-400b-a17b": "repro.configs.llama4_maverick_400b",
+    "dbrx-132b": "repro.configs.dbrx_132b",
+    "xlstm-125m": "repro.configs.xlstm_125m",
+}
+
+ARCH_IDS = tuple(_REGISTRY)
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    if arch_id not in _REGISTRY:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_REGISTRY)}")
+    return importlib.import_module(_REGISTRY[arch_id]).CONFIG
+
+
+def smoke_config(arch_id: str) -> ArchConfig:
+    """A reduced same-family config for CPU smoke tests.
+
+    Keeps the layer pattern/family intact but shrinks width, depth, vocab and
+    expert count so one train step runs on a single CPU device.
+    """
+    cfg = get_config(arch_id)
+    pat = len(cfg.block_pattern)
+    n_layers = max(pat, min(cfg.num_layers, pat * 2))
+    moe = cfg.moe
+    if moe is not None:
+        import dataclasses
+
+        # capacity_factor 4.0 => effectively dropless at smoke scale, so
+        # prefill (per-row dispatch) and decode (flat dispatch) agree exactly
+        moe = dataclasses.replace(
+            moe, num_experts=4, top_k=min(moe.top_k, 2), d_ff_expert=64,
+            capacity_factor=4.0,
+        )
+    return cfg.scaled(
+        num_layers=n_layers,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=min(cfg.num_kv_heads, 2),
+        head_dim=16,
+        d_ff=128 if cfg.d_ff else 0,
+        vocab_size=256,
+        window=min(cfg.window, 32) if cfg.window else 0,
+        num_patch_tokens=8 if cfg.frontend == "vision" else 0,
+        moe=moe,
+        fsdp=False,
+        attn_block_q=16,
+        attn_block_kv=32,
+        scan_chunk=16,
+        max_seq_len=512,
+    )

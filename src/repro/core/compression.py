@@ -1,0 +1,81 @@
+"""Gossip payload compression (beyond-paper optimization, cf. ref [13]).
+
+Block-wise symmetric int8 quantization for model tensors shipped over ICI
+during the gossip round: 4x fewer link bytes than fp32 master weights
+(2x vs bf16) at <0.4% relative error per tensor. The Pallas kernel pair in
+repro.kernels.quantize implements the same math for the TPU deployment path;
+this module is the jnp reference used inside traced gossip rounds.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256  # quantization block (elements)
+
+
+def _pad_len(n: int, b: int = BLOCK) -> int:
+    return (b - n % b) % b
+
+
+def quantize_tensor(x, block: int = BLOCK):
+    """x (any shape) -> (q int8 (nblocks, block), scales fp16 (nblocks,))."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = _pad_len(flat.size, block)
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)])
+    blocks = flat.reshape(-1, block)
+    absmax = jnp.max(jnp.abs(blocks), axis=1, keepdims=True)
+    scale = jnp.maximum(absmax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale[:, 0].astype(jnp.float16)
+
+
+def dequantize_tensor(q, scales, shape, dtype):
+    flat = (q.astype(jnp.float32) * scales.astype(jnp.float32)[:, None]).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def quantize_last_axis(x, block: int = BLOCK):
+    """Shape-preserving variant: blocks along the LAST axis only, so leading
+    (often mesh-sharded) dims keep their sharding — a flat reshape would
+    force an all-gather of every leaf before quantization (measured: it
+    silently 12x'd the gossip permute bytes)."""
+    lead = x.shape[:-1]
+    last = x.shape[-1] if x.ndim else 1
+    b = min(block, max(last, 1))
+    pad = (-last) % b
+    xf = x.astype(jnp.float32).reshape(*lead, last)
+    if pad:
+        xf = jnp.pad(xf, [(0, 0)] * len(lead) + [(0, pad)])
+    blocks = xf.reshape(*lead, (last + pad) // b, b)
+    absmax = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale[..., 0].astype(jnp.float16)
+
+
+def dequantize_last_axis(q, scales, shape, dtype):
+    x = q.astype(jnp.float32) * scales.astype(jnp.float32)[..., None]
+    last = shape[-1] if len(shape) else 1
+    x = x.reshape(*shape[:-1], -1)[..., :last]
+    return x.reshape(shape).astype(dtype)
+
+
+def quantize_tree(tree, block: int = BLOCK):
+    """Pytree -> (pytree of (q, scales), static (shape, dtype) spec tree)."""
+    spec = jax.tree.map(lambda x: (x.shape, x.dtype), tree)
+    qt = jax.tree.map(lambda x: quantize_last_axis(x, block), tree)
+    return qt, spec
+
+
+def dequantize_tree(qt, spec):
+    return jax.tree.map(
+        lambda qs, sp: dequantize_last_axis(qs[0], qs[1], sp[0], sp[1]),
+        qt, spec,
+        is_leaf=lambda x: (isinstance(x, tuple) and len(x) == 2
+                           and hasattr(x[0], "dtype")),
+    )

@@ -1,0 +1,148 @@
+"""DFL federation driver: state layout, eval (receipt) functions, and the
+dry-run lowering of the gossip round.
+
+Federation layout on a mesh (DESIGN.md §5):
+* multi-pod (pod, data, model): fed axis = "pod" — each pod is one DFL node
+  holding a full (internally sharded) replica; cross-pod traffic is ONLY the
+  ttl-bounded gossip, every H local steps.
+* single-pod (data, model): fed axis = "data" — 16 DFL nodes, each a 16-chip
+  tensor-parallel replica. FSDP is disabled in this mode (the data axis now
+  carries federation replicas, not ZeRO shards) and activation batch rules
+  stop referencing the fed axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import sharding as sh
+from repro.configs.base import ArchConfig, InputShape
+from repro.core import gossip as gossip_lib
+from repro.core import reputation as rep_lib
+from repro.models import transformer
+from repro.train import step as step_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class DFLConfig:
+    ttl: int = 1
+    local_steps: int = 4          # H: optimizer steps between gossip rounds
+    reputation: str = "impl2"
+    compress: Optional[str] = None  # None | "int8"
+    val_rows: int = 4             # validation microbatch rows per node
+    val_seq: int = 1024           # validation sequence length (LM receipts)
+
+
+def fed_axis_for(mesh) -> str:
+    return "pod" if "pod" in mesh.axis_names else (
+        "fed" if "fed" in mesh.axis_names else "data")
+
+
+def gossip_rules(cfg: ArchConfig, fed_axis: str) -> dict:
+    """Sharding rules inside the gossip/eval region: never reference the fed
+    axis (it is manual there), no FSDP when the data axis is the fed axis."""
+    rules = sh.make_rules(fsdp=cfg.fsdp and fed_axis != "data")
+    if fed_axis == "data":
+        rules[sh.BATCH] = ()
+    else:
+        rules[sh.BATCH] = (("data",),)
+    rules[sh.FED] = ((fed_axis,),)
+    return rules
+
+
+def make_lm_eval_fn(cfg: ArchConfig):
+    """Receipt accuracy: token-level top-1 on the receiver's microbatch."""
+
+    def eval_fn(params, val_batch):
+        _, metrics = transformer.train_loss(params, cfg, val_batch)
+        return metrics["accuracy"]
+
+    return eval_fn
+
+
+def val_batch_specs(cfg: ArchConfig, dfl: DFLConfig, fed_size: int):
+    b, s = dfl.val_rows, dfl.val_seq
+    if cfg.frontend == "audio":
+        return {
+            "frame_embeds": jax.ShapeDtypeStruct((fed_size, b, s, cfg.d_model), jnp.bfloat16),
+            "labels": jax.ShapeDtypeStruct((fed_size, b, s), jnp.int32),
+            "loss_mask": jax.ShapeDtypeStruct((fed_size, b, s), jnp.float32),
+        }
+    out = {
+        "tokens": jax.ShapeDtypeStruct((fed_size, b, s), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((fed_size, b, s), jnp.int32),
+    }
+    if cfg.frontend == "vision":
+        out["patch_embeds"] = jax.ShapeDtypeStruct(
+            (fed_size, b, cfg.num_patch_tokens, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def _prepend_fed(axes_tree):
+    return jax.tree.map(
+        lambda a: (sh.FED, *a), axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            y is None or isinstance(y, str) for y in x))
+
+
+def abstract_fed_params(cfg: ArchConfig, fed_size: int):
+    params, axes = step_lib.abstract_params(cfg)
+    fed_params = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((fed_size, *s.shape), s.dtype), params)
+    return fed_params, _prepend_fed(axes)
+
+
+def init_federation(cfg: ArchConfig, fed_size: int, key, opt=None):
+    """Concrete federation state (tests / paper-scale runs): per-node params
+    (different init seeds), optimizer state, reputation rows, step counter."""
+    opt = opt or step_lib.make_optimizer(cfg)
+    keys = jax.random.split(key, fed_size)
+
+    def one(k):
+        params, _ = transformer.init(k, cfg)
+        return {"params": params, "opt": opt.init(params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    states = [one(k) for k in keys]
+    fed_state = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+    rep_rows = jnp.ones((fed_size, fed_size), jnp.float32)
+    return fed_state, rep_rows
+
+
+def lower_gossip_round(cfg: ArchConfig, shape: InputShape, mesh, rules,
+                       dfl: Optional[DFLConfig] = None):
+    """Dry-run entry: lower ONE gossip round (the paper's technique) for this
+    arch on this mesh. Called by dryrun.py --dfl."""
+    if shape.kind != "train":
+        raise ValueError("the DFL gossip round applies to training shapes")
+    dfl = dfl or DFLConfig()
+    fed_axis = fed_axis_for(mesh)
+    fed_size = mesh.shape[fed_axis]
+    grules = gossip_rules(cfg, fed_axis)
+    rep_impl = rep_lib.get(dfl.reputation)
+
+    fed_params, fed_axes = abstract_fed_params(cfg, fed_size)
+    rep_rows = jax.ShapeDtypeStruct((fed_size, fed_size), jnp.float32)
+    vb = val_batch_specs(cfg, dfl, fed_size)
+
+    p_sh = sh.tree_shardings(fed_axes, mesh, grules, fed_params)
+    r_sh = NamedSharding(mesh, P(fed_axis))
+    vb_axes = {k: (sh.FED, sh.BATCH, *([None] * (len(v.shape) - 2)))
+               for k, v in vb.items()}
+    vb_sh = sh.tree_shardings(vb_axes, mesh, grules, vb)
+
+    round_fn = gossip_lib.make_gossip_round(
+        make_lm_eval_fn(cfg), fed_axis=fed_axis, fed_size=fed_size,
+        ttl=dfl.ttl, rep_impl=rep_impl, compress=dfl.compress, mesh=mesh)
+
+    with sh.activation_sharding(mesh, grules):
+        lowered = jax.jit(
+            round_fn,
+            in_shardings=(p_sh, r_sh, vb_sh),
+            donate_argnums=(0,),
+        ).lower(fed_params, rep_rows, vb)
+    return lowered

@@ -1,0 +1,69 @@
+"""Reputation-weighted federated averaging — the paper's Eq. 2 and Eq. 3.
+
+    weight_n     = reputation_n * accuracy_n                      (Eq. 2)
+    model_out    = (sum_n weight_n / weight_T * model_n + model_prev) / 2   (Eq. 3)
+
+Two equivalent forms:
+* ``weighted_fedavg``      — stacked models (N, ...) pytree; used by the
+  paper-scale simulator FedAvg buffer (and accelerated by the wfedavg Pallas
+  kernel on flat param vectors).
+* ``streaming_accumulator`` — running (sum_w_model, sum_w) pair; used inside
+  the pod-scale gossip round so 2*ttl neighbor models never need to be
+  stacked in memory at once.
+
+If the total weight is ~0 (every sender's reputation crushed to 0), the
+previous model is kept unchanged — the paper's buffer simply has nothing
+trustworthy in it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-12
+
+
+def model_weights(reputation, accuracy):
+    """Eq. 2. Both in [0, 1]; elementwise product."""
+    return reputation * accuracy
+
+
+def weighted_fedavg(stacked_models, weights, prev_model):
+    """Eq. 3 over stacked models (leading dim N). fp32 math."""
+    w = weights.astype(jnp.float32)
+    w_t = jnp.sum(w)
+    safe = w_t > EPS
+    wn = jnp.where(safe, w / jnp.maximum(w_t, EPS), 0.0)
+
+    def leaf(ms, prev):
+        mf = ms.astype(jnp.float32)
+        avg = jnp.tensordot(wn, mf, axes=(0, 0))
+        out = 0.5 * (avg + prev.astype(jnp.float32))
+        return jnp.where(safe, out, prev.astype(jnp.float32)).astype(prev.dtype)
+
+    return jax.tree.map(leaf, stacked_models, prev_model)
+
+
+def streaming_init(model_like):
+    acc = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), model_like)
+    return acc, jnp.zeros((), jnp.float32)
+
+
+def streaming_add(acc_state, model, weight):
+    acc, w_t = acc_state
+    w = weight.astype(jnp.float32)
+    acc = jax.tree.map(lambda a, m: a + w * m.astype(jnp.float32), acc, model)
+    return acc, w_t + w
+
+
+def streaming_finish(acc_state, prev_model):
+    """Eq. 3 from the running sums."""
+    acc, w_t = acc_state
+    safe = w_t > EPS
+
+    def leaf(a, prev):
+        avg = a / jnp.maximum(w_t, EPS)
+        out = 0.5 * (avg + prev.astype(jnp.float32))
+        return jnp.where(safe, out, prev.astype(jnp.float32)).astype(prev.dtype)
+
+    return jax.tree.map(leaf, acc, prev_model)

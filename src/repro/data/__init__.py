@@ -1,0 +1,3 @@
+from repro.data.partition import dirichlet_class_probs, iid_class_probs  # noqa: F401
+from repro.data.pipeline import TokenPipeline  # noqa: F401
+from repro.data.synthetic import SyntheticMnist, SyntheticTokens  # noqa: F401

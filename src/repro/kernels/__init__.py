@@ -1,0 +1,9 @@
+"""Pallas TPU kernels (interpret-mode validated on CPU, TPU-targeted):
+
+    wfedavg/          fused reputation-weighted FedAvg (paper Eq. 3)
+    quantize/         int8 block quantize/dequantize (gossip payloads)
+    flash_attention/  online-softmax attention forward (causal + window)
+
+Each kernel ships <name>.py (pl.pallas_call + BlockSpec tiling), ops.py
+(jit'd public wrapper) and ref.py (pure-jnp oracle used by tests).
+"""

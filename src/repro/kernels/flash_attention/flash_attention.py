@@ -1,0 +1,114 @@
+"""Pallas TPU flash-attention forward kernel (causal / sliding-window).
+
+Grid (batch*heads, nq, nk): the kv axis is the minor-most ("arbitrary")
+dimension, so the fp32 (m, l, acc) VMEM scratch persists across kv steps of
+one q block — the online-softmax accumulation never leaves VMEM, and HBM
+traffic is O(S*Dh) per head (q/k/v tiles once, out once).
+
+Block shapes: q (bq, Dh), k/v (bkv, Dh) — Dh padded to a lane multiple by
+ops.py; bq/bkv default 512/512 (q tile + 2 kv tiles + acc in fp32 stay well
+under a v5e core's VMEM). The backward pass uses the jnp custom-VJP in
+repro.models.flash (recompute strategy); a fused bwd kernel is future work.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e38
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+            *, causal, window, bq, bkv, nk, scale):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * bq
+    k_start = kj * bkv
+    # skip fully-masked tiles (causal: kv entirely above the diagonal;
+    # window: kv entirely below the band)
+    run = jnp.asarray(True)
+    if causal:
+        run = jnp.logical_and(run, k_start <= q_start + bq - 1)
+    if window:
+        run = jnp.logical_and(run, k_start + bkv - 1 > q_start - window)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)                 # (bq, Dh)
+        k = k_ref[0].astype(jnp.float32)                 # (bkv, Dh)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+        ok = jnp.ones((bq, bkv), jnp.bool_)
+        if causal:
+            ok &= k_pos <= q_pos
+        if window:
+            ok &= k_pos > q_pos - window
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_scr[...]                              # (bq, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)                           # (bq, bkv)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1, keepdims=True)
+        v = v_ref[0].astype(jnp.float32)                 # (bkv, Dh)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * alpha + pv
+        m_scr[...] = m_new
+
+    @pl.when(kj == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-37)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "block_q", "block_kv", "interpret", "scale"))
+def flash_attention_fwd(q, k, v, *, causal=True, window=0,
+                        block_q=512, block_kv=512, interpret=False,
+                        scale=None):
+    """q (BH, Sq, Dh); k/v (BH, Skv, Dh) — batch and heads pre-folded,
+    GQA pre-expanded (ops.py handles layout). ``scale`` must be the
+    UNPADDED 1/sqrt(head_dim) when Dh was lane-padded. Returns (BH, Sq, Dh)."""
+    BH, Sq, Dh = q.shape
+    Skv = k.shape[1]
+    bq = min(block_q, Sq)
+    bkv = min(block_kv, Skv)
+    assert Sq % bq == 0 and Skv % bkv == 0
+    nq, nk = Sq // bq, Skv // bkv
+    grid = (BH, nq, nk)
+    kern = functools.partial(
+        _kernel, causal=causal, window=window, bq=bq, bkv=bkv, nk=nk,
+        scale=scale if scale is not None else Dh ** -0.5)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, Dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bkv, Dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bkv, Dh), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, Dh), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, Dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),    # running max m
+            pltpu.VMEM((bq, 1), jnp.float32),    # running denom l
+            pltpu.VMEM((bq, Dh), jnp.float32),   # output accumulator
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

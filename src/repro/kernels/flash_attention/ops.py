@@ -1,0 +1,42 @@
+"""Public API: GQA-aware wrapper around the Pallas flash-attention kernel.
+
+Folds (B, H) into the kernel's leading grid dim, expands GQA KV heads, pads
+the head dim to the 128-lane multiple, and dispatches to interpret mode on
+CPU. Layout matches repro.models.attention: q (B,S,H,Dh), k/v (B,S,KH,Dh).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_fwd
+
+LANE = 128
+
+
+def _is_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=0,
+                    block_q=512, block_kv=512):
+    B, Sq, H, Dh = q.shape
+    KH = k.shape[2]
+    G = H // KH
+    pad = (-Dh) % LANE
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, 0), (0, pad)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, 0), (0, pad)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, pad)))
+    Dp = Dh + pad
+    if G > 1:  # expand KV heads for the folded layout
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, Dp)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, -1, Dp)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, -1, Dp)
+    of = flash_attention_fwd(qf, kf, vf, causal=causal, window=window,
+                             block_q=block_q, block_kv=block_kv,
+                             interpret=_is_cpu(), scale=Dh ** -0.5)
+    o = of.reshape(B, H, Sq, Dp).transpose(0, 2, 1, 3)
+    return o[..., :Dh]

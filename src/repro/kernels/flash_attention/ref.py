@@ -1,0 +1,25 @@
+"""Oracle for the Pallas flash-attention kernel: plain masked softmax
+attention in fp32 (small shapes only — tests sweep shapes/dtypes)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True, window=0):
+    """q (B,Sq,H,Dh); k/v (B,Skv,H,Dh) — heads already expanded (no GQA fold).
+    Returns (B,Sq,H,Dh) in q.dtype."""
+    B, Sq, H, Dh = q.shape
+    Skv = k.shape[1]
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (Dh ** -0.5)
+    qp = jnp.arange(Sq)
+    kp = jnp.arange(Skv)
+    ok = jnp.ones((Sq, Skv), bool)
+    if causal:
+        ok &= kp[None, :] <= qp[:, None]
+    if window:
+        ok &= kp[None, :] > qp[:, None] - window
+    s = jnp.where(ok[None, None], s, -2.0e38)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,39 @@
+"""Public API: quantize/dequantize a flat payload with the Pallas kernels
+(interpret mode on CPU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quantize.quantize import dequantize, quantize
+
+BLOCK_COLS = 256
+
+
+def _is_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def quantize_flat(x_flat, block_cols: int = BLOCK_COLS):
+    """x (D,) -> (q (R, C) int8, scales (R, 1), orig_len)."""
+    d = x_flat.size
+    pad = (-d) % block_cols
+    if pad:
+        x_flat = jnp.pad(x_flat.astype(jnp.float32), (0, pad))
+    x2 = x_flat.reshape(-1, block_cols)
+    rows = x2.shape[0]
+    br = rows if rows < 256 else 256
+    while rows % br:
+        br //= 2
+    q, s = quantize(x2, block_rows=max(br, 1), interpret=_is_cpu())
+    return q, s, d
+
+
+def dequantize_flat(q, scales, orig_len, dtype=jnp.float32):
+    rows = q.shape[0]
+    br = rows if rows < 256 else 256
+    while rows % br:
+        br //= 2
+    x2 = dequantize(q, scales, dtype=dtype, block_rows=max(br, 1),
+                    interpret=_is_cpu())
+    return x2.reshape(-1)[:orig_len]

@@ -1,0 +1,68 @@
+"""Pallas TPU kernels: block-wise symmetric int8 quantize / dequantize.
+
+Used to compress DFL gossip payloads before the cross-pod ppermute (4x fewer
+ICI bytes than fp32). One VMEM pass per tile: rowwise absmax -> scale ->
+round/clip. Rows are the quantization blocks; C is lane-aligned (x128).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _q_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)                   # (br, C)
+    absmax = jnp.max(jnp.abs(x), axis=1, keepdims=True)  # (br, 1)
+    scale = jnp.maximum(absmax / 127.0, 1e-12)
+    q_ref[...] = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    s_ref[...] = scale.astype(s_ref.dtype)
+
+
+def _dq_kernel(q_ref, s_ref, out_ref):
+    q = q_ref[...].astype(jnp.float32)
+    s = s_ref[...].astype(jnp.float32)
+    out_ref[...] = (q * s).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def quantize(x, *, block_rows: int = 256, interpret: bool = False):
+    """x (R, C) -> (q int8 (R, C), scales fp32 (R, 1)). R % block_rows == 0."""
+    r, c = x.shape
+    assert r % block_rows == 0, (r, block_rows)
+    grid = (r // block_rows,)
+    return pl.pallas_call(
+        _q_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, c), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((block_rows, c), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, c), jnp.int8),
+            jax.ShapeDtypeStruct((r, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret", "dtype"))
+def dequantize(q, scales, *, dtype=jnp.float32, block_rows: int = 256,
+               interpret: bool = False):
+    r, c = q.shape
+    assert r % block_rows == 0, (r, block_rows)
+    grid = (r // block_rows,)
+    return pl.pallas_call(
+        _dq_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, c), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, c), dtype),
+        interpret=interpret,
+    )(q, scales)

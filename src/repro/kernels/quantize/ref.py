@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the int8 gossip-payload quantizer (= the math in
+repro.core.compression, restated on the kernel's (nblocks, block) layout)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_ref(x):
+    """x (R, C) fp -> (q int8 (R, C), scales fp32 (R, 1))."""
+    xf = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(xf), axis=1, keepdims=True)
+    scale = jnp.maximum(absmax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_ref(q, scales):
+    return q.astype(jnp.float32) * scales.astype(jnp.float32)

@@ -1,0 +1,51 @@
+"""Public API for the wfedavg kernel: tree-level weighted FedAvg.
+
+On CPU (tests, the paper-scale simulator) the kernel runs in interpret mode;
+on TPU it compiles to a fused VMEM-tiled pass. Falls back to the jnp oracle
+for tiny leaves where padding overhead dominates.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fedavg as fedavg_ref
+from repro.kernels.wfedavg.wfedavg import wfedavg_flat
+
+_BLOCK = 2048
+_MIN_KERNEL_ELEMS = 4096
+
+
+def _is_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def weighted_fedavg_tree(stacked_models, weights, prev_model,
+                         block_cols: int = _BLOCK):
+    """Eq. 3 over a pytree with stacked leading dim N (kernel-accelerated)."""
+    w = weights.astype(jnp.float32)
+    w_t = jnp.sum(w)
+    safe = w_t > fedavg_ref.EPS
+    wn = jnp.where(safe, w / jnp.maximum(w_t, fedavg_ref.EPS), 0.0)
+    interpret = _is_cpu()
+
+    def leaf(ms, prev):
+        if prev.size < _MIN_KERNEL_ELEMS or not jnp.issubdtype(prev.dtype, jnp.floating):
+            mf = ms.astype(jnp.float32)
+            avg = jnp.tensordot(wn, mf.reshape(mf.shape[0], -1), axes=(0, 0))
+            out = 0.5 * (avg.reshape(prev.shape) + prev.astype(jnp.float32))
+            return jnp.where(safe, out, prev.astype(jnp.float32)).astype(prev.dtype)
+        n = ms.shape[0]
+        d = prev.size
+        pad = (-d) % block_cols
+        flat_m = ms.reshape(n, d).astype(jnp.float32)
+        flat_p = prev.reshape(d).astype(jnp.float32)
+        if pad:
+            flat_m = jnp.pad(flat_m, ((0, 0), (0, pad)))
+            flat_p = jnp.pad(flat_p, (0, pad))
+        out = wfedavg_flat(flat_m, wn, flat_p, block_cols=block_cols,
+                           interpret=interpret)[:d].reshape(prev.shape)
+        return jnp.where(safe, out, prev.astype(jnp.float32)).astype(prev.dtype)
+
+    return jax.tree.map(leaf, stacked_models, prev_model)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the wfedavg kernel: Eq. 3 on a flat parameter block.
+
+    out = 0.5 * (sum_n wn[n] * models[n] + prev)
+
+``wn`` are pre-normalized weights (w / w_T); the tree-level wrapper in ops.py
+handles normalization and the zero-total-weight fallback.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def wfedavg_ref(models, wn, prev):
+    """models (N, R, C); wn (N,); prev (R, C) -> (R, C) in prev.dtype."""
+    acc = jnp.tensordot(wn.astype(jnp.float32), models.astype(jnp.float32),
+                        axes=(0, 0))
+    return (0.5 * (acc + prev.astype(jnp.float32))).astype(prev.dtype)

@@ -1,0 +1,49 @@
+"""Pallas TPU kernel: fused reputation-weighted FedAvg (paper Eq. 3).
+
+Bandwidth-bound stacked reduction: reads N model tiles + the previous model
+tile once from HBM, writes one output tile — a single fused pass instead of
+N separate axpy sweeps (the naive jnp lowering materializes the weighted sum
+tree). VMEM tiling: a (N, bc) model block + (1, bc) prev/out blocks per grid
+step; weights live in a tiny (N, 1) VMEM block.
+
+Lane alignment: bc is a multiple of 128 (TPU lane width); callers pad the
+flattened parameter vector (ops.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(w_ref, models_ref, prev_ref, out_ref):
+    # models_ref: (N, bc); prev_ref/out_ref: (1, bc); w_ref: (N, 1)
+    m = models_ref[...].astype(jnp.float32)          # (N, bc)
+    w = w_ref[...].astype(jnp.float32)               # (N, 1)
+    acc = jnp.sum(m * w, axis=0, keepdims=True)      # (1, bc)
+    prev = prev_ref[...].astype(jnp.float32)
+    out_ref[...] = (0.5 * (acc + prev)).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_cols", "interpret"))
+def wfedavg_flat(models, wn, prev, *, block_cols: int = 2048,
+                 interpret: bool = False):
+    """models (N, D); wn (N,); prev (D,) -> (D,). D % block_cols == 0."""
+    n, d = models.shape
+    assert d % block_cols == 0, (d, block_cols)
+    grid = (d // block_cols,)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),
+            pl.BlockSpec((n, block_cols), lambda i: (0, i)),
+            pl.BlockSpec((1, block_cols), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, block_cols), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, d), prev.dtype),
+        interpret=interpret,
+    )(wn.reshape(n, 1), models, prev.reshape(1, d))
+    return out.reshape(d)

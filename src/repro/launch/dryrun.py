@@ -1,0 +1,215 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# The two lines above MUST run before any jax-importing module: jax locks the
+# device count at first init. 512 host devices back the production meshes
+# (16x16 single pod, 2x16x16 multi-pod) without hardware.
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each runnable cell this builds the real step function (train_step /
+prefill / decode_step — the same code the launcher runs), pairs it with
+ShapeDtypeStruct inputs and NamedShardings from the logical-axis rules, then:
+
+    lowered  = jax.jit(step, in_shardings=...).lower(**specs)
+    compiled = lowered.compile()
+    print(compiled.memory_analysis())   # proves it fits
+    print(compiled.cost_analysis())     # FLOPs/bytes for the roofline
+
+Results (roofline terms, collective schedule, bytes/device) are appended to a
+JSON file consumed by EXPERIMENTS.md.
+
+Usage:
+    python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+    python -m repro.launch.dryrun --all [--multi-pod] [--dfl]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding as sh
+from repro.configs import ARCH_IDS, SHAPES, cell_status, get_config
+from repro.launch import roofline
+from repro.launch.mesh import make_production_mesh
+from repro.train import step as step_lib
+
+
+def _tree_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               dfl: bool = False, extra_rules=None, cfg_overrides=None,
+               mesh=None):
+    """Returns (record dict, lowered, compiled). ``mesh`` overrides the
+    production mesh (hillclimb experiments re-viewing the same chips)."""
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = cfg.scaled(**cfg_overrides)
+    shape = SHAPES[shape_name]
+    ok, why = cell_status(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skip",
+                "reason": why}, None, None
+
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = step_lib.rules_for(cfg, shape)
+    if extra_rules:
+        rules.update(extra_rules)
+    t0 = time.time()
+
+    with mesh, sh.activation_sharding(mesh, rules):
+        if dfl:
+            from repro.core import dfl as dfl_lib
+            lowered = dfl_lib.lower_gossip_round(cfg, shape, mesh, rules)
+        elif shape.kind == "train":
+            state, axes = step_lib.abstract_train_state(cfg)
+            batch = step_lib.input_specs(cfg, shape)
+            s_sh = step_lib.state_shardings(state, axes, mesh, rules)
+            b_sh = step_lib.batch_shardings(cfg, shape, batch, mesh, rules)
+            fn = step_lib.make_train_step(cfg)
+            lowered = jax.jit(
+                fn, in_shardings=(s_sh, b_sh), donate_argnums=(0,),
+            ).lower(state, batch)
+        elif shape.kind == "prefill":
+            params, p_axes = step_lib.abstract_params(cfg)
+            cache, c_axes = step_lib.abstract_cache(
+                cfg, shape.global_batch, shape.seq_len)
+            batch = step_lib.input_specs(cfg, shape)
+            p_sh = sh.tree_shardings(p_axes, mesh, rules, params)
+            c_sh = sh.tree_shardings(c_axes, mesh, rules, cache)
+            b_sh = step_lib.batch_shardings(cfg, shape, batch, mesh, rules)
+            fn = step_lib.make_prefill(cfg)
+            lowered = jax.jit(
+                fn, in_shardings=(p_sh, b_sh, c_sh), donate_argnums=(2,),
+            ).lower(params, batch, cache)
+        else:  # decode
+            params, p_axes = step_lib.abstract_params(cfg)
+            cache, c_axes = step_lib.abstract_cache(
+                cfg, shape.global_batch, shape.seq_len)
+            batch = step_lib.input_specs(cfg, shape)
+            p_sh = sh.tree_shardings(p_axes, mesh, rules, params)
+            c_sh = sh.tree_shardings(c_axes, mesh, rules, cache)
+            b_sh = step_lib.batch_shardings(cfg, shape, batch, mesh, rules)
+            pos = jax.ShapeDtypeStruct((), jnp.int32)
+            fn = step_lib.make_decode(cfg)
+            lowered = jax.jit(
+                fn, in_shardings=(p_sh, c_sh, b_sh["tokens"], None),
+                donate_argnums=(1,),
+            ).lower(params, cache, batch["tokens"],
+                    jax.ShapeDtypeStruct((), jnp.int32))
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    from repro.launch import hlo_cost
+    walk = hlo_cost.analyze(compiled.as_text())
+    terms = roofline.terms_from_walker(walk, cost)
+
+    # model-FLOPs ratio
+    params_struct, _ = step_lib.abstract_params(cfg)
+    total_params = sum(x.size for x in jax.tree.leaves(params_struct))
+    embed_params = params_struct["embed"]["table"].size
+    mf = roofline.model_flops(cfg, total_params, embed_params, shape)
+    chips = mesh.size
+    hlo_flops_global = terms["hlo_flops"] * chips
+
+    record = {
+        "arch": arch, "shape": shape_name, "status": "ok",
+        "mesh": "x".join(str(mesh.shape[a]) for a in mesh.axis_names),
+        "mesh_axes": list(mesh.axis_names),
+        "chips": chips,
+        "dfl": dfl,
+        "step_kind": "gossip" if dfl else shape.kind,
+        "params": int(total_params),
+        "bytes_per_device": {
+            "argument": getattr(mem, "argument_size_in_bytes", None),
+            "output": getattr(mem, "output_size_in_bytes", None),
+            "temp": getattr(mem, "temp_size_in_bytes", None),
+            "peak": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        "roofline": terms,
+        "model_flops_global": mf,
+        "useful_flops_ratio": (mf / hlo_flops_global) if hlo_flops_global else None,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+    }
+    return record, lowered, compiled
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--dfl", action="store_true",
+                    help="lower the DFL gossip round instead of the plain step")
+    ap.add_argument("--out", default="experiments/dryrun.json")
+    ap.add_argument("--print-hlo", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch/--shape or --all required")
+        cells = [(args.arch, args.shape)]
+
+    results = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["shape"], r.get("mesh"), r.get("dfl", False))
+            for r in results if r.get("status") in ("ok", "skip")}
+
+    mesh_tag = "2x16x16" if args.multi_pod else "16x16"
+    for arch, shape in cells:
+        key = (arch, shape, mesh_tag, args.dfl)
+        skip_key = (arch, shape, None, args.dfl)
+        if key in done or skip_key in done:
+            print(f"[dryrun] {arch} x {shape} ({mesh_tag}) cached, skipping")
+            continue
+        print(f"[dryrun] {arch} x {shape} mesh={mesh_tag} dfl={args.dfl} ...",
+              flush=True)
+        try:
+            rec, lowered, compiled = lower_cell(
+                arch, shape, multi_pod=args.multi_pod, dfl=args.dfl)
+            if rec["status"] == "ok":
+                print(f"  compiled in {rec['compile_s']}s; "
+                      f"flops/dev={rec['roofline']['hlo_flops']:.3e} "
+                      f"coll_bytes/dev={rec['roofline']['collective_bytes']:.3e} "
+                      f"dominant={rec['roofline']['dominant']}")
+                print(f"  memory/device: {rec['bytes_per_device']}")
+                print(f"  collectives: {rec['roofline']['collectives']}")
+                if args.print_hlo:
+                    print(compiled.as_text()[:20000])
+            else:
+                print(f"  SKIP: {rec['reason']}")
+        except Exception as e:
+            rec = {"arch": arch, "shape": shape, "mesh": mesh_tag,
+                   "dfl": args.dfl, "status": "error",
+                   "error": f"{type(e).__name__}: {e}"}
+            print(f"  ERROR: {type(e).__name__}: {e}")
+            traceback.print_exc(limit=4)
+        results.append(rec)
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1, default=str)
+    n_ok = sum(1 for r in results if r.get("status") == "ok")
+    n_skip = sum(1 for r in results if r.get("status") == "skip")
+    n_err = sum(1 for r in results if r.get("status") == "error")
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skip, {n_err} error -> {args.out}")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

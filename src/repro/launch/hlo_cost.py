@@ -1,0 +1,458 @@
+"""Trip-count-aware cost analysis over optimized HLO text.
+
+XLA's built-in ``compiled.cost_analysis()`` visits a while-loop body ONCE —
+for scan-over-layers models that undercounts FLOPs, bytes and (critically)
+per-layer collectives by the layer count. This walker parses the optimized
+HLO, resolves the static trip count of each while loop from its condition
+computation, and accumulates:
+
+* flops            — dot (2 * result * contraction), conv, reduce ops
+* bytes            — operand+result bytes of *top-level* instructions in
+                     control-flow computations (fusion internals excluded:
+                     they live in registers/VMEM, not HBM)
+* collective bytes — operand bytes per collective op kind
+
+each multiplied by the product of enclosing loop trip counts.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f32": 4, "s32": 4, "u32": 4,
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+    "token": 0, "s64v": 8,
+}
+
+COLLECTIVE_OPS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all",
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_TRIPCOUNT_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_INSTR_PREFIX = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+_OPCODE_RE = re.compile(r"\s*([\w\-]+)\(")
+_PARAM_RE = re.compile(r"([\w.\-]+):\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\]))")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_WHILE_RE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TOAPPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_WINDOW_RE = re.compile(r"window=\{size=([0-9x]+)")
+
+
+def shape_elems_bytes(type_str):
+    elems, byts = 0, 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        byts += n * _DTYPE_BYTES[dtype]
+    return elems, byts
+
+
+def shape_dims(type_str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class Instr:
+    name: str
+    rtype: str
+    opcode: str
+    line: str
+    operands: list = field(default_factory=list)
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: list = field(default_factory=list)
+    shapes: dict = field(default_factory=dict)  # value name -> type str
+    params: list = field(default_factory=list)  # param names, in order
+
+
+def _split_operands(argstr: str) -> list[str]:
+    """Split the top-level comma-separated operand list."""
+    out, depth, cur = [], 0, []
+    for ch in argstr:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur).strip())
+    return [o for o in out if o]
+
+
+def _balanced_span(s: str, start: int) -> int:
+    """Index just past the paren group opening at s[start] (== '(')."""
+    depth = 0
+    for j in range(start, len(s)):
+        if s[j] == "(":
+            depth += 1
+        elif s[j] == ")":
+            depth -= 1
+            if depth == 0:
+                return j + 1
+    return len(s)
+
+
+def parse_instr(line: str):
+    """-> Instr | None. Handles tuple result types with nested parens and
+    /*index=N*/ comments (which defeat naive regexes)."""
+    m = _INSTR_PREFIX.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    i = m.end()
+    if i >= len(line):
+        return None
+    if line[i] == "(":  # tuple result type
+        j = _balanced_span(line, i)
+        rtype = line[i:j]
+    else:
+        j = line.find(" ", i)
+        if j < 0:
+            return None
+        rtype = line[i:j]
+    mo = _OPCODE_RE.match(line, j)
+    if not mo:
+        return None
+    opcode = mo.group(1)
+    oi = mo.end() - 1  # position of '('
+    oj = _balanced_span(line, oi)
+    args = line[oi + 1: oj - 1]
+    return Instr(name, rtype, opcode, line.strip(), _split_operands(args))
+
+
+def parse_module(text: str) -> tuple[dict, str]:
+    """-> ({name: Computation}, entry_name)."""
+    comps: dict[str, Computation] = {}
+    entry = None
+    cur: Computation | None = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            if line.lstrip().startswith(("%", "ENTRY")) and line.endswith("{"):
+                stripped = line.strip()
+                m = _COMP_HDR.match(stripped)
+                if m:
+                    cur = Computation(m.group(1))
+                    if stripped.startswith("ENTRY"):
+                        entry = cur.name
+                    # balanced-paren param span (types may nest tuples)
+                    i = stripped.find("(")
+                    depth, j = 0, i
+                    for j in range(i, len(stripped)):
+                        if stripped[j] == "(":
+                            depth += 1
+                        elif stripped[j] == ")":
+                            depth -= 1
+                            if depth == 0:
+                                break
+                    for pname, ptype in _PARAM_RE.findall(stripped[i: j + 1]):
+                        cur.shapes[pname] = ptype
+                        cur.params.append(pname)
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        ins = parse_instr(line)
+        if ins is not None:
+            cur.instrs.append(ins)
+            cur.shapes[ins.name] = ins.rtype
+    return comps, entry
+
+
+def _operand_type(comp: Computation, operand: str):
+    parts = operand.split()
+    if len(parts) > 1 and "[" in parts[0]:
+        return " ".join(parts[:-1])
+    ref = parts[-1].lstrip("%") if parts else ""
+    return comp.shapes.get(ref)
+
+
+def _trip_count(comps: dict, cond_name: str) -> int:
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1
+    best = None
+    for ins in cond.instrs:
+        for mm in _CONST_RE.finditer(ins.line):
+            v = int(mm.group(1))
+            best = v if best is None else max(best, v)
+    return best if best else 1
+
+
+@dataclass
+class CostResult:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: dict = field(default_factory=dict)
+    collective_count: dict = field(default_factory=dict)
+    while_trips: list = field(default_factory=list)
+    contributors: list = field(default_factory=list)  # (bytes, flops, instr) when debug
+
+    @property
+    def total_collective_bytes(self):
+        return sum(self.collective_bytes.values())
+
+
+_SKIP_BYTES_OPS = {
+    "tuple", "get-tuple-element", "parameter", "constant", "bitcast",
+    "after-all", "partition-id", "replica-id",
+}
+
+
+def _instr_flops(comp: Computation, ins: Instr) -> float:
+    if ins.opcode == "dot":
+        res_elems, _ = shape_elems_bytes(ins.rtype)
+        lhs_t = _operand_type(comp, ins.operands[0]) if ins.operands else None
+        m = _CONTRACT_RE.search(ins.line)
+        contract = 1
+        if lhs_t and m:
+            dims = shape_dims(lhs_t)
+            for idx in (int(x) for x in m.group(1).split(",") if x):
+                if idx < len(dims):
+                    contract *= dims[idx]
+        return 2.0 * res_elems * contract
+    if ins.opcode == "convolution":
+        res_elems, _ = shape_elems_bytes(ins.rtype)
+        win = _WINDOW_RE.search(ins.line)
+        wsize = 1
+        if win:
+            for d in win.group(1).split("x"):
+                wsize *= int(d)
+        in_t = _operand_type(comp, ins.operands[0]) if ins.operands else None
+        in_ch = shape_dims(in_t)[-1] if in_t else 1
+        return 2.0 * res_elems * wsize * in_ch
+    if ins.opcode in ("reduce", "reduce-window"):
+        elems = 0
+        for op in ins.operands[: max(1, len(ins.operands) // 2)]:
+            t = _operand_type(comp, op)
+            if t:
+                e, _ = shape_elems_bytes(t)
+                elems += e
+        return float(elems)
+    return 0.0
+
+
+_SLICE_OPS = {"dynamic-slice", "gather", "slice"}
+
+
+def _ref_name(operand: str) -> str:
+    parts = operand.split()
+    return parts[-1].lstrip("%") if parts else ""
+
+
+def _result_bytes(ins: Instr) -> float:
+    _, b = shape_elems_bytes(ins.rtype)
+    return float(b)
+
+
+def _instr_bytes(comp: Computation, ins: Instr) -> float:
+    """HBM traffic estimate for a top-level instruction.
+
+    Slicing ops read only their result-sized window, not the whole operand;
+    dynamic-update-slice writes only the update region. Counting full operand
+    bytes there overstates KV-cache updates and scan xs slicing by O(S).
+    """
+    if ins.opcode in _SKIP_BYTES_OPS:
+        return 0.0
+    if ins.opcode in _SLICE_OPS:
+        return 2.0 * _result_bytes(ins)  # read window + write result
+    if ins.opcode == "dynamic-update-slice":
+        upd_t = _operand_type(comp, ins.operands[1]) if len(ins.operands) > 1 else None
+        if upd_t:
+            _, ub = shape_elems_bytes(upd_t)
+            return 2.0 * ub
+        return _result_bytes(ins)
+    if ins.opcode == "scatter":
+        upd_t = _operand_type(comp, ins.operands[-1]) if ins.operands else None
+        if upd_t:
+            _, ub = shape_elems_bytes(upd_t)
+            return 2.0 * ub
+        return _result_bytes(ins)
+    total = _result_bytes(ins)
+    for op in ins.operands:
+        t = _operand_type(comp, op)
+        if t:
+            _, ob = shape_elems_bytes(t)
+            total += ob
+    return total
+
+
+def _fusion_bytes(comp: Computation, ins: Instr, comps: dict) -> float:
+    """Traffic of a fusion call: result + effective reads per operand.
+
+    A fusion parameter consumed *only* by slice/gather ops reads just the
+    windows (e.g. scan xs slicing, embedding lookup, KV band extraction);
+    any other use reads the full operand.
+    """
+    m = _CALLS_RE.search(ins.line)
+    fcomp = comps.get(m.group(1)) if m else None
+    total = _result_bytes(ins)
+    if fcomp is None:
+        for op in ins.operands:
+            t = _operand_type(comp, op)
+            if t:
+                _, ob = shape_elems_bytes(t)
+                total += ob
+        return total
+    # alias sets: bitcast/reshape/transpose/copy/convert of a param is still
+    # "the param" for window-read detection. XLA routes DUS bases through
+    # convert dances (bf16->f32->DUS->bf16); a real TPU pipeline simplifies
+    # those away, so we account the optimistic window-only traffic.
+    _TRANSPARENT = ("bitcast", "reshape", "transpose", "copy", "convert")
+    alias: dict[str, str] = {p: p for p in fcomp.params}
+    for fin in fcomp.instrs:
+        if fin.opcode in _TRANSPARENT and fin.operands:
+            src = _ref_name(fin.operands[0])
+            if src in alias:
+                alias[fin.name] = alias[src]
+
+    # In-place DUS at the fusion root: the write is the update window, not the
+    # whole base buffer (XLA buffer assignment shares base/result).
+    for fin in fcomp.instrs:
+        if (fin.opcode == "dynamic-update-slice"
+                and _result_bytes(fin) >= _result_bytes(ins) * 0.99
+                and len(fin.operands) > 1):
+            upd_t = _operand_type(fcomp, fin.operands[1])
+            if upd_t:
+                _, ub = shape_elems_bytes(upd_t)
+                total = total - _result_bytes(ins) + float(ub)
+            break
+
+    for idx, op in enumerate(ins.operands):
+        t = _operand_type(comp, op)
+        if not t:
+            continue
+        _, full = shape_elems_bytes(t)
+        pname = fcomp.params[idx] if idx < len(fcomp.params) else None
+        est, sliced_only = 0.0, pname is not None
+        if pname is not None:
+            for fin in fcomp.instrs:
+                if fin.opcode in _TRANSPARENT:
+                    continue  # aliases handled above
+                refs = [_ref_name(o) for o in fin.operands]
+                if not any(alias.get(r) == pname for r in refs):
+                    continue
+                if fin.opcode in _SLICE_OPS:
+                    est += _result_bytes(fin)
+                elif (fin.opcode == "dynamic-update-slice"
+                      and alias.get(refs[0]) == pname):
+                    upd_t = _operand_type(fcomp, fin.operands[1])
+                    if upd_t:
+                        _, ub = shape_elems_bytes(upd_t)
+                        est += ub
+                else:
+                    sliced_only = False
+                    break
+        total += min(full, est) if (sliced_only and est > 0) else full
+    return total
+
+
+def analyze(text: str, debug: bool = False) -> CostResult:
+    comps, entry = parse_module(text)
+    res = CostResult()
+    flops_memo: dict[str, float] = {}
+
+    def note(b, f, ins, mult):
+        if debug and (b > 0 or f > 0):
+            res.contributors.append((b, f, mult, ins.line[:180]))
+
+    def fusion_flops(name: str) -> float:
+        """Total dot/conv/reduce flops inside a fusion-called computation."""
+        if name in flops_memo:
+            return flops_memo[name]
+        comp = comps.get(name)
+        if comp is None:
+            return 0.0
+        total = 0.0
+        for ins in comp.instrs:
+            total += _instr_flops(comp, ins)
+            m = _CALLS_RE.search(ins.line)
+            if m and ins.opcode in ("fusion", "call", "map"):
+                total += fusion_flops(m.group(1))
+        flops_memo[name] = total
+        return total
+
+    def walk(name: str, mult: float):
+        comp = comps.get(name)
+        if comp is None:
+            return
+        for ins in comp.instrs:
+            if ins.opcode == "while":
+                m = _WHILE_RE.search(ins.line)
+                if m:
+                    cond, body = m.groups()
+                    tc = _TRIPCOUNT_RE.search(ins.line)
+                    trips = int(tc.group(1)) if tc else _trip_count(comps, cond)
+                    res.while_trips.append(trips)
+                    walk(body, mult * trips)
+                    walk(cond, mult * trips)
+                continue
+            if ins.opcode == "conditional":
+                m = _BRANCH_RE.search(ins.line)
+                if m:
+                    branches = [b.strip().lstrip("%") for b in m.group(1).split(",")]
+                    for b in branches:  # conservative: all branches
+                        walk(b, mult)
+                continue
+            if ins.opcode in ("call", "async-start"):
+                m = _CALLS_RE.search(ins.line)
+                if m:
+                    walk(m.group(1), mult)
+                res.bytes += mult * _instr_bytes(comp, ins)
+                continue
+            base = ins.opcode[:-6] if ins.opcode.endswith("-start") else ins.opcode
+            if base in COLLECTIVE_OPS and not ins.opcode.endswith("-done"):
+                ob = 0.0
+                for op in ins.operands:
+                    t = _operand_type(comp, op)
+                    if t:
+                        _, b = shape_elems_bytes(t)
+                        ob += b
+                if ob == 0:
+                    _, ob = shape_elems_bytes(ins.rtype)
+                res.collective_bytes[base] = res.collective_bytes.get(base, 0.0) + mult * ob
+                res.collective_count[base] = res.collective_count.get(base, 0.0) + mult
+                res.bytes += mult * _instr_bytes(comp, ins)
+                continue
+            if ins.opcode == "fusion":
+                m = _CALLS_RE.search(ins.line)
+                ff = fusion_flops(m.group(1)) if m else 0.0
+                fb = _fusion_bytes(comp, ins, comps)
+                res.flops += mult * ff
+                res.bytes += mult * fb
+                note(mult * fb, mult * ff, ins, mult)
+                continue
+            f = _instr_flops(comp, ins)
+            b = _instr_bytes(comp, ins)
+            res.flops += mult * f
+            res.bytes += mult * b
+            note(mult * b, mult * f, ins, mult)
+
+    if entry:
+        walk(entry, 1.0)
+    return res

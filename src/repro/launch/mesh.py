@@ -1,0 +1,36 @@
+"""Mesh construction. Functions only — importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before any jax import)."""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def _mk(shape, axes):
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 = 256 chips (data, model). Multi-pod: 2 pods = 512
+    chips (pod, data, model); the pod axis doubles as the DFL federation axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)
+
+
+def make_fed_mesh(num_fed: int, data: int = 1, model: int = 1):
+    """DFL federation mesh: fed axis carries one model replica per slice
+    (paper-scale runs: num_fed nodes x 1 device; pod-scale: fed=pods)."""
+    return _mk((num_fed, data, model), ("fed", "data", "model"))
+
+
+def make_test_mesh(data: int = 2, model: int = 2):
+    return _mk((data, model), ("data", "model"))
+
+
+def fed_axis_name(mesh) -> str:
+    if "fed" in mesh.axis_names:
+        return "fed"
+    if "pod" in mesh.axis_names:
+        return "pod"
+    return "data"

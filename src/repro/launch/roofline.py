@@ -1,0 +1,160 @@
+"""Roofline analysis from compiled dry-run artifacts (no hardware needed).
+
+Terms (per chip, TPU v5e constants):
+    compute    = HLO_FLOPs / peak_FLOPs            [cost_analysis]
+    memory     = HLO_bytes / HBM_bw                [cost_analysis]
+    collective = collective_operand_bytes / ICI_bw [parsed from optimized HLO]
+
+``cost_analysis()`` on an SPMD-partitioned module reports *per-device*
+numbers, so no further division by chip count is applied. Collective bytes
+sum the operand sizes of all-reduce / all-gather / reduce-scatter /
+all-to-all / collective-permute ops in the post-optimization HLO (falling
+back to the output size when an operand's shape is not resolvable).
+ICI is modeled as one 50 GB/s link per hop (v5e has 4 links/chip — we report
+the conservative single-link figure and note it).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+V5E = {
+    "peak_flops": 197e12,   # bf16 FLOP/s per chip
+    "hbm_bw": 819e9,        # B/s per chip
+    "ici_bw": 50e9,         # B/s per link
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f32": 4, "s32": 4, "u32": 4,
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+}
+
+COLLECTIVE_OPS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"        # result name
+    r"((?:\([^=]*?\))|(?:[a-z0-9]+\[[^\]]*\]\S*))\s+"  # result type
+    r"([\w\-]+)\(([^)]*)\)",                        # opcode + operands
+)
+
+
+def shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string (handles tuples)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_op: dict = field(default_factory=dict)
+    count_by_op: dict = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_op.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_op.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum operand bytes of every collective in post-optimization HLO."""
+    shapes: dict[str, str] = {}
+    instrs = []
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rtype, opcode, args = m.groups()
+        shapes[name] = rtype
+        instrs.append((name, rtype, opcode, args))
+
+    stats = CollectiveStats()
+    for name, rtype, opcode, args in instrs:
+        base = opcode[:-6] if opcode.endswith("-start") else opcode
+        if base not in COLLECTIVE_OPS or opcode.endswith("-done"):
+            continue
+        operand_bytes = 0
+        for arg in args.split(","):
+            arg = arg.strip().lstrip("%")
+            # operands may carry inline types: "bf16[8,128]{1,0} %name"
+            parts = arg.split()
+            ref = parts[-1].lstrip("%") if parts else ""
+            if len(parts) > 1:
+                operand_bytes += shape_bytes(" ".join(parts[:-1]))
+            elif ref in shapes:
+                operand_bytes += shape_bytes(shapes[ref])
+        if operand_bytes == 0:
+            operand_bytes = shape_bytes(rtype)
+        stats.bytes_by_op[base] = stats.bytes_by_op.get(base, 0) + operand_bytes
+        stats.count_by_op[base] = stats.count_by_op.get(base, 0) + 1
+    return stats
+
+
+def terms_from_walker(walk, raw_cost: dict, hw: dict = V5E) -> dict:
+    """Roofline terms from the trip-count-aware HLO walker (repro.launch.
+    hlo_cost); raw ``cost_analysis()`` numbers kept for cross-reference
+    (XLA's builtin counts while bodies once — see hlo_cost docstring)."""
+    flops = float(walk.flops)
+    byts = float(walk.bytes)
+    t = {
+        "compute_s": flops / hw["peak_flops"],
+        "memory_s": byts / hw["hbm_bw"],
+        "collective_s": walk.total_collective_bytes / hw["ici_bw"],
+        "hlo_flops": flops,
+        "hlo_bytes": byts,
+        "collective_bytes": walk.total_collective_bytes,
+        "collectives": {k: int(v) for k, v in walk.collective_count.items()},
+        "collective_bytes_by_op": dict(walk.collective_bytes),
+        "raw_cost_flops": float(raw_cost.get("flops", 0.0)),
+        "raw_cost_bytes": float(raw_cost.get("bytes accessed", 0.0)),
+        "scan_trip_counts": walk.while_trips,
+    }
+    dom = max(("compute_s", "memory_s", "collective_s"), key=lambda k: t[k])
+    t["dominant"] = dom.replace("_s", "")
+    bound = max(t["compute_s"], t["memory_s"], t["collective_s"])
+    t["roofline_fraction"] = (t["compute_s"] / bound) if bound > 0 else 0.0
+    return t
+
+
+# ------------------------------------------------------------- model FLOPs (6ND)
+def effective_param_count(cfg, total_params: int, embed_params: int,
+                          active: bool) -> int:
+    """N for the 6*N*D model-FLOPs estimate.
+
+    Excludes the input embedding table when untied (lookup, not matmul);
+    for MoE archs `active=True` keeps only top_k (+ shared) experts' FFN
+    params per MoE layer.
+    """
+    n = total_params
+    if not cfg.tie_embeddings:
+        n -= embed_params  # input table: gather only
+    if active and cfg.moe is not None:
+        m = cfg.moe
+        n_moe_layers = sum(1 for i in range(cfg.num_layers) if cfg.layer_is_moe(i))
+        expert_params = 3 * cfg.d_model * m.d_ff_expert * m.num_experts
+        inactive_frac = (m.num_experts - m.top_k) / m.num_experts
+        n -= int(n_moe_layers * expert_params * inactive_frac)
+    return n
+
+
+def model_flops(cfg, total_params: int, embed_params: int, shape) -> float:
+    n = effective_param_count(cfg, total_params, embed_params, active=True)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n * tokens

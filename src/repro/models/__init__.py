@@ -1,0 +1,2 @@
+"""Model zoo: multi-architecture transformer + the paper's LeNet."""
+from repro.models import transformer, lenet  # noqa: F401

@@ -1,0 +1,255 @@
+"""Attention: GQA projections + memory-efficient blocked attention.
+
+Three execution paths, all pure jnp/lax (the Pallas flash kernel in
+repro.kernels.flash_attention shares the same math; this module is its oracle
+and the dry-run lowering path):
+
+* global causal / bidirectional: scan over query blocks, inner scan over KV
+  blocks with an online softmax (fp32 running max / denom). Causal masking is
+  applied per block — masked blocks still cost FLOPs (~2x waste on the strict
+  upper triangle; recorded in the roofline notes and a hillclimb lever).
+* sliding-window (local) attention: per query block, an exact KV *band* of
+  width ``window + block_q`` is dynamically sliced, so FLOPs are O(S * W) with
+  no masked-block waste.
+* decode: one query token against a KV cache (full or ring-buffered window).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.flash import flash_attention_padded
+
+NEG_INF = -2.0e38
+
+
+def attn_init(key, cfg):
+    d, H, KH, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    q, aq = L.dense_init(k1, d, (H, Dh), in_axis=L.EMBED, out_axes=(L.HEADS, L.HEAD_DIM), use_bias=cfg.use_bias)
+    k, ak = L.dense_init(k2, d, (KH, Dh), in_axis=L.EMBED, out_axes=(L.KV_HEADS, L.HEAD_DIM), use_bias=cfg.use_bias)
+    v, av = L.dense_init(k3, d, (KH, Dh), in_axis=L.EMBED, out_axes=(L.KV_HEADS, L.HEAD_DIM), use_bias=cfg.use_bias)
+    o, ao = L.dense_init(k4, H * Dh, (d,), in_axis=L.HEADS, out_axes=(L.EMBED,), use_bias=cfg.use_bias)
+    # reshape o to (H, Dh, d) for a 2-dim contraction
+    o = dict(o)
+    o["w"] = o["w"].reshape(H, Dh, d)
+    ao = dict(ao)
+    ao["w"] = (L.HEADS, L.HEAD_DIM, L.EMBED)
+    return ({"q": q, "k": k, "v": v, "o": o}, {"q": aq, "k": ak, "v": av, "o": ao})
+
+
+def _rotary_dim(cfg):
+    if cfg.rope == "none":
+        return 0
+    if cfg.rope == "partial":  # GLM-style 2d rope: rotate half the head dims
+        return cfg.resolved_head_dim // 2
+    return cfg.resolved_head_dim
+
+
+def _project_qkv(p, cfg, x, positions):
+    B, S, _ = x.shape
+    H, KH, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = L.dense_apply(p["q"], x)          # (B,S,H,Dh)
+    k = L.dense_apply(p["k"], x)          # (B,S,KH,Dh)
+    v = L.dense_apply(p["v"], x)
+    rd = _rotary_dim(cfg)
+    if rd:
+        q = L.apply_rope(q, positions, rotary_dim=rd, theta=cfg.rope_theta)
+        k = L.apply_rope(k, positions, rotary_dim=rd, theta=cfg.rope_theta)
+    return q, k, v
+
+
+def _mask_bias(q_pos, k_pos, *, causal, window, kv_valid=None):
+    """Additive fp32 bias (…, bq, bkv) from absolute positions."""
+    ok = jnp.ones((q_pos.shape[-1], k_pos.shape[-1]), bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window:
+        ok &= k_pos[None, :] > (q_pos[:, None] - window)
+    if kv_valid is not None:
+        ok &= kv_valid[None, :]
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _sdpa(q, k, v, bias):
+    """One-shot attention on a (small) KV span. q (B,bq,KH,G,Dh), k/v (B,bkv,KH,Dh)."""
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q, k, preferred_element_type=jnp.float32)
+    s = s * scale + bias
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhgqk,bkhd->bqhgd", p, v)
+
+
+def _blocked_global(q, k, v, *, causal, q_offset, block_q, block_kv):
+    """Scan-over-blocks attention with online softmax. q (B,Sq,KH,G,Dh)."""
+    B, Sq, KH, G, Dh = q.shape
+    Skv = k.shape[1]
+    bq = min(block_q, Sq)
+    bkv = min(block_kv, Skv)
+    assert Sq % bq == 0 and Skv % bkv == 0, (Sq, bq, Skv, bkv)
+    nq, nk = Sq // bq, Skv // bkv
+    scale = Dh ** -0.5
+    qb = q.reshape(B, nq, bq, KH, G, Dh)
+    kb = k.reshape(B, nk, bkv, KH, Dh)
+    vb = v.reshape(B, nk, bkv, KH, Dh)
+
+    def q_step(_, qi):
+        i, q_blk = qi  # q_blk (B,bq,KH,G,Dh)
+        q_pos = q_offset + i * bq + jnp.arange(bq)
+
+        def kv_step(carry, kj):
+            m, l, acc = carry
+            j, k_blk, v_blk = kj
+            k_pos = j * bkv + jnp.arange(bkv)
+            bias = _mask_bias(q_pos, k_pos, causal=causal, window=0)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk, k_blk,
+                           preferred_element_type=jnp.float32) * scale
+            s = s + bias  # (B,KH,G,bq,bkv)
+            m_new = jnp.maximum(m, s.max(-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + p.sum(-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(v_blk.dtype), v_blk)
+            acc_new = acc * alpha[..., None] + pv.astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KH, G, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KH, G, bq), jnp.float32)
+        a0 = jnp.zeros((B, KH, G, bq, Dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.arange(nk), jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0)))
+        out = acc / jnp.maximum(l[..., None], 1e-37)
+        return None, jnp.moveaxis(out, 3, 1).astype(q.dtype)  # (B,bq,KH,G,Dh)
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), jnp.moveaxis(qb, 1, 0)))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, Sq, KH, G, Dh)
+
+
+def _blocked_local(q, k, v, *, window, q_offset, block_q):
+    """Exact banded attention: per q block slice KV[band]; O(S*(W+bq)) FLOPs."""
+    B, Sq, KH, G, Dh = q.shape
+    Skv = k.shape[1]
+    bq = min(block_q, Sq)
+    assert Sq % bq == 0
+    nq = Sq // bq
+    band = min(Skv, window + bq)
+    qb = q.reshape(B, nq, bq, KH, G, Dh)
+
+    def q_step(_, qi):
+        i, q_blk = qi
+        q_start = q_offset + i * bq
+        start = jnp.clip(q_start + bq - band, 0, Skv - band)
+        k_band = jax.lax.dynamic_slice_in_dim(k, start, band, axis=1)
+        v_band = jax.lax.dynamic_slice_in_dim(v, start, band, axis=1)
+        q_pos = q_start + jnp.arange(bq)
+        k_pos = start + jnp.arange(band)
+        bias = _mask_bias(q_pos, k_pos, causal=True, window=window)
+        return None, _sdpa(q_blk, k_band, v_band, bias)
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), jnp.moveaxis(qb, 1, 0)))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, Sq, KH, G, Dh)
+
+
+def attn_apply(p, cfg, x, positions, *, kind, cache=None):
+    """Full-sequence attention (train / prefill). Returns (y, new_cache)."""
+    B, S, _ = x.shape
+    H, KH, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    G = H // KH
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    qg = q.reshape(B, S, KH, G, Dh)
+    if cfg.attn_impl == "flash":
+        causal = kind != "enc_attn"
+        window = cfg.window if kind == "local_attn" else 0
+        # triangle packing pays off when a backward pass follows (training);
+        # fwd-only prefill (cache is not None) uses the rectangular scan
+        ctx = flash_attention_padded(qg, k, v, causal, window, 0,
+                                     cfg.attn_block_q, cfg.attn_block_kv,
+                                     tri=cache is None)
+    elif kind == "local_attn":
+        ctx = _blocked_local(qg, k, v, window=cfg.window, q_offset=0,
+                             block_q=cfg.attn_block_q)
+    elif kind == "enc_attn":
+        ctx = _blocked_global(qg, k, v, causal=False, q_offset=0,
+                              block_q=cfg.attn_block_q, block_kv=cfg.attn_block_kv)
+    else:
+        ctx = _blocked_global(qg, k, v, causal=True, q_offset=0,
+                              block_q=cfg.attn_block_q, block_kv=cfg.attn_block_kv)
+    ctx = ctx.reshape(B, S, H, Dh)
+    y = jax.lax.dot_general(ctx, p["o"]["w"].astype(x.dtype),
+                            (((2, 3), (0, 1)), ((), ())))
+    if "b" in p["o"]:
+        y = y + p["o"]["b"].astype(x.dtype)
+    new_cache = None
+    if cache is not None:
+        new_cache = _prefill_cache(cache, cfg, k, v, kind, seq_len=S)
+    return y, new_cache
+
+
+# ------------------------------------------------------------------- KV caching
+def attn_cache_init(cfg, kind, batch, max_seq, dtype=jnp.bfloat16):
+    KH, Dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    length = min(max_seq, cfg.window) if kind == "local_attn" else max_seq
+    return {
+        "k": jnp.zeros((batch, length, KH, Dh), dtype),
+        "v": jnp.zeros((batch, length, KH, Dh), dtype),
+    }
+
+
+def _prefill_cache(cache, cfg, k, v, kind, seq_len):
+    """Write prefill K/V into the cache. Ring layout: slot = pos % length."""
+    length = cache["k"].shape[1]
+    if kind == "local_attn" and seq_len > length:
+        # keep the trailing `length` positions, placed at their ring slots
+        tail_k, tail_v = k[:, -length:], v[:, -length:]
+        pos = jnp.arange(seq_len - length, seq_len)
+        slots = pos % length
+        k_new = cache["k"].at[:, slots].set(tail_k.astype(cache["k"].dtype))
+        v_new = cache["v"].at[:, slots].set(tail_v.astype(cache["v"].dtype))
+    else:
+        k_new = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k[:, :length].astype(cache["k"].dtype), 0, axis=1)
+        v_new = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v[:, :length].astype(cache["v"].dtype), 0, axis=1)
+    return {"k": k_new, "v": v_new}
+
+
+def attn_decode(p, cfg, x, position, cache, *, kind):
+    """One-token decode. x (B,1,d); position scalar int32 (same for all rows —
+    batched serving with ragged positions would pass a (B,) vector; we keep the
+    benchmark-shape semantics of one shared decode index)."""
+    B = x.shape[0]
+    H, KH, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    G = H // KH
+    pos = jnp.full((B, 1), position, jnp.int32)
+    q, k, v = _project_qkv(p, cfg, x, pos)  # q (B,1,H,Dh); k/v (B,1,KH,Dh)
+    length = cache["k"].shape[1]
+    slot = position % length if kind == "local_attn" else position
+    k_new = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+    v_new = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+
+    qg = q.reshape(B, 1, KH, G, Dh)
+    if kind == "local_attn":
+        # ring buffer: slot s holds absolute position p where p % length == s
+        # and p <= position; reconstruct absolute positions for masking.
+        s_idx = jnp.arange(length)
+        cycle = (position - s_idx) // length
+        k_pos = s_idx + cycle * length  # largest pos <= position at this slot
+        kv_valid = (k_pos >= 0) & (k_pos > position - cfg.window)
+        bias = _mask_bias(jnp.full((1,), position), k_pos, causal=False,
+                          window=0, kv_valid=kv_valid)
+    else:
+        k_pos = jnp.arange(length)
+        bias = _mask_bias(jnp.full((1,), position), k_pos, causal=True, window=0)
+    ctx = _sdpa(qg, k_new, v_new, bias).reshape(B, 1, H, Dh)
+    y = jax.lax.dot_general(ctx, p["o"]["w"].astype(x.dtype),
+                            (((2, 3), (0, 1)), ((), ())))
+    if "b" in p["o"]:
+        y = y + p["o"]["b"].astype(x.dtype)
+    return y, {"k": k_new, "v": v_new}

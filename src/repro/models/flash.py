@@ -1,0 +1,408 @@
+"""Memory-efficient blocked attention with a custom VJP (flash-attention
+recompute backward), pure jnp/lax.
+
+Differentiating the naive blocked-scan attention makes JAX save per-KV-block
+probabilities — O(S^2) residual traffic that dominates the training memory
+roofline term (measured: ~60% of HBM bytes for llama3-8b train_4k). This
+implementation saves only (out, logsumexp) per row and *recomputes*
+probabilities blockwise in the backward pass: residuals drop to O(S), at the
+cost of one extra QK^T matmul per block in bwd (the classic flash trade).
+
+Supports: causal, bidirectional (encoder), and banded sliding-window causal
+attention (exact O(S*W) FLOPs via dynamic KV band slicing). GQA layout:
+q (B, Sq, KH, G, Dh); k/v (B, Skv, KH, Dh).
+
+The Pallas TPU kernel in repro.kernels.flash_attention implements the same
+forward; this function is both its oracle and the lowering used by dry-runs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def _bias(q_pos, k_pos, causal, window, kv_len=0):
+    ok = jnp.ones((q_pos.shape[-1], k_pos.shape[-1]), bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window:
+        ok &= k_pos[None, :] > (q_pos[:, None] - window)
+    if kv_len:
+        ok &= k_pos[None, :] < kv_len
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
+def flash_attention(q, k, v, causal=True, window=0, q_offset=0,
+                    block_q=512, block_kv=1024, kv_len=0, tri=True):
+    """kv_len: static real KV length when k/v are block-padded (masks padded
+    keys — required for non-causal attention; causal masks them for free).
+    tri: use the triangle-packed causal path (best for training, where it
+    halves bwd FLOPs/traffic; fwd-only callers pass False — the packed
+    output-buffer writes cost more than the masked-block waste they save)."""
+    out, _ = _fwd_impl(q, k, v, causal, window, q_offset, block_q, block_kv,
+                       kv_len, tri)
+    return out
+
+
+def flash_attention_padded(q, k, v, causal=True, window=0, q_offset=0,
+                           block_q=512, block_kv=1024, tri=True):
+    """Pads Sq/Skv up to block multiples, runs flash, slices the result.
+    Gradients flow through pad/slice; padded KV is masked via kv_len."""
+    B, Sq, KH, G, Dh = q.shape
+    Skv = k.shape[1]
+    bq = min(block_q, max(Sq, 1))
+    bkv = min(block_kv, max(Skv, 1))
+    pq = (-Sq) % bq
+    pkv = (-Skv) % bkv
+    if not pq and not pkv:
+        return flash_attention(q, k, v, causal, window, q_offset,
+                               block_q, block_kv, 0, tri)
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pkv), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pkv), (0, 0), (0, 0)))
+    out = flash_attention(qp, kp, vp, causal, window, q_offset,
+                          block_q, block_kv, Skv if pkv else 0, tri)
+    return out[:, :Sq]
+
+
+def _tri_pairs(nq: int, nkq: int):
+    """Static (i, j) kv<=q block-pair enumeration for causal attention —
+    the scan runs over exactly the nq*(nq+1)/2 unmasked pairs instead of the
+    nq*nk rectangle (strictly-masked blocks cost zero FLOPs). nkq = block
+    ratio bq // bkv >= 1 maps q-block i to kv blocks [0, (i+1)*nkq)."""
+    import numpy as np
+    i_idx, j_idx, first, last = [], [], [], []
+    for i in range(nq):
+        hi = (i + 1) * nkq
+        for j in range(hi):
+            i_idx.append(i)
+            j_idx.append(j)
+            first.append(j == 0)
+            last.append(j == hi - 1)
+    return (jnp.asarray(np.array(i_idx), jnp.int32),
+            jnp.asarray(np.array(j_idx), jnp.int32),
+            jnp.asarray(np.array(first)),
+            jnp.asarray(np.array(last)))
+
+
+def _fwd_tri(q, k, v, q_offset, block_q, block_kv, kv_len):
+    """Triangle-packed causal forward (Sq == Skv, no window)."""
+    B, Sq, KH, G, Dh = q.shape
+    Skv = k.shape[1]
+    bq = min(block_q, Sq)
+    bkv = min(block_kv, bq)  # kv block never larger than q block
+    nq, nk = Sq // bq, Skv // bkv
+    nkq = bq // bkv
+    scale = Dh ** -0.5
+    qb = jnp.moveaxis(q.reshape(B, nq, bq, KH, G, Dh), 1, 0)
+    kb = jnp.moveaxis(k.reshape(B, nk, bkv, KH, Dh), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nk, bkv, KH, Dh), 1, 0)
+    i_idx, j_idx, first, last = _tri_pairs(nq, nkq)
+
+    out0 = jnp.zeros((nq, B, bq, KH, G, Dh), q.dtype)
+    lse0 = jnp.zeros((nq, B, KH, G, bq), jnp.float32)
+    m0 = jnp.full((B, KH, G, bq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KH, G, bq), jnp.float32)
+    a0 = jnp.zeros((B, KH, G, bq, Dh), jnp.float32)
+
+    def step(carry, xs):
+        m_r, l_r, acc, outb, lseb = carry
+        i, j, is_first, is_last = xs
+        m_r = jnp.where(is_first, m0, m_r)
+        l_r = jnp.where(is_first, l0, l_r)
+        acc = jnp.where(is_first, a0, acc)
+        q_blk = jax.lax.dynamic_index_in_dim(qb, i, 0, keepdims=False)
+        k_blk = jax.lax.dynamic_index_in_dim(kb, j, 0, keepdims=False)
+        v_blk = jax.lax.dynamic_index_in_dim(vb, j, 0, keepdims=False)
+        q_pos = q_offset + i * bq + jnp.arange(bq)
+        k_pos = j * bkv + jnp.arange(bkv)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk, k_blk,
+                       preferred_element_type=jnp.float32) * scale
+        ok = k_pos[None, :] <= q_pos[:, None]
+        if kv_len:
+            ok &= (k_pos < kv_len)[None, :]
+        s = jnp.where(ok, s, NEG_INF)
+        m_new = jnp.maximum(m_r, s.max(-1))
+        alpha = jnp.exp(m_r - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l_r * alpha + p.sum(-1)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(v_blk.dtype), v_blk,
+                        preferred_element_type=jnp.float32)
+        acc = acc * alpha[..., None] + pv
+        # flush on the diagonal block
+        o = acc / jnp.maximum(l_new, 1e-37)[..., None]
+        o = jnp.moveaxis(o, 3, 1).astype(q.dtype)
+        lse = m_new + jnp.log(jnp.maximum(l_new, 1e-37))
+        cur_o = jax.lax.dynamic_index_in_dim(outb, i, 0, keepdims=False)
+        cur_l = jax.lax.dynamic_index_in_dim(lseb, i, 0, keepdims=False)
+        outb = jax.lax.dynamic_update_index_in_dim(
+            outb, jnp.where(is_last, o, cur_o), i, 0)
+        lseb = jax.lax.dynamic_update_index_in_dim(
+            lseb, jnp.where(is_last, lse, cur_l), i, 0)
+        return (m_new, l_new, acc, outb, lseb), None
+
+    (_, _, _, outb, lseb), _ = jax.lax.scan(
+        step, (m0, l0, a0, out0, lse0), (i_idx, j_idx, first, last))
+    out = jnp.moveaxis(outb, 0, 1).reshape(B, Sq, KH, G, Dh)
+    lse = jnp.moveaxis(lseb, 0, 3).reshape(B, KH, G, Sq)
+    return out, lse
+
+
+def _bwd_tri(q, k, v, out, lse, dout, q_offset, block_q, block_kv, kv_len):
+    """Triangle-packed causal backward (recompute p per pair, bf16 grads)."""
+    B, Sq, KH, G, Dh = q.shape
+    Skv = k.shape[1]
+    bq = min(block_q, Sq)
+    bkv = min(block_kv, bq)
+    nq, nk = Sq // bq, Skv // bkv
+    nkq = bq // bkv
+    scale = Dh ** -0.5
+    delta = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32), -1)
+    delta = jnp.moveaxis(delta.reshape(B, Sq, KH, G), 1, 3)
+
+    qb = jnp.moveaxis(q.reshape(B, nq, bq, KH, G, Dh), 1, 0)
+    dob = jnp.moveaxis(dout.reshape(B, nq, bq, KH, G, Dh), 1, 0)
+    kb = jnp.moveaxis(k.reshape(B, nk, bkv, KH, Dh), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nk, bkv, KH, Dh), 1, 0)
+    lseb = jnp.moveaxis(lse.reshape(B, KH, G, nq, bq), 3, 0)
+    deltab = jnp.moveaxis(delta.reshape(B, KH, G, nq, bq), 3, 0)
+    i_idx, j_idx, first, last = _tri_pairs(nq, nkq)
+
+    dq0 = jnp.zeros((nq, B, bq, KH, G, Dh), jnp.float32)
+    dk0 = jnp.zeros((nk, B, bkv, KH, Dh), jnp.float32)
+    dv0 = jnp.zeros((nk, B, bkv, KH, Dh), jnp.float32)
+    dqa0 = jnp.zeros((B, bq, KH, G, Dh), jnp.float32)
+
+    def step(carry, xs):
+        dq_acc, dqb, dkb, dvb = carry
+        i, j, is_first, is_last = xs
+        dq_acc = jnp.where(is_first, dqa0, dq_acc)
+        q_blk = jax.lax.dynamic_index_in_dim(qb, i, 0, keepdims=False)
+        do_blk = jax.lax.dynamic_index_in_dim(dob, i, 0, keepdims=False)
+        lse_blk = jax.lax.dynamic_index_in_dim(lseb, i, 0, keepdims=False)
+        delta_blk = jax.lax.dynamic_index_in_dim(deltab, i, 0, keepdims=False)
+        k_blk = jax.lax.dynamic_index_in_dim(kb, j, 0, keepdims=False)
+        v_blk = jax.lax.dynamic_index_in_dim(vb, j, 0, keepdims=False)
+        q_pos = q_offset + i * bq + jnp.arange(bq)
+        k_pos = j * bkv + jnp.arange(bkv)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk, k_blk,
+                       preferred_element_type=jnp.float32) * scale
+        ok = k_pos[None, :] <= q_pos[:, None]
+        if kv_len:
+            ok &= (k_pos < kv_len)[None, :]
+        s = jnp.where(ok, s, NEG_INF)
+        p = jnp.exp(s - lse_blk[..., None])
+        p16 = p.astype(jnp.bfloat16)
+        do16 = do_blk.astype(jnp.bfloat16)
+        dv = jnp.einsum("bhgqk,bqhgd->bkhd", p16, do16,
+                        preferred_element_type=jnp.float32)
+        dp = jnp.einsum("bqhgd,bkhd->bhgqk", do16, v_blk.astype(jnp.bfloat16),
+                        preferred_element_type=jnp.float32)
+        ds = (p * (dp - delta_blk[..., None]) * scale).astype(jnp.bfloat16)
+        dq = jnp.einsum("bhgqk,bkhd->bqhgd", ds, k_blk.astype(jnp.bfloat16),
+                        preferred_element_type=jnp.float32)
+        dk = jnp.einsum("bhgqk,bqhgd->bkhd", ds, q_blk.astype(jnp.bfloat16),
+                        preferred_element_type=jnp.float32)
+        dq_acc = dq_acc + dq
+        dkb = jax.lax.dynamic_update_index_in_dim(
+            dkb, jax.lax.dynamic_index_in_dim(dkb, j, 0, keepdims=False) + dk,
+            j, 0)
+        dvb = jax.lax.dynamic_update_index_in_dim(
+            dvb, jax.lax.dynamic_index_in_dim(dvb, j, 0, keepdims=False) + dv,
+            j, 0)
+        cur = jax.lax.dynamic_index_in_dim(dqb, i, 0, keepdims=False)
+        dqb = jax.lax.dynamic_update_index_in_dim(
+            dqb, jnp.where(is_last, dq_acc, cur), i, 0)
+        return (dq_acc, dqb, dkb, dvb), None
+
+    (_, dqb, dkb, dvb), _ = jax.lax.scan(
+        step, (dqa0, dq0, dk0, dv0), (i_idx, j_idx, first, last))
+    dq = jnp.moveaxis(dqb, 0, 1).reshape(B, Sq, KH, G, Dh).astype(q.dtype)
+    dk = jnp.moveaxis(dkb, 0, 1).reshape(B, Skv, KH, Dh).astype(k.dtype)
+    dv = jnp.moveaxis(dvb, 0, 1).reshape(B, Skv, KH, Dh).astype(v.dtype)
+    return dq, dk, dv
+
+
+def _use_tri(q, k, causal, window, q_offset, tri=True):
+    return (tri and causal and not window and q.shape[1] == k.shape[1]
+            and q_offset == 0)
+
+
+# ------------------------------------------------------------------- forward
+def _fwd_impl(q, k, v, causal, window, q_offset, block_q, block_kv,
+              kv_len=0, tri=True):
+    if _use_tri(q, k, causal, window, q_offset, tri):
+        return _fwd_tri(q, k, v, q_offset, block_q, block_kv, kv_len)
+    B, Sq, KH, G, Dh = q.shape
+    Skv = k.shape[1]
+    bq = min(block_q, Sq)
+    assert Sq % bq == 0
+    nq = Sq // bq
+    scale = Dh ** -0.5
+    qb = jnp.moveaxis(q.reshape(B, nq, bq, KH, G, Dh), 1, 0)
+
+    use_band = bool(window) and causal
+    band = min(Skv, window + bq) if use_band else None
+    bkv = min(block_kv, Skv)
+    assert Skv % bkv == 0
+    nk = Skv // bkv
+
+    def q_step(_, qi):
+        i, q_blk = qi
+        q_pos = q_offset + i * bq + jnp.arange(bq)
+        if use_band:
+            start = jnp.clip(q_offset + i * bq + bq - band, 0, Skv - band)
+            k_s = jax.lax.dynamic_slice_in_dim(k, start, band, axis=1)
+            v_s = jax.lax.dynamic_slice_in_dim(v, start, band, axis=1)
+            k_pos = start + jnp.arange(band)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk, k_s,
+                           preferred_element_type=jnp.float32) * scale
+            s = s + _bias(q_pos, k_pos, True, window, kv_len)
+            m = s.max(-1)
+            p = jnp.exp(s - m[..., None])
+            l = p.sum(-1)                                  # (B,KH,G,bq)
+            o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v_s)
+            inv_l = 1.0 / jnp.maximum(l, 1e-37)
+            o = o * jnp.moveaxis(inv_l, 3, 1)[..., None]   # (B,bq,KH,G,1)
+            lse = m + jnp.log(jnp.maximum(l, 1e-37))
+            return None, (o.astype(q.dtype), lse)
+
+        def kv_step(carry, kj):
+            m_r, l_r, acc = carry
+            j, k_blk, v_blk = kj
+            k_pos = j * bkv + jnp.arange(bkv)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk, k_blk,
+                           preferred_element_type=jnp.float32) * scale
+            s = s + _bias(q_pos, k_pos, causal, 0, kv_len)
+            m_new = jnp.maximum(m_r, s.max(-1))
+            alpha = jnp.exp(m_r - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l_r * alpha + p.sum(-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(v_blk.dtype), v_blk)
+            return (m_new, l_new, acc * alpha[..., None] + pv.astype(jnp.float32)), None
+
+        m0 = jnp.full((B, KH, G, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KH, G, bq), jnp.float32)
+        a0 = jnp.zeros((B, KH, G, bq, Dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.arange(nk), jnp.moveaxis(k.reshape(B, nk, bkv, KH, Dh), 1, 0),
+             jnp.moveaxis(v.reshape(B, nk, bkv, KH, Dh), 1, 0)))
+        o = acc / jnp.maximum(l, 1e-37)[..., None]
+        o = jnp.moveaxis(o, 3, 1).astype(q.dtype)         # (B,bq,KH,G,Dh)
+        lse = m + jnp.log(jnp.maximum(l, 1e-37))          # (B,KH,G,bq)
+        return None, (o, lse)
+
+    _, (outs, lses) = jax.lax.scan(q_step, None, (jnp.arange(nq), qb))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Sq, KH, G, Dh)
+    # lses (nq, B, KH, G, bq) -> (B, KH, G, Sq)
+    lse = jnp.moveaxis(lses, 0, 3).reshape(B, KH, G, Sq)
+    return out, lse
+
+
+def _fwd(q, k, v, causal, window, q_offset, block_q, block_kv, kv_len=0,
+         tri=True):
+    out, lse = _fwd_impl(q, k, v, causal, window, q_offset, block_q, block_kv,
+                         kv_len, tri)
+    return out, (q, k, v, out, lse)
+
+
+# ------------------------------------------------------------------ backward
+def _bwd(causal, window, q_offset, block_q, block_kv, kv_len, tri, res, dout):
+    q, k, v, out, lse = res
+    if _use_tri(q, k, causal, window, q_offset, tri):
+        return _bwd_tri(q, k, v, out, lse, dout, q_offset, block_q, block_kv,
+                        kv_len)
+    B, Sq, KH, G, Dh = q.shape
+    Skv = k.shape[1]
+    bq = min(block_q, Sq)
+    nq = Sq // bq
+    scale = Dh ** -0.5
+    use_band = bool(window) and causal
+    band = min(Skv, window + bq) if use_band else None
+    bkv = min(block_kv, Skv)
+    nk = Skv // bkv
+
+    delta = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32), -1)
+    delta = jnp.moveaxis(delta.reshape(B, Sq, KH, G), 1, 3)   # (B,KH,G,Sq)
+
+    qb = jnp.moveaxis(q.reshape(B, nq, bq, KH, G, Dh), 1, 0)
+    dob = jnp.moveaxis(dout.reshape(B, nq, bq, KH, G, Dh), 1, 0)
+    lseb = jnp.moveaxis(lse.reshape(B, KH, G, nq, bq), 3, 0)  # (nq,B,KH,G,bq)
+    deltab = jnp.moveaxis(delta.reshape(B, KH, G, nq, bq), 3, 0)
+
+    def _block_grads(q_blk, do_blk, lse_blk, delta_blk, k_s, v_s, q_pos, k_pos):
+        """Recompute p for one (q block, kv span) pair and form grads.
+
+        p/ds are cast to bf16 for the grad matmuls (fp32 accumulation via
+        preferred_element_type): halves the dominant HBM traffic of the
+        backward pass at no observed loss-curve difference (§Perf iter)."""
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk, k_s,
+                       preferred_element_type=jnp.float32) * scale
+        s = s + _bias(q_pos, k_pos, causal, window if use_band else 0, kv_len)
+        p = jnp.exp(s - lse_blk[..., None])               # (B,KH,G,bq,bkv)
+        p16 = p.astype(jnp.bfloat16)
+        do16 = do_blk.astype(jnp.bfloat16)
+        dv = jnp.einsum("bhgqk,bqhgd->bkhd", p16, do16,
+                        preferred_element_type=jnp.float32)
+        dp = jnp.einsum("bqhgd,bkhd->bhgqk", do16, v_s.astype(jnp.bfloat16),
+                        preferred_element_type=jnp.float32)
+        ds = (p * (dp - delta_blk[..., None]) * scale).astype(jnp.bfloat16)
+        dq = jnp.einsum("bhgqk,bkhd->bqhgd", ds, k_s.astype(jnp.bfloat16),
+                        preferred_element_type=jnp.float32)
+        dk = jnp.einsum("bhgqk,bqhgd->bkhd", ds, q_blk.astype(jnp.bfloat16),
+                        preferred_element_type=jnp.float32)
+        return dq, dk, dv
+
+    if use_band:
+        def q_step(carry, xs):
+            dk_acc, dv_acc = carry
+            i, q_blk, do_blk, lse_blk, delta_blk = xs
+            start = jnp.clip(q_offset + i * bq + bq - band, 0, Skv - band)
+            k_s = jax.lax.dynamic_slice_in_dim(k, start, band, axis=1)
+            v_s = jax.lax.dynamic_slice_in_dim(v, start, band, axis=1)
+            q_pos = q_offset + i * bq + jnp.arange(bq)
+            k_pos = start + jnp.arange(band)
+            dq, dk, dv = _block_grads(q_blk, do_blk, lse_blk, delta_blk,
+                                      k_s, v_s, q_pos, k_pos)
+            upd_k = jax.lax.dynamic_slice_in_dim(dk_acc, start, band, 1) + dk
+            upd_v = jax.lax.dynamic_slice_in_dim(dv_acc, start, band, 1) + dv
+            dk_acc = jax.lax.dynamic_update_slice_in_dim(dk_acc, upd_k, start, 1)
+            dv_acc = jax.lax.dynamic_update_slice_in_dim(dv_acc, upd_v, start, 1)
+            return (dk_acc, dv_acc), dq
+    else:
+        kb = jnp.moveaxis(k.reshape(B, nk, bkv, KH, Dh), 1, 0)
+        vb = jnp.moveaxis(v.reshape(B, nk, bkv, KH, Dh), 1, 0)
+
+        def q_step(carry, xs):
+            dk_acc, dv_acc = carry
+            i, q_blk, do_blk, lse_blk, delta_blk = xs
+            q_pos = q_offset + i * bq + jnp.arange(bq)
+
+            def kv_step(_, kj):
+                j, k_blk, v_blk = kj
+                k_pos = j * bkv + jnp.arange(bkv)
+                return None, _block_grads(q_blk, do_blk, lse_blk, delta_blk,
+                                          k_blk, v_blk, q_pos, k_pos)
+
+            _, (dqs, dks, dvs) = jax.lax.scan(
+                kv_step, None, (jnp.arange(nk), kb, vb))
+            dq = jnp.sum(dqs, axis=0)
+            dk_acc = dk_acc + jnp.moveaxis(dks, 0, 1).reshape(B, Skv, KH, Dh)
+            dv_acc = dv_acc + jnp.moveaxis(dvs, 0, 1).reshape(B, Skv, KH, Dh)
+            return (dk_acc, dv_acc), dq
+
+    dk0 = jnp.zeros((B, Skv, KH, Dh), jnp.float32)
+    dv0 = jnp.zeros((B, Skv, KH, Dh), jnp.float32)
+    (dk, dv), dqs = jax.lax.scan(
+        q_step, (dk0, dv0), (jnp.arange(nq), qb, dob, lseb, deltab))
+    dq = jnp.moveaxis(dqs, 0, 1).reshape(B, Sq, KH, G, Dh).astype(q.dtype)
+    return dq, dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_attention.defvjp(_fwd, _bwd)

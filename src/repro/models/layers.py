@@ -1,0 +1,156 @@
+"""Shared neural-net building blocks (pure jnp, param pytrees as dicts).
+
+Every ``init_*`` returns ``(params, axes)`` where ``axes`` mirrors the params
+pytree with a tuple of *logical axis names* per array dim. The sharding rules
+engine (repro.train.sharding) maps logical axes -> mesh axes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Logical axis vocabulary.
+EMBED = "embed"        # d_model
+FFN = "ffn"            # feed-forward hidden
+VOCAB = "vocab"
+HEADS = "heads"        # query heads
+KV_HEADS = "kv_heads"
+HEAD_DIM = "head_dim"
+EXPERTS = "experts"
+STACK = "stack"        # scanned-layer leading dim
+RNN = "rnn"            # recurrent hidden width
+CONV = "conv"          # conv kernel taps
+
+_pt = jnp.float32  # params kept fp32 (master weights); compute casts to bf16
+
+
+def truncated_normal(key, shape, scale, dtype=_pt):
+    stddev = scale / max(1.0, np.sqrt(shape[-1] if len(shape) else 1))
+    return stddev * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+def dense_init(key, in_dim, out_dims, *, in_axis, out_axes, use_bias, scale=1.0):
+    """Weight (in_dim, *out_dims) with fan-in scaled init."""
+    shape = (in_dim, *out_dims)
+    stddev = scale / np.sqrt(in_dim)
+    w = stddev * jax.random.truncated_normal(key, -2.0, 2.0, shape, _pt)
+    p = {"w": w}
+    a = {"w": (in_axis, *out_axes)}
+    if use_bias:
+        p["b"] = jnp.zeros(out_dims, _pt)
+        a["b"] = tuple(out_axes)
+    return p, a
+
+
+def dense_apply(p, x, *, contract_dims=1):
+    """x @ w (+ b). Contracts the last `contract_dims` dims of x with the
+    first `contract_dims` dims of w."""
+    w = p["w"].astype(x.dtype)
+    xd = tuple(range(x.ndim - contract_dims, x.ndim))
+    wd = tuple(range(contract_dims))
+    y = jax.lax.dot_general(x, w, ((xd, wd), ((), ())))
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+# --------------------------------------------------------------------------- norm
+def norm_init(d, kind, use_bias):
+    p = {"scale": jnp.ones((d,), _pt)}
+    a = {"scale": (EMBED,)}
+    if kind == "layernorm" and use_bias:
+        p["bias"] = jnp.zeros((d,), _pt)
+        a["bias"] = (EMBED,)
+    return p, a
+
+
+def norm_apply(p, x, kind, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps)
+    else:  # layernorm
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------- mlp
+def mlp_init(key, d_model, d_ff, use_bias):
+    """SwiGLU MLP: gate/up (d, ff) x2, down (ff, d)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    gate, a_gate = dense_init(k1, d_model, (d_ff,), in_axis=EMBED, out_axes=(FFN,), use_bias=use_bias)
+    up, a_up = dense_init(k2, d_model, (d_ff,), in_axis=EMBED, out_axes=(FFN,), use_bias=use_bias)
+    down, a_down = dense_init(k3, d_ff, (d_model,), in_axis=FFN, out_axes=(EMBED,), use_bias=use_bias)
+    return (
+        {"gate": gate, "up": up, "down": down},
+        {"gate": a_gate, "up": a_up, "down": a_down},
+    )
+
+
+def mlp_apply(p, x):
+    g = dense_apply(p["gate"], x)
+    u = dense_apply(p["up"], x)
+    h = jax.nn.silu(g) * u
+    return dense_apply(p["down"], h)
+
+
+# ---------------------------------------------------------------------- embedding
+def embed_init(key, vocab, d_model):
+    w = truncated_normal(key, (vocab, d_model), scale=1.0)
+    return {"table": w}, {"table": (VOCAB, EMBED)}
+
+
+def embed_apply(p, tokens, dtype=jnp.bfloat16):
+    return p["table"].astype(dtype)[tokens]
+
+
+def unembed_apply(p, x):
+    """Project to vocab logits in fp32 for a stable softmax/xent."""
+    w = p["table"].astype(x.dtype)
+    logits = jax.lax.dot_general(x, w, (((x.ndim - 1,), (1,)), ((), ())))
+    return logits.astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------- rope
+def rope_freqs(head_dim, rotary_dim, theta):
+    exponents = np.arange(0, rotary_dim, 2, dtype=np.float32) / rotary_dim
+    return 1.0 / (theta ** exponents)  # (rotary_dim/2,)
+
+
+def apply_rope(x, positions, *, rotary_dim, theta):
+    """x: (..., S, H, D); positions: (..., S). Rotates the first rotary_dim dims."""
+    if rotary_dim == 0:
+        return x
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, rotary_dim, theta))  # (rotary_dim/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, r/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, r/2)
+    sin = jnp.sin(angles)[..., None, :]
+    rot, rest = x[..., :rotary_dim], x[..., rotary_dim:]
+    x1, x2 = rot[..., : rotary_dim // 2], rot[..., rotary_dim // 2:]
+    out1 = x1 * cos - x2 * sin
+    out2 = x2 * cos + x1 * sin
+    out = jnp.concatenate([out1, out2], axis=-1).astype(x.dtype)
+    if rotary_dim < d:
+        out = jnp.concatenate([out, rest], axis=-1)
+    return out
+
+
+# --------------------------------------------------------------------------- loss
+def softmax_xent(logits, labels, mask=None):
+    """Token-level cross entropy; logits fp32 (..., V), labels int (...)."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll), jnp.mean((jnp.argmax(logits, -1) == labels))
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(nll * mask) / denom
+    acc = jnp.sum((jnp.argmax(logits, -1) == labels) * mask) / denom
+    return loss, acc

@@ -1,0 +1,72 @@
+"""LeNet-5 (paper §VI: MNIST experiments). Pure jnp, NHWC.
+
+conv5x5(6) -> maxpool2 -> conv5x5(16) -> maxpool2 -> fc120 -> fc84 -> fc10,
+tanh activations per the Caffe LeNet used by the paper's solver settings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init(key, cfg):
+    ks = jax.random.split(key, 5)
+    c1, c2 = cfg.conv_channels
+    f1, f2 = cfg.fc_dims
+    spatial = cfg.image_size // 4  # two 2x2 pools
+    flat = spatial * spatial * c2
+
+    def conv_w(k, kh, kw, cin, cout):
+        scale = 1.0 / jnp.sqrt(jnp.asarray(kh * kw * cin, jnp.float32))
+        return scale * jax.random.truncated_normal(k, -2, 2, (kh, kw, cin, cout), jnp.float32)
+
+    def fc_w(k, din, dout):
+        scale = 1.0 / jnp.sqrt(jnp.asarray(din, jnp.float32))
+        return scale * jax.random.truncated_normal(k, -2, 2, (din, dout), jnp.float32)
+
+    return {
+        "c1": {"w": conv_w(ks[0], 5, 5, cfg.in_channels, c1), "b": jnp.zeros((c1,))},
+        "c2": {"w": conv_w(ks[1], 5, 5, c1, c2), "b": jnp.zeros((c2,))},
+        "f1": {"w": fc_w(ks[2], flat, f1), "b": jnp.zeros((f1,))},
+        "f2": {"w": fc_w(ks[3], f1, f2), "b": jnp.zeros((f2,))},
+        "out": {"w": fc_w(ks[4], f2, cfg.num_classes), "b": jnp.zeros((cfg.num_classes,))},
+    }
+
+
+def _conv(p, x):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"]
+
+
+def _pool(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def forward(params, x):
+    """x (B, H, W, C) float in [0,1] -> logits (B, classes)."""
+    h = jnp.tanh(_conv(params["c1"], x))
+    h = _pool(h)
+    h = jnp.tanh(_conv(params["c2"], h))
+    h = _pool(h)
+    h = h.reshape(h.shape[0], -1)
+    h = jnp.tanh(h @ params["f1"]["w"] + params["f1"]["b"])
+    h = jnp.tanh(h @ params["f2"]["w"] + params["f2"]["b"])
+    return h @ params["out"]["w"] + params["out"]["b"]
+
+
+def loss_and_acc(params, batch):
+    logits = forward(params, batch["images"])
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(logz - gold)
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, acc
+
+
+def accuracy(params, images, labels):
+    logits = forward(params, images)
+    return jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))

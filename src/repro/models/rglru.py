@@ -1,0 +1,129 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Block structure (one "recurrent" temporal-mixing sublayer):
+
+    x -> [W_gate -> GeLU] ---------------------------\
+    x -> [W_x] -> causal conv1d(width 4) -> RG-LRU ->  * -> W_out
+
+RG-LRU recurrence (elementwise, diagonal):
+
+    r_t = sigmoid(W_r x_t + b_r)              recurrence gate
+    i_t = sigmoid(W_i x_t + b_i)              input gate
+    log a_t = -c * softplus(Lambda) * r_t     (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill uses ``jax.lax.associative_scan`` (log-depth, parallel over
+time — the TPU-native adaptation of the paper's CUDA linear-recurrence scan);
+decode is a single-step update carried in the cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+_C = 8.0
+_CONV_WIDTH = 4
+
+
+def rglru_init(key, cfg):
+    d = cfg.d_model
+    d_rnn = cfg.d_model  # RecurrentGemma: RNN width == d_model
+    ks = jax.random.split(key, 7)
+    gate, a_gate = L.dense_init(ks[0], d, (d_rnn,), in_axis=L.EMBED, out_axes=(L.RNN,), use_bias=False)
+    xproj, a_x = L.dense_init(ks[1], d, (d_rnn,), in_axis=L.EMBED, out_axes=(L.RNN,), use_bias=False)
+    out, a_out = L.dense_init(ks[2], d_rnn, (d,), in_axis=L.RNN, out_axes=(L.EMBED,), use_bias=False)
+    p = {
+        "gate": gate,
+        "x": xproj,
+        "out": out,
+        "conv_w": 0.01 * jax.random.normal(ks[3], (_CONV_WIDTH, d_rnn), jnp.float32),
+        "conv_b": jnp.zeros((d_rnn,), jnp.float32),
+        "w_r": 0.01 * jax.random.normal(ks[4], (d_rnn, d_rnn), jnp.float32),
+        "b_r": jnp.zeros((d_rnn,), jnp.float32),
+        "w_i": 0.01 * jax.random.normal(ks[5], (d_rnn, d_rnn), jnp.float32),
+        "b_i": jnp.zeros((d_rnn,), jnp.float32),
+        # Lambda init so that a^c = sigmoid(Lambda)^c spans ~[0.9, 0.999]
+        "lam": jax.random.uniform(ks[6], (d_rnn,), jnp.float32, 2.0, 6.0),
+    }
+    a = {
+        "gate": a_gate, "x": a_x, "out": a_out,
+        "conv_w": (L.CONV, L.RNN), "conv_b": (L.RNN,),
+        "w_r": (L.RNN, L.RNN), "b_r": (L.RNN,),
+        "w_i": (L.RNN, L.RNN), "b_i": (L.RNN,),
+        "lam": (L.RNN,),
+    }
+    return p, a
+
+
+def _causal_conv(p, u, state=None):
+    """Depthwise causal conv width 4. u (B,S,D). state (B, 3, D) prior inputs."""
+    B, S, D = u.shape
+    if state is None:
+        pad = jnp.zeros((B, _CONV_WIDTH - 1, D), u.dtype)
+    else:
+        pad = state.astype(u.dtype)
+    full = jnp.concatenate([pad, u], axis=1)  # (B, S+3, D)
+    w = p["conv_w"].astype(u.dtype)
+    y = sum(full[:, i: i + S] * w[i] for i in range(_CONV_WIDTH))
+    y = y + p["conv_b"].astype(u.dtype)
+    new_state = full[:, -(_CONV_WIDTH - 1):]
+    return y, new_state
+
+
+def _gates(p, u):
+    """r/i gates and log decay. u (..., D) -> (log_a, beta*i*u) in fp32."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ p["w_r"] + p["b_r"])
+    i = jax.nn.sigmoid(uf @ p["w_i"] + p["b_i"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r          # (..., D), <= 0
+    a2 = jnp.exp(2.0 * log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-12))
+    return log_a, beta * i * uf
+
+
+def rglru_cache_init(cfg, batch, dtype=jnp.bfloat16):
+    d_rnn = cfg.d_model
+    return {
+        "h": jnp.zeros((batch, d_rnn), jnp.float32),
+        "conv": jnp.zeros((batch, _CONV_WIDTH - 1, d_rnn), dtype),
+    }
+
+
+def rglru_apply(p, cfg, x, *, cache=None):
+    """Full-sequence apply. x (B,S,d) -> (B,S,d); returns (y, new_cache)."""
+    gate = jax.nn.gelu(L.dense_apply(p["gate"], x))
+    u = L.dense_apply(p["x"], x)
+    u, conv_state = _causal_conv(p, u, None if cache is None else cache["conv"])
+    log_a, b = _gates(p, u)                               # (B,S,D) fp32
+    h0 = None if cache is None else cache["h"]
+    if h0 is not None:
+        # fold carried state into step 0: b_0 += a_0 * h0
+        b = b.at[:, 0].add(jnp.exp(log_a[:, 0]) * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 + a2, jnp.exp(a2) * b1 + b2
+
+    log_acc, h = jax.lax.associative_scan(combine, (log_a, b), axis=1)
+    del log_acc
+    y = (gate.astype(jnp.float32) * h).astype(x.dtype)
+    y = L.dense_apply(p["out"], y)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"h": h[:, -1], "conv": conv_state.astype(cache["conv"].dtype)}
+    return y, new_cache
+
+
+def rglru_decode(p, cfg, x, cache):
+    """Single-token step. x (B,1,d)."""
+    gate = jax.nn.gelu(L.dense_apply(p["gate"], x))[:, 0]
+    u = L.dense_apply(p["x"], x)
+    u, conv_state = _causal_conv(p, u, cache["conv"])
+    log_a, b = _gates(p, u[:, 0])
+    h = jnp.exp(log_a) * cache["h"] + b
+    y = (gate.astype(jnp.float32) * h).astype(x.dtype)[:, None]
+    y = L.dense_apply(p["out"], y)
+    return y, {"h": h, "conv": conv_state.astype(cache["conv"].dtype)}

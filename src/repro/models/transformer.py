@@ -1,0 +1,402 @@
+"""The multi-architecture transformer: scan-over-units assembly.
+
+A config's layer stack is grouped into identical repeating *units*
+(``unit_len = lcm(len(block_pattern), moe.interleave)``). Units are scanned
+with stacked params (one trace of the unit body regardless of depth — the
+only way 40 dry-run cells compile in reasonable time) and optionally
+rematerialized. ``num_layers % unit_len`` trailing layers run unscanned.
+
+Entry points:
+    init(key, cfg)                      -> (params, logical_axes)
+    train_loss(params, cfg, batch)      -> (loss, metrics)
+    prefill(params, cfg, batch, cache)  -> (last_logits, cache)
+    decode_step(params, cfg, tokens, cache, position) -> (logits, cache)
+    cache_init / cache_axes             -> KV/recurrent cache pytrees
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding as sh
+from repro.configs.base import (ATTN, ENC_ATTN, LOCAL_ATTN, MLSTM, RGLRU, SLSTM)
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import rglru as rglru_lib
+from repro.models import xlstm as xlstm_lib
+
+_ATTN_KINDS = (ATTN, LOCAL_ATTN, ENC_ATTN)
+LOSS_CHUNK = 2048  # vocab-projection chunk (tokens) to bound logits memory
+
+
+def unit_len(cfg) -> int:
+    base = len(cfg.block_pattern)
+    if cfg.moe is not None:
+        base = math.lcm(base, cfg.moe.interleave)
+    return base
+
+
+def unit_layout(cfg) -> tuple[int, int, list[tuple[str, bool]]]:
+    """(n_units, n_rest, unit_entries) where entries = (kind, is_moe)."""
+    ul = unit_len(cfg)
+    kinds = cfg.layer_kinds()
+    entries = [(kinds[i], cfg.layer_is_moe(i)) for i in range(min(ul, cfg.num_layers))]
+    return cfg.num_layers // ul, cfg.num_layers % ul, entries
+
+
+# ---------------------------------------------------------------------- init
+def _layer_init(key, cfg, kind, is_moe):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p, a = {}, {}
+    p["norm1"], a["norm1"] = L.norm_init(cfg.d_model, cfg.norm, cfg.use_bias)
+    if kind in _ATTN_KINDS:
+        p["mix"], a["mix"] = attn.attn_init(k1, cfg)
+    elif kind == RGLRU:
+        p["mix"], a["mix"] = rglru_lib.rglru_init(k1, cfg)
+    elif kind == MLSTM:
+        p["mix"], a["mix"] = xlstm_lib.mlstm_init(k1, cfg)
+    elif kind == SLSTM:
+        p["mix"], a["mix"] = xlstm_lib.slstm_init(k1, cfg)
+    else:
+        raise ValueError(kind)
+    if kind in (MLSTM, SLSTM):
+        return p, a  # xLSTM blocks carry their own FFN/gating
+    p["norm2"], a["norm2"] = L.norm_init(cfg.d_model, cfg.norm, cfg.use_bias)
+    if is_moe:
+        p["ffn"], a["ffn"] = moe_lib.moe_init(k2, cfg)
+    else:
+        p["ffn"], a["ffn"] = L.mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.use_bias)
+    return p, a
+
+
+def _unit_init(key, cfg, entries):
+    ps, as_ = [], []
+    for i, (kind, is_moe) in enumerate(entries):
+        p, a = _layer_init(jax.random.fold_in(key, i), cfg, kind, is_moe)
+        ps.append(p)
+        as_.append(a)
+    return tuple(ps), tuple(as_)
+
+
+def init(key, cfg):
+    n_units, n_rest, entries = unit_layout(cfg)
+    keys = jax.random.split(key, 4)
+    params: dict[str, Any] = {}
+    axes: dict[str, Any] = {}
+
+    params["embed"], axes["embed"] = L.embed_init(keys[0], cfg.vocab_size, cfg.d_model)
+    if not cfg.tie_embeddings:
+        params["unembed"], axes["unembed"] = L.embed_init(keys[1], cfg.vocab_size, cfg.d_model)
+    if cfg.encoder_only:  # learned absolute positions (conv-pos stub)
+        params["pos"] = L.truncated_normal(keys[2], (cfg.max_seq_len, cfg.d_model), 1.0)
+        axes["pos"] = (sh.SEQ, L.EMBED)
+    params["final_norm"], axes["final_norm"] = L.norm_init(cfg.d_model, cfg.norm, cfg.use_bias)
+
+    if n_units:
+        unit_keys = jax.random.split(keys[3], n_units)
+        stacked = [ _unit_init(k, cfg, entries) for k in unit_keys ]
+        params["units"] = jax.tree.map(lambda *xs: jnp.stack(xs), *[s[0] for s in stacked])
+        # stacked axes: prepend STACK to every leaf's axes
+        unit_axes = stacked[0][1]
+        params_like = stacked[0][0]
+        axes["units"] = jax.tree.map(
+            lambda a, _: (L.STACK, *a), unit_axes, params_like,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                y is None or isinstance(y, str) for y in x))
+    if n_rest:
+        rest_entries = entries[:n_rest]
+        params["rest"], axes["rest"] = _unit_init(
+            jax.random.fold_in(keys[3], 10_000), cfg, rest_entries)
+    return params, axes
+
+
+# --------------------------------------------------------------------- layers
+def _layer_apply(p, cfg, kind, is_moe, h, positions, cache_entry):
+    """One layer, full-sequence mode. Returns (h, new_cache_entry, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    hn = L.norm_apply(p["norm1"], h, cfg.norm)
+    if kind in _ATTN_KINDS:
+        y, new_cache = attn.attn_apply(p["mix"], cfg, hn, positions, kind=kind,
+                                       cache=cache_entry)
+    elif kind == RGLRU:
+        y, new_cache = rglru_lib.rglru_apply(p["mix"], cfg, hn, cache=cache_entry)
+    elif kind == MLSTM:
+        y, new_cache = xlstm_lib.mlstm_apply(p["mix"], cfg, hn, cache=cache_entry)
+    elif kind == SLSTM:
+        y, new_cache = xlstm_lib.slstm_apply(p["mix"], cfg, hn, cache=cache_entry)
+    h = h + y
+    h = sh.maybe_shard(h, (sh.BATCH, sh.SEQ, None))
+    if kind not in (MLSTM, SLSTM):
+        hn = L.norm_apply(p["norm2"], h, cfg.norm)
+        if is_moe:
+            y, aux = moe_lib.moe_apply(p["ffn"], cfg, hn)
+        else:
+            y = L.mlp_apply(p["ffn"], hn)
+        h = h + y
+        h = sh.maybe_shard(h, (sh.BATCH, sh.SEQ, None))
+    return h, new_cache, aux
+
+
+def _layer_decode(p, cfg, kind, is_moe, h, position, cache_entry):
+    aux = jnp.zeros((), jnp.float32)
+    hn = L.norm_apply(p["norm1"], h, cfg.norm)
+    if kind in _ATTN_KINDS:
+        y, new_cache = attn.attn_decode(p["mix"], cfg, hn, position, cache_entry,
+                                        kind=kind)
+    elif kind == RGLRU:
+        y, new_cache = rglru_lib.rglru_decode(p["mix"], cfg, hn, cache_entry)
+    elif kind == MLSTM:
+        y, new_cache = xlstm_lib.mlstm_decode(p["mix"], cfg, hn, cache_entry)
+    elif kind == SLSTM:
+        y, new_cache = xlstm_lib.slstm_decode(p["mix"], cfg, hn, cache_entry)
+    h = h + y
+    if kind not in (MLSTM, SLSTM):
+        hn = L.norm_apply(p["norm2"], h, cfg.norm)
+        if is_moe:
+            y, aux = moe_lib.moe_apply(p["ffn"], cfg, hn)
+        else:
+            y = L.mlp_apply(p["ffn"], hn)
+        h = h + y
+    return h, new_cache, aux
+
+
+def _remat(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    policy = None
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+    return jax.checkpoint(fn, policy=policy)
+
+
+def _stack_forward(params, cfg, h, positions, cache, decode_position=None):
+    """Run all layers. cache may be None (training). Returns (h, cache, aux)."""
+    n_units, n_rest, entries = unit_layout(cfg)
+    decode = decode_position is not None
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def unit_apply(h, unit_params, unit_cache):
+        if not decode:
+            # unit-boundary residual: under sequence parallelism this is the
+            # (sharded) tensor remat saves per unit
+            h = sh.maybe_shard(h, (sh.BATCH, sh.RES_SEQ, None))
+        new_caches = []
+        aux_sum = jnp.zeros((), jnp.float32)
+        for i, (kind, is_moe) in enumerate(entries):
+            ce = None if unit_cache is None else unit_cache[i]
+            if decode:
+                h, nc, aux = _layer_decode(unit_params[i], cfg, kind, is_moe, h,
+                                           decode_position, ce)
+            else:
+                h, nc, aux = _layer_apply(unit_params[i], cfg, kind, is_moe, h,
+                                          positions, ce)
+            new_caches.append(nc)
+            aux_sum = aux_sum + aux
+        return h, tuple(new_caches), aux_sum
+
+    if n_units:
+        unit_fn = _remat(unit_apply, cfg) if not decode else unit_apply
+
+        def scan_body(carry, xs):
+            h, aux = carry
+            unit_params, unit_cache = xs
+            h, new_cache, aux_u = unit_fn(h, unit_params, unit_cache)
+            return (h, aux + aux_u), new_cache
+
+        ucache = cache["units"] if cache is not None else None
+        if ucache is None:
+            n = n_units
+            ucache_xs = tuple(None for _ in entries)
+            # scan requires a pytree with a leading axis; pass params only
+            (h, aux_total), _ = jax.lax.scan(
+                lambda c, up: (scan_body(c, (up, None))[0], None),
+                (h, aux_total), params["units"])
+            new_ucache = None
+        else:
+            (h, aux_total), new_ucache = jax.lax.scan(
+                scan_body, (h, aux_total), (params["units"], ucache))
+    else:
+        new_ucache = None
+
+    new_rest = None
+    if n_rest:
+        rc = cache["rest"] if cache is not None else None
+        h, new_rest, aux_r = unit_apply_rest(params["rest"], cfg,
+                                             entries[:n_rest], h, positions,
+                                             rc, decode_position)
+        aux_total = aux_total + aux_r
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"units": new_ucache, "rest": new_rest}
+    return h, new_cache, aux_total
+
+
+def unit_apply_rest(rest_params, cfg, rest_entries, h, positions, rest_cache,
+                    decode_position):
+    new_caches = []
+    aux_sum = jnp.zeros((), jnp.float32)
+    for i, (kind, is_moe) in enumerate(rest_entries):
+        ce = None if rest_cache is None else rest_cache[i]
+        if decode_position is not None:
+            h, nc, aux = _layer_decode(rest_params[i], cfg, kind, is_moe, h,
+                                       decode_position, ce)
+        else:
+            h, nc, aux = _layer_apply(rest_params[i], cfg, kind, is_moe, h,
+                                      positions, ce)
+        new_caches.append(nc)
+        aux_sum = aux_sum + aux
+    return h, tuple(new_caches), aux_sum
+
+
+# -------------------------------------------------------------------- embedding
+def _embed_inputs(params, cfg, batch, dtype=jnp.bfloat16):
+    """Token / frontend-stub embedding. Returns (h, positions)."""
+    if cfg.frontend == "audio":
+        h = batch["frame_embeds"].astype(dtype)
+        B, S = h.shape[:2]
+    else:
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        h = L.embed_apply(params["embed"], tokens, dtype)
+        if cfg.frontend == "vision" and "patch_embeds" in batch:
+            pe = batch["patch_embeds"].astype(dtype)
+            h = jax.lax.dynamic_update_slice(h, pe, (0, 0, 0))
+    if cfg.encoder_only:
+        h = h + params["pos"][:S].astype(dtype)
+    h = sh.maybe_shard(h, (sh.BATCH, sh.SEQ, None))
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    return h, positions
+
+
+def _unembed(params, cfg, h):
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    return L.unembed_apply(table, h)
+
+
+# ------------------------------------------------------------------ entrypoints
+def train_loss(params, cfg, batch):
+    """Next-token (or masked-unit) xent. batch: tokens/frame_embeds, labels,
+    optional loss_mask, patch_embeds."""
+    h, positions = _embed_inputs(params, cfg, batch)
+    h, _, aux = _stack_forward(params, cfg, h, positions, cache=None)
+    h = L.norm_apply(params["final_norm"], h, cfg.norm)
+
+    labels = batch["labels"]
+    mask = batch.get("loss_mask")
+    B, S, D = h.shape
+    chunk = min(LOSS_CHUNK, S)
+    assert S % chunk == 0
+    nchunks = S // chunk
+
+    def chunk_loss(carry, idx):
+        tot, totacc, totw = carry
+        hs = jax.lax.dynamic_slice_in_dim(h, idx * chunk, chunk, axis=1)
+        ls = jax.lax.dynamic_slice_in_dim(labels, idx * chunk, chunk, axis=1)
+        logits = _unembed(params, cfg, hs)
+        if mask is not None:
+            ms = jax.lax.dynamic_slice_in_dim(mask, idx * chunk, chunk, axis=1)
+        else:
+            ms = jnp.ones_like(ls, jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ls[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * ms
+        acc = (jnp.argmax(logits, -1) == ls) * ms
+        return (tot + nll.sum(), totacc + acc.sum(), totw + ms.sum()), None
+
+    (tot, totacc, totw), _ = jax.lax.scan(
+        chunk_loss, (jnp.zeros(()), jnp.zeros(()), jnp.zeros(())),
+        jnp.arange(nchunks))
+    totw = jnp.maximum(totw, 1.0)
+    loss = tot / totw + 0.01 * aux
+    return loss, {"loss": tot / totw, "accuracy": totacc / totw, "aux": aux}
+
+
+def prefill(params, cfg, batch, cache):
+    """Process the prompt, fill the cache, return last-token logits."""
+    h, positions = _embed_inputs(params, cfg, batch)
+    h, cache, _ = _stack_forward(params, cfg, h, positions, cache=cache)
+    h_last = h[:, -1:]
+    h_last = L.norm_apply(params["final_norm"], h_last, cfg.norm)
+    logits = _unembed(params, cfg, h_last)[:, 0]
+    return logits, cache
+
+
+def decode_step(params, cfg, tokens, cache, position):
+    """One decode step. tokens (B,1); position scalar int32."""
+    if cfg.frontend == "audio":
+        raise ValueError("encoder-only arch has no decode step")
+    h = L.embed_apply(params["embed"], tokens)
+    h = sh.maybe_shard(h, (sh.BATCH, sh.SEQ, None))
+    h, cache, _ = _stack_forward(params, cfg, h, None, cache=cache,
+                                 decode_position=position)
+    h = L.norm_apply(params["final_norm"], h, cfg.norm)
+    logits = _unembed(params, cfg, h)[:, 0]
+    return logits, cache
+
+
+# ------------------------------------------------------------------- KV caches
+def _entry_cache(cfg, kind, batch, max_seq, stack: int | None):
+    def maybe_stack(tree):
+        if stack is None:
+            return tree
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (stack, *x.shape)), tree)
+
+    if kind in _ATTN_KINDS:
+        c = attn.attn_cache_init(cfg, kind, batch, max_seq)
+        seq_name = sh.KV_SEQ if kind != LOCAL_ATTN else None
+        a = {k: (sh.BATCH, seq_name, L.KV_HEADS, L.HEAD_DIM) for k in ("k", "v")}
+    elif kind == RGLRU:
+        c = rglru_lib.rglru_cache_init(cfg, batch)
+        a = {"h": (sh.BATCH, L.RNN), "conv": (sh.BATCH, None, L.RNN)}
+    elif kind == MLSTM:
+        c = xlstm_lib.mlstm_state_init(cfg, batch)
+        a = {"C": (sh.BATCH, L.HEADS, None, None), "n": (sh.BATCH, L.HEADS, None),
+             "m": (sh.BATCH, L.HEADS)}
+    elif kind == SLSTM:
+        c = xlstm_lib.slstm_state_init(cfg, batch)
+        a = {k: (sh.BATCH, None) for k in ("c", "n", "h", "m")}
+    else:
+        raise ValueError(kind)
+    c = maybe_stack(c)
+    if stack is not None:
+        a = jax.tree.map(lambda ax: (L.STACK, *ax), a,
+                         is_leaf=lambda x: isinstance(x, tuple) and all(
+                             y is None or isinstance(y, str) for y in x))
+    return c, a
+
+
+def cache_init(cfg, batch, max_seq):
+    """Cache pytree + logical axes, mirroring the scan/rest layout."""
+    n_units, n_rest, entries = unit_layout(cfg)
+    cache: dict[str, Any] = {}
+    axes: dict[str, Any] = {}
+    if n_units:
+        cs, as_ = zip(*[
+            _entry_cache(cfg, kind, batch, max_seq, stack=n_units)
+            for kind, _ in entries])
+        cache["units"] = tuple(cs)
+        axes["units"] = tuple(as_)
+    else:
+        cache["units"] = None
+        axes["units"] = None
+    if n_rest:
+        cs, as_ = zip(*[
+            _entry_cache(cfg, kind, batch, max_seq, stack=None)
+            for kind, _ in entries[:n_rest]])
+        cache["rest"] = tuple(cs)
+        axes["rest"] = tuple(as_)
+    else:
+        cache["rest"] = None
+        axes["rest"] = None
+    return cache, axes
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))

@@ -1,0 +1,280 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, chunkwise-parallel)
+and sLSTM (scalar memory, sequential scan).
+
+mLSTM recurrence per head (stabilized, exponential gating):
+
+    m_t  = max(logsig(f̃_t) + m_{t-1}, ĩ_t)
+    C_t  = f'_t C_{t-1} + i'_t v_t k_tᵀ      f' = exp(logf + m_{t-1} - m_t)
+    n_t  = f'_t n_{t-1} + i'_t k_t           i' = exp(ĩ - m_t)
+    h_t  = C_tᵀ q_t / max(|n_tᵀ q_t|, exp(-m_t))
+
+Training/prefill runs the *chunkwise* form: a lax.scan over chunks carrying the
+stabilized (C, n, m); within a chunk the quadratic decay-matrix form is used
+(TPU-native: two MXU matmuls per chunk instead of a length-S scan). The pure
+sequential recurrence lives in tests as the oracle. Decode is one recurrence
+step carried in the cache.
+
+sLSTM uses a genuine sequential lax.scan (its block-diagonal recurrent weights
+make the step cheap); xlstm-125m places one sLSTM per 4 blocks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+_PF = 2          # mLSTM up-projection factor
+_FFN_PF = 4 / 3  # sLSTM trailing-FFN factor
+
+
+def _proj(key, din, dout, scale=1.0):
+    return scale / jnp.sqrt(din).astype(jnp.float32) * jax.random.truncated_normal(
+        key, -2.0, 2.0, (din, dout), jnp.float32)
+
+
+# ================================================================= mLSTM block
+def mlstm_init(key, cfg):
+    d = cfg.d_model
+    di = _PF * d                      # inner width
+    H = cfg.num_heads
+    Dh = di // H
+    ks = jax.random.split(key, 8)
+    p = {
+        "up": _proj(ks[0], d, 2 * di),
+        "down": _proj(ks[1], di, d),
+        "wq": _proj(ks[2], di, di),
+        "wk": _proj(ks[3], di, di),
+        "wv": _proj(ks[4], di, di),
+        # scalar-per-head gates from the inner activations
+        "wi": _proj(ks[5], di, H, scale=0.1),
+        "wf": _proj(ks[6], di, H, scale=0.1),
+        "bi": jnp.zeros((H,), jnp.float32),
+        "bf": 3.0 + jnp.arange(H, dtype=jnp.float32) * 0.5,  # forget-bias init
+        "ogate_skip": jnp.ones((di,), jnp.float32),
+    }
+    a = {
+        "up": (L.EMBED, L.FFN), "down": (L.FFN, L.EMBED),
+        "wq": (L.FFN, L.FFN), "wk": (L.FFN, L.FFN), "wv": (L.FFN, L.FFN),
+        "wi": (L.FFN, L.HEADS), "wf": (L.FFN, L.HEADS),
+        "bi": (L.HEADS,), "bf": (L.HEADS,), "ogate_skip": (L.FFN,),
+    }
+    return p, a
+
+
+def _mlstm_qkv_gates(p, cfg, u):
+    """u (B,S,di) -> q,k,v (B,S,H,Dh) fp32; logf, logi (B,S,H) fp32."""
+    B, S, di = u.shape
+    H = cfg.num_heads
+    Dh = di // H
+    uf = u.astype(jnp.float32)
+    q = (uf @ p["wq"]).reshape(B, S, H, Dh)
+    k = (uf @ p["wk"]).reshape(B, S, H, Dh) * (Dh ** -0.5)
+    v = (uf @ p["wv"]).reshape(B, S, H, Dh)
+    logi = uf @ p["wi"] + p["bi"]                       # ĩ
+    logf = jax.nn.log_sigmoid(uf @ p["wf"] + p["bf"])   # log f
+    return q, k, v, logf, logi
+
+
+def _mlstm_chunk(carry, inp):
+    """One chunk of the chunkwise form. carry: (C (B,H,Dh,Dh), n (B,H,Dh),
+    m (B,H)); inp: q,k,v (B,Lc,H,Dh), logf, logi (B,Lc,H)."""
+    C, n, m = carry
+    q, k, v, logf, logi = inp
+    B, Lc, H, Dh = q.shape
+    F = jnp.cumsum(logf, axis=1)                        # (B,Lc,H)
+    # running stabilizer: M_i = max(m_prev, max_{j<=i}(ĩ_j - F_j))
+    g = jax.lax.cummax(logi - F, axis=1)
+    M = jnp.maximum(m[:, None], g)                      # (B,Lc,H)
+    m_new = F[:, -1] + M[:, -1]
+
+    # intra-chunk: S_ij = (q_i k_j) exp(F_i - F_j + ĩ_j - m_i), j <= i
+    logD = (F[:, :, None] - F[:, None, :] + logi[:, None, :]
+            - M[:, :, None])                            # (B,i,j,H)
+    mask = jnp.tril(jnp.ones((Lc, Lc), bool))
+    logD = jnp.where(mask[None, :, :, None], logD, -jnp.inf)
+    qk = jnp.einsum("bihd,bjhd->bijh", q, k)
+    S = qk * jnp.exp(logD)
+    num_intra = jnp.einsum("bijh,bjhd->bihd", S, v)
+    den_intra = jnp.sum(S, axis=2)                      # Σ_j S_ij -> (B,i,H)
+
+    # inter-chunk: weight exp(F_i + m_prev - m_i) = exp(m_prev - M_i)
+    w_inter = jnp.exp(m[:, None] - M)                   # (B,Lc,H)
+    num_inter = jnp.einsum("bihd,bhde->bihe", q, C) * w_inter[..., None]
+    den_inter = jnp.einsum("bihd,bhd->bih", q, n) * w_inter
+
+    m_i = F + M                                         # absolute stabilizer
+    denom = jnp.maximum(jnp.abs(den_intra + den_inter), jnp.exp(-m_i))
+    h = (num_intra + num_inter) / denom[..., None]      # (B,Lc,H,Dh)
+
+    # carry update to end of chunk
+    w_c = jnp.exp(m - m_new)                            # (B,H)
+    w_kv = jnp.exp(F[:, -1][:, None] - F + logi - m_new[:, None])  # (B,Lc,H)
+    C_new = C * w_c[..., None, None] + jnp.einsum(
+        "bjh,bjhd,bjhe->bhde", w_kv, k, v)
+    n_new = n * w_c[..., None] + jnp.einsum("bjh,bjhd->bhd", w_kv, k)
+    return (C_new, n_new, m_new), h
+
+
+def mlstm_state_init(cfg, batch):
+    di = _PF * cfg.d_model
+    H = cfg.num_heads
+    Dh = di // H
+    return {
+        "C": jnp.zeros((batch, H, Dh, Dh), jnp.float32),
+        "n": jnp.zeros((batch, H, Dh), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+    }
+
+
+def mlstm_apply(p, cfg, x, *, cache=None):
+    """x (B,S,d). Chunkwise over cfg.scan_chunk. Returns (y, new_cache).
+
+    Ragged S is padded to a chunk multiple with gate-neutral positions
+    (i' = 0, f' = 1): the carry is exact, padded outputs are sliced off."""
+    B, S, d = x.shape
+    up = x.astype(jnp.float32) @ p["up"]
+    u, gate = jnp.split(up, 2, axis=-1)                 # (B,S,di) each
+    q, k, v, logf, logi = _mlstm_qkv_gates(p, cfg, u)
+    Lc = min(cfg.scan_chunk, S)
+    pad = (-S) % Lc
+    if pad:
+        zpad = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+        q, k, v = zpad(q), zpad(k), zpad(v)
+        logf = jnp.pad(logf, ((0, 0), (0, pad), (0, 0)))          # log f = 0
+        logi = jnp.pad(logi, ((0, 0), (0, pad), (0, 0)),
+                       constant_values=-1e30)                      # i' = 0
+    S_p = S + pad
+    nc = S_p // Lc
+
+    def to_chunks(t):
+        return jnp.moveaxis(t.reshape(B, nc, Lc, *t.shape[2:]), 1, 0)
+
+    st = cache if cache is not None else mlstm_state_init(cfg, B)
+    carry = (st["C"], st["n"], st["m"])
+    carry, hs = jax.lax.scan(
+        _mlstm_chunk, carry,
+        tuple(to_chunks(t) for t in (q, k, v, logf, logi)))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S_p, -1)[:, :S]  # (B,S,di)
+    h = h + p["ogate_skip"] * u                         # learnable skip
+    y = h * jax.nn.silu(gate)
+    y = (y @ p["down"]).astype(x.dtype)
+    new_cache = None
+    if cache is not None:
+        C, n, m = carry
+        new_cache = {"C": C, "n": n, "m": m}
+    return y, new_cache
+
+
+def mlstm_decode(p, cfg, x, cache):
+    """Single-token recurrence step. x (B,1,d)."""
+    up = x.astype(jnp.float32) @ p["up"]
+    u, gate = jnp.split(up, 2, axis=-1)
+    q, k, v, logf, logi = _mlstm_qkv_gates(p, cfg, u)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]                 # (B,H,Dh)
+    logf, logi = logf[:, 0], logi[:, 0]                 # (B,H)
+    C, n, m = cache["C"], cache["n"], cache["m"]
+    m_new = jnp.maximum(logf + m, logi)
+    fp = jnp.exp(logf + m - m_new)
+    ip = jnp.exp(logi - m_new)
+    C_new = C * fp[..., None, None] + ip[..., None, None] * (
+        k[..., :, None] * v[..., None, :])
+    n_new = n * fp[..., None] + ip[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n_new)),
+                      jnp.exp(-m_new))
+    h = (num / den[..., None]).reshape(x.shape[0], 1, -1)
+    h = h + p["ogate_skip"] * u
+    y = h * jax.nn.silu(gate)
+    return (y @ p["down"]).astype(x.dtype), {"C": C_new, "n": n_new, "m": m_new}
+
+
+# ================================================================= sLSTM block
+def slstm_init(key, cfg):
+    d = cfg.d_model
+    H = cfg.num_heads
+    Dh = d // H
+    dff = int(d * _FFN_PF)
+    ks = jax.random.split(key, 7)
+    p = {
+        # input weights for z,i,f,o stacked: (d, 4d)
+        "w": _proj(ks[0], d, 4 * d),
+        "b": jnp.concatenate([
+            jnp.zeros((2 * d,), jnp.float32),
+            jnp.ones((d,), jnp.float32),       # forget bias +1
+            jnp.zeros((d,), jnp.float32)]),
+        # block-diagonal recurrent weights per head: (4, H, Dh, Dh)
+        "r": 0.4 * jax.random.normal(ks[1], (4, H, Dh, Dh), jnp.float32) / Dh ** 0.5,
+        "ffn_up": _proj(ks[2], d, dff),
+        "ffn_down": _proj(ks[3], dff, d),
+    }
+    a = {
+        "w": (L.EMBED, L.FFN), "b": (L.FFN,),
+        "r": (L.CONV, L.HEADS, L.HEAD_DIM, L.HEAD_DIM),
+        "ffn_up": (L.EMBED, L.FFN), "ffn_down": (L.FFN, L.EMBED),
+    }
+    return p, a
+
+
+def slstm_state_init(cfg, batch):
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.ones((batch, d), jnp.float32),
+        "h": jnp.zeros((batch, d), jnp.float32),
+        "m": jnp.zeros((batch, d), jnp.float32),
+    }
+
+
+def _slstm_step(p, cfg, state, wx_t):
+    """One timestep. wx_t (B, 4d) precomputed input contribution."""
+    H = cfg.num_heads
+    B = wx_t.shape[0]
+    d = wx_t.shape[1] // 4
+    Dh = d // H
+    c, n, h, m = state["c"], state["n"], state["h"], state["m"]
+    hh = h.reshape(B, H, Dh)
+    rec = jnp.stack([
+        jnp.einsum("bhd,hde->bhe", hh, p["r"][g]).reshape(B, d)
+        for g in range(4)], axis=-1)                    # (B,d,4)
+    pre = wx_t.reshape(B, d, 4) + rec + p["b"].reshape(4, d).T
+    z = jnp.tanh(pre[..., 0])
+    itil = pre[..., 1]
+    ftil = jax.nn.log_sigmoid(pre[..., 2])
+    o = jax.nn.sigmoid(pre[..., 3])
+    m_new = jnp.maximum(ftil + m, itil)
+    ip = jnp.exp(itil - m_new)
+    fp = jnp.exp(ftil + m - m_new)
+    c_new = fp * c + ip * z
+    n_new = jnp.maximum(fp * n + ip, 1e-6)
+    h_new = o * (c_new / n_new)
+    return {"c": c_new, "n": n_new, "h": h_new, "m": m_new}
+
+
+def slstm_apply(p, cfg, x, *, cache=None):
+    """x (B,S,d) -> (B,S,d). Sequential scan over time."""
+    B, S, d = x.shape
+    wx = x.astype(jnp.float32) @ p["w"]                 # (B,S,4d)
+    st = cache if cache is not None else slstm_state_init(cfg, B)
+
+    def step(state, xs):
+        wx_t, valid = xs
+        new = _slstm_step(p, cfg, state, wx_t)
+        # ragged-S padding: invalid steps pass state through untouched
+        new = jax.tree.map(lambda a, b: jnp.where(valid, a, b), new, state)
+        return new, new["h"]
+
+    valid = jnp.ones((S,), bool)
+    st_new, hs = jax.lax.scan(step, st,
+                              (jnp.moveaxis(wx, 1, 0), valid))
+    h = jnp.moveaxis(hs, 0, 1)                          # (B,S,d)
+    y = jax.nn.gelu(h @ p["ffn_up"]) @ p["ffn_down"]
+    y = y.astype(x.dtype)
+    return y, (st_new if cache is not None else None)
+
+
+def slstm_decode(p, cfg, x, cache):
+    wx = (x.astype(jnp.float32) @ p["w"])[:, 0]
+    st = _slstm_step(p, cfg, cache, wx)
+    y = jax.nn.gelu(st["h"] @ p["ffn_up"]) @ p["ffn_down"]
+    return y[:, None].astype(x.dtype), st

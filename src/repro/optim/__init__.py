@@ -1,0 +1,11 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer,
+    adafactor,
+    adamw,
+    apply_updates,
+    clip_by_global_norm,
+    global_norm,
+    make_optimizer,
+    sgd_momentum,
+)
+from repro.optim.schedules import caffe_inv, constant, warmup_cosine  # noqa: F401

@@ -1,0 +1,143 @@
+"""Optimizers in the optax style (init/update pairs), built from scratch
+(optax is not available offline). State is a pytree compatible with pjit.
+
+    opt = make_optimizer(name, lr_fn, **hp)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params, step)
+    params = apply_updates(params, updates)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable
+    update: Callable  # (grads, state, params, step) -> (updates, state)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+# ----------------------------------------------------------------- sgd+momentum
+def sgd_momentum(lr_fn, momentum=0.9, weight_decay=0.0):
+    def init(params):
+        return {"mu": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+    def update(grads, state, params, step):
+        lr = lr_fn(step)
+        mu = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32),
+                          state["mu"], grads)
+        upd = jax.tree.map(
+            lambda m, p: -lr * (m + weight_decay * p.astype(jnp.float32)),
+            mu, params)
+        return upd, {"mu": mu}
+
+    return Optimizer("sgdm", init, update)
+
+
+# ------------------------------------------------------------------------ adamw
+def adamw(lr_fn, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1):
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+
+    def update(grads, state, params, step):
+        lr = lr_fn(step)
+        t = step.astype(jnp.float32) + 1.0
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def upd(m, v, p):
+            mhat = m / bc1
+            vhat = v / bc2
+            return -lr * (mhat / (jnp.sqrt(vhat) + eps)
+                          + weight_decay * p.astype(jnp.float32))
+
+        return jax.tree.map(upd, m, v, params), {"m": m, "v": v}
+
+    return Optimizer("adamw", init, update)
+
+
+# -------------------------------------------------------------------- adafactor
+def adafactor(lr_fn, decay=0.8, eps=1e-30, clip_threshold=1.0):
+    """Factored second moments for >=2D params (memory: O(n+m) vs O(n*m));
+    used by the >=35B configs so optimizer state fits per-device HBM."""
+
+    def _factored(shape):
+        return len(shape) >= 2
+
+    def init(params):
+        def leaf(p):
+            if _factored(p.shape):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros_like(p, jnp.float32)}
+
+        return {"v": jax.tree.map(leaf, params)}
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        beta = 1.0 - t ** -decay
+        lr = lr_fn(step)
+
+        def leaf(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if _factored(p.shape):
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+                v = (vr[..., None] * vc[..., None, :]) / denom[..., None]
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                new_s = {"v": v}
+            u = g * jax.lax.rsqrt(v + eps)
+            # update clipping (RMS)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return -lr * u, new_s
+
+        # two passes (XLA CSE merges the duplicate math); a single map with
+        # tuple outputs would collide with tuple-valued param substructure.
+        upd = jax.tree.map(lambda g, s, p: leaf(g, s, p)[0],
+                           grads, state["v"], params)
+        new_v = jax.tree.map(lambda g, s, p: leaf(g, s, p)[1],
+                             grads, state["v"], params)
+        return upd, {"v": new_v}
+
+    return Optimizer("adafactor", init, update)
+
+
+_FACTORIES = {"sgdm": sgd_momentum, "adamw": adamw, "adafactor": adafactor}
+
+
+def make_optimizer(name, lr_fn, **hp) -> Optimizer:
+    if name not in _FACTORIES:
+        raise KeyError(f"unknown optimizer {name!r}")
+    return _FACTORIES[name](lr_fn, **hp)

@@ -1,0 +1,28 @@
+"""Learning-rate schedules (step -> lr, jnp-traceable)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine(peak_lr, warmup_steps, total_steps, final_frac=0.1):
+    def fn(step):
+        s = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.asarray(step, jnp.float32)
+        warm = peak_lr * jnp.minimum(1.0, (s + 1.0) / max(1, warmup_steps))
+        frac = jnp.clip((s - warmup_steps) / max(1, total_steps - warmup_steps), 0.0, 1.0)
+        cos = peak_lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(s < warmup_steps, warm, cos)
+
+    return fn
+
+
+def caffe_inv(base_lr, gamma=1e-4, power=0.75):
+    """Caffe 'inv' policy — the paper's LeNet solver (§VI-D)."""
+    def fn(step):
+        s = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.asarray(step, jnp.float32)
+        return base_lr * (1.0 + gamma * s) ** (-power)
+
+    return fn

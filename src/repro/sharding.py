@@ -1,0 +1,146 @@
+"""Logical-axis sharding rules (MaxText-style) + activation constraints.
+
+Params and caches are annotated with *logical* axis names (repro.models.layers
+vocabulary plus the activation/cache names below). ``logical_to_spec`` maps
+them to mesh axes, dropping any assignment that does not divide the physical
+dim (e.g. kv_heads=2 cannot shard over model=16 -> replicated).
+
+Models call :func:`maybe_shard` on activations; it is a no-op unless the step
+builder installed a mesh context (so unit tests on one CPU device never touch
+device state).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import layers as L
+
+# Activation / cache logical axes.
+BATCH = "batch"
+SEQ = "seq"
+RES_SEQ = "res_seq"  # residual-stream seq dim at scan-unit boundaries only:
+                     # mapping it to "model" gives Megatron-style sequence
+                     # parallelism (remat saves shrink by the TP degree)
+KV_SEQ = "kv_seq"
+FED = "fed"  # federation replica dim (DFL mode)
+
+# logical axis -> tuple of candidate mesh axes (first that exists+divides wins;
+# multi-axis entries shard over several mesh axes at once).
+DEFAULT_RULES: dict[str, tuple] = {
+    L.VOCAB: (("model",),),
+    L.HEADS: (("model",),),
+    L.KV_HEADS: (("model",),),
+    L.FFN: (("model",),),
+    L.EXPERTS: (("model",),),
+    L.EMBED: (),                   # replicated unless fsdp
+    L.HEAD_DIM: (),
+    L.RNN: (("model",),),
+    L.STACK: (),
+    L.CONV: (),
+    BATCH: (("pod", "data"), ("data",)),
+    SEQ: (),
+    RES_SEQ: (),
+    KV_SEQ: (),
+    FED: (("fed",),),
+}
+
+FSDP_RULES = dict(DEFAULT_RULES)
+FSDP_RULES[L.EMBED] = (("data",),)  # ZeRO-3: shard d_model over data
+
+LONG_DECODE_RULES_EXTRA = {KV_SEQ: (("data",),)}  # sequence-parallel KV
+
+
+def make_rules(*, fsdp: bool = False, shard_kv_seq: bool = False,
+               extra: Optional[dict] = None) -> dict:
+    rules = dict(FSDP_RULES if fsdp else DEFAULT_RULES)
+    if shard_kv_seq:
+        rules.update(LONG_DECODE_RULES_EXTRA)
+    if extra:
+        rules.update(extra)
+    return rules
+
+
+def logical_to_spec(axes: Sequence[Optional[str]], mesh: Mesh, rules: dict,
+                    shape: Sequence[int]) -> P:
+    """Resolve logical axis names to a PartitionSpec, checking divisibility."""
+    used: set[str] = set()
+    out = []
+    for dim, name in zip(shape, axes):
+        assigned = None
+        if name is not None:
+            for cand in rules.get(name, ()):
+                mesh_axes = tuple(a for a in cand if a in mesh.axis_names and a not in used)
+                if not mesh_axes:
+                    continue
+                size = 1
+                for a in mesh_axes:
+                    size *= mesh.shape[a]
+                if size and dim % size == 0 and dim >= size:
+                    assigned = mesh_axes if len(mesh_axes) > 1 else mesh_axes[0]
+                    used.update(mesh_axes)
+                    break
+        out.append(assigned)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def tree_specs(axes_tree, mesh, rules, params_tree):
+    """PartitionSpec pytree matching params, from the logical-axes pytree."""
+    return jax.tree.map(
+        lambda axes, p: logical_to_spec(axes, mesh, rules, p.shape),
+        axes_tree, params_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x),
+    )
+
+
+def tree_shardings(axes_tree, mesh, rules, params_tree):
+    specs = tree_specs(axes_tree, mesh, rules, params_tree)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+
+# ------------------------------------------------------- activation constraints
+class _ShardCtx(threading.local):
+    def __init__(self):
+        self.mesh = None
+        self.rules = None
+
+
+_CTX = _ShardCtx()
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, rules: dict):
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh, _CTX.rules = mesh, rules
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+@contextlib.contextmanager
+def no_activation_sharding():
+    """Suppress activation constraints — required inside shard_map manual
+    regions (e.g. the DFL gossip round), where with_sharding_constraint on
+    vma-typed arrays rejects auto-axis NamedShardings."""
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh, _CTX.rules = None, None
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def maybe_shard(x, axes: Sequence[Optional[str]]):
+    """Apply a with_sharding_constraint if a mesh context is installed."""
+    if _CTX.mesh is None:
+        return x
+    spec = logical_to_spec(axes, _CTX.mesh, _CTX.rules, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_CTX.mesh, spec))

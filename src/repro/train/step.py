@@ -1,0 +1,223 @@
+"""Step builders: train_step / prefill / decode, plus abstract input specs
+and sharding resolution for every (arch x shape) cell.
+
+Everything here is mesh-agnostic until ``resolve_shardings`` pairs the logical
+axes with a mesh; the dry-run lowers the same functions the real launcher runs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro import sharding as sh
+from repro.configs.base import ArchConfig, InputShape
+from repro.models import transformer
+from repro.optim import optimizers as opt_lib
+from repro.optim import schedules
+
+_AXES_LEAF = lambda x: isinstance(x, tuple) and all(
+    y is None or isinstance(y, str) for y in x)
+
+
+# ------------------------------------------------------------ abstract structs
+def abstract_params(cfg: ArchConfig):
+    """(ShapeDtypeStruct params, logical axes) without allocating anything."""
+    box = {}
+
+    def f():
+        p, a = transformer.init(jax.random.PRNGKey(0), cfg)
+        box["axes"] = a
+        return p
+
+    shapes = jax.eval_shape(f)
+    return shapes, box["axes"]
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, max_seq: int):
+    box = {}
+
+    def f():
+        c, a = transformer.cache_init(cfg, batch, max_seq)
+        box["axes"] = a
+        return c
+
+    shapes = jax.eval_shape(f)
+    return shapes, box["axes"]
+
+
+def opt_state_axes(opt_name: str, params_axes, params):
+    """Logical axes for optimizer state, mirroring the param axes."""
+    if opt_name in ("adamw",):
+        return {"m": params_axes, "v": params_axes}
+    if opt_name == "sgdm":
+        return {"mu": params_axes}
+    if opt_name == "adafactor":
+        def leaf(a, p):
+            if len(p.shape) >= 2:
+                return {"vr": tuple(a[:-1]), "vc": tuple(a[:-2]) + (a[-1],)}
+            return {"v": a}
+
+        return {"v": jax.tree.map(leaf, params_axes, params, is_leaf=_AXES_LEAF)}
+    raise KeyError(opt_name)
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        if cfg.frontend == "audio":
+            batch = {
+                "frame_embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16),
+                "labels": jax.ShapeDtypeStruct((B, S), i32),
+                "loss_mask": jax.ShapeDtypeStruct((B, S), jnp.float32),
+            }
+        else:
+            batch = {
+                "tokens": jax.ShapeDtypeStruct((B, S), i32),
+                "labels": jax.ShapeDtypeStruct((B, S), i32),
+            }
+            if cfg.frontend == "vision":
+                batch["patch_embeds"] = jax.ShapeDtypeStruct(
+                    (B, cfg.num_patch_tokens, cfg.d_model), jnp.bfloat16)
+        return batch
+    if shape.kind == "prefill":
+        if cfg.frontend == "audio":
+            return {"frame_embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)}
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        if cfg.frontend == "vision":
+            batch["patch_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_patch_tokens, cfg.d_model), jnp.bfloat16)
+        return batch
+    # decode: one new token against a seq_len KV cache
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+
+
+def batch_axes(cfg: ArchConfig, shape: InputShape):
+    specs = {
+        "tokens": (sh.BATCH, sh.SEQ),
+        "labels": (sh.BATCH, sh.SEQ),
+        "loss_mask": (sh.BATCH, sh.SEQ),
+        "frame_embeds": (sh.BATCH, sh.SEQ, None),
+        "patch_embeds": (sh.BATCH, None, None),
+    }
+    return {k: specs[k] for k in input_specs(cfg, shape)}
+
+
+# ---------------------------------------------------------------- step builders
+def make_lr_fn(cfg: ArchConfig, total_steps: int = 100_000):
+    peak = 3e-4 if cfg.optimizer != "adafactor" else 1e-3
+    return schedules.warmup_cosine(peak, 2_000, total_steps)
+
+
+def make_optimizer(cfg: ArchConfig, total_steps: int = 100_000):
+    return opt_lib.make_optimizer(cfg.optimizer, make_lr_fn(cfg, total_steps))
+
+
+def make_train_step(cfg: ArchConfig, opt: Optional[opt_lib.Optimizer] = None,
+                    grad_clip: float = 1.0):
+    opt = opt or make_optimizer(cfg)
+    accum = max(1, cfg.accum_steps)
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(
+            lambda p: transformer.train_loss(p, cfg, batch),
+            has_aux=True)(params)
+
+    def train_step(state, batch):
+        if accum == 1:
+            (loss, metrics), grads = grads_of(state["params"], batch)
+        else:
+            # microbatch over the batch dim: live activations shrink accum x
+            micro = jax.tree.map(
+                lambda x: x.reshape(accum, x.shape[0] // accum, *x.shape[1:]),
+                batch)
+
+            def acc_body(carry, mb):
+                g_acc, m_acc = carry
+                (loss, metrics), g = grads_of(state["params"], mb)
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                     g_acc, g)
+                m_acc = jax.tree.map(lambda a, b: a + b / accum, m_acc, metrics)
+                return (g_acc, m_acc), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              state["params"])
+            m0 = {"loss": jnp.zeros(()), "accuracy": jnp.zeros(()),
+                  "aux": jnp.zeros(())}
+            (grads, metrics), _ = jax.lax.scan(acc_body, (g0, m0), micro)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+        grads, gnorm = opt_lib.clip_by_global_norm(grads, grad_clip)
+        updates, opt_state = opt.update(grads, state["opt"], state["params"],
+                                        state["step"])
+        params = opt_lib.apply_updates(state["params"], updates)
+        metrics = dict(metrics, grad_norm=gnorm)
+        return ({"params": params, "opt": opt_state, "step": state["step"] + 1},
+                metrics)
+
+    return train_step
+
+
+def make_prefill(cfg: ArchConfig):
+    def prefill_step(params, batch, cache):
+        return transformer.prefill(params, cfg, batch, cache)
+
+    return prefill_step
+
+
+def make_decode(cfg: ArchConfig):
+    def decode_step(params, cache, tokens, position):
+        return transformer.decode_step(params, cfg, tokens, cache, position)
+
+    return decode_step
+
+
+def init_train_state(cfg: ArchConfig, key, opt: Optional[opt_lib.Optimizer] = None):
+    """Concrete state (smoke tests / real training on small configs)."""
+    opt = opt or make_optimizer(cfg)
+    params, axes = transformer.init(key, cfg)
+    return {
+        "params": params,
+        "opt": opt.init(params),
+        "step": jnp.zeros((), jnp.int32),
+    }, axes
+
+
+def abstract_train_state(cfg: ArchConfig):
+    """(state ShapeDtypeStructs, state logical axes) for the dry-run."""
+    params, p_axes = abstract_params(cfg)
+    opt = make_optimizer(cfg)
+
+    def f():
+        zeros = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), params)
+        return opt.init(zeros)
+
+    opt_shapes = jax.eval_shape(f)
+    o_axes = opt_state_axes(cfg.optimizer, p_axes, params)
+    state = {"params": params, "opt": opt_shapes,
+             "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    axes = {"params": p_axes, "opt": o_axes, "step": ()}
+    return state, axes
+
+
+# ------------------------------------------------------------------- shardings
+def rules_for(cfg: ArchConfig, shape: InputShape) -> dict:
+    decode = shape.kind == "decode"
+    rules = sh.make_rules(fsdp=cfg.fsdp)
+    if decode:
+        # KV cache sequence dim: prefer data (frees when batch < data axis),
+        # else model (flash-decoding style sequence parallelism).
+        rules[sh.KV_SEQ] = (("data",), ("model",))
+    return rules
+
+
+def state_shardings(state, axes, mesh, rules):
+    return sh.tree_shardings(axes, mesh, rules, state)
+
+
+def batch_shardings(cfg, shape, batch_struct, mesh, rules):
+    return sh.tree_shardings(batch_axes(cfg, shape), mesh, rules, batch_struct)

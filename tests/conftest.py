@@ -1,0 +1,24 @@
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_python(code: str, host_devices: int = 0, timeout: int = 560):
+    """Run a snippet in a fresh interpreter (multi-device tests must set
+    XLA_FLAGS before jax first init; the pytest process sees 1 device)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    if host_devices:
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={host_devices}"
+    return subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+
+
+@pytest.fixture
+def subprocess_runner():
+    return run_python

@@ -1,0 +1,131 @@
+"""Blockchain substrate invariants (paper §IV-B/§IV-C): signatures, digest
+protection, Eq. (1), two-phase blocks, chain immutability."""
+import pytest
+
+from repro.chain import crypto
+from repro.chain.ledger import Ledger
+from repro.chain.types import (Block, BlockConfirmation, NodeInformation,
+                               Receipt, Transaction)
+
+
+@pytest.fixture(scope="module")
+def keys():
+    return crypto.generate_keypair(bits=512), crypto.generate_keypair(bits=512)
+
+
+def _tx(kp, ttl=3, now=0.0):
+    info = NodeInformation.from_keypair(kp)
+    return Transaction(generator=info, create_time=now, expire_time=now + 50,
+                       ml_model="abc123", ttl=ttl).seal(kp)
+
+
+def test_sign_verify_roundtrip(keys):
+    kp, other = keys
+    d = crypto.hash_fields("hello", 42)
+    sig = crypto.sign(kp, d)
+    assert crypto.verify(kp.public_key, d, sig)
+    assert not crypto.verify(other.public_key, d, sig)
+    assert not crypto.verify(kp.public_key, crypto.hash_fields("x"), sig)
+
+
+def test_address_is_pubkey_hash(keys):
+    kp, _ = keys
+    assert kp.address == crypto.sha256_hex(kp.public_key.encode())
+
+
+def test_transaction_tamper_detection(keys):
+    kp, _ = keys
+    tx = _tx(kp)
+    assert tx.verify()
+    tx.ml_model = "evil"
+    assert not tx.verify()
+
+
+def test_transaction_expiry(keys):
+    kp, _ = keys
+    tx = _tx(kp, now=0.0)
+    assert tx.verify(now=10.0)
+    assert not tx.verify(now=51.0)  # outdated model dropped (§IV-B2)
+
+
+def test_receipt_digest_not_part_of_tx_digest(keys):
+    """§IV-B3: appending receipts must not change the transaction digest."""
+    kp, kp2 = keys
+    tx = _tx(kp)
+    d_before = tx.d
+    r = Receipt(creator=NodeInformation.from_keypair(kp2),
+                transaction_digest=tx.d, received_at_ttl=tx.ttl - 1,
+                accuracy=0.9, create_time=1.0).seal(kp2)
+    tx.receipts.append(r)
+    assert tx.compute_digest() == d_before
+    assert tx.verify()
+
+
+def test_received_at_ttl_eq1(keys):
+    """Eq. (1): received_at_ttl = min(ttl, min receipts.rat) - 1."""
+    kp, kp2 = keys
+    tx = _tx(kp, ttl=3)
+    assert tx.next_received_at_ttl() == 2
+    r = Receipt(creator=NodeInformation.from_keypair(kp2),
+                transaction_digest=tx.d, received_at_ttl=1,
+                accuracy=0.5, create_time=1.0).seal(kp2)
+    tx.receipts.append(r)
+    assert tx.next_received_at_ttl() == 0  # min(3, 1) - 1
+
+
+def test_block_two_phase_and_confirmations(keys):
+    kp, kp2 = keys
+    info2 = NodeInformation.from_keypair(kp2)
+    ledger = Ledger("lenet5", NodeInformation.from_keypair(kp), kp)
+    tx = _tx(kp)
+    r = Receipt(creator=info2, transaction_digest=tx.d,
+                received_at_ttl=2, accuracy=0.8, create_time=1.0).seal(kp2)
+    tx.receipts.append(r)
+    draft = ledger.new_draft([tx], now=2.0)
+    conf = BlockConfirmation(creator=info2, transaction_digest=tx.d,
+                             receipt_digest=r.d, block_digest=draft.d).seal(kp2)
+    draft.confirmations = [conf]
+    draft.finalize()
+    assert draft.verify(min_confirmations_per_tx=1)
+    assert ledger.append(draft, 1)
+    assert ledger.verify_chain(1)
+
+
+def test_block_immutable_after_finalize(keys):
+    kp, kp2 = keys
+    info2 = NodeInformation.from_keypair(kp2)
+    ledger = Ledger("lenet5", NodeInformation.from_keypair(kp), kp)
+    tx = _tx(kp)
+    r = Receipt(creator=info2, transaction_digest=tx.d, received_at_ttl=2,
+                accuracy=0.8, create_time=1.0).seal(kp2)
+    tx.receipts.append(r)
+    draft = ledger.new_draft([tx], now=2.0)
+    conf = BlockConfirmation(creator=info2, transaction_digest=tx.d,
+                             receipt_digest=r.d, block_digest=draft.d).seal(kp2)
+    draft.confirmations = [conf]
+    draft.finalize()
+    ledger.append(draft, 1)
+    # tampering with a sealed receipt breaks the chain audit
+    r.accuracy = 1.0
+    assert not ledger.verify_chain(1)
+
+
+def test_confirmation_for_foreign_receipt_rejected(keys):
+    kp, kp2 = keys
+    info2 = NodeInformation.from_keypair(kp2)
+    ledger = Ledger("lenet5", NodeInformation.from_keypair(kp), kp)
+    tx = _tx(kp)
+    draft = ledger.new_draft([tx], now=2.0)
+    bogus = BlockConfirmation(creator=info2, transaction_digest=tx.d,
+                              receipt_digest="f" * 64,
+                              block_digest=draft.d).seal(kp2)
+    draft.confirmations = [bogus]
+    draft.finalize()
+    assert not draft.verify(min_confirmations_per_tx=0)
+
+
+def test_genesis_records_model_structure(keys):
+    kp, _ = keys
+    a = Ledger("lenet5", NodeInformation.from_keypair(kp), kp)
+    b = Ledger("resnet", NodeInformation.from_keypair(kp), kp)
+    assert a.genesis_digest != b.genesis_digest  # §IV-B4

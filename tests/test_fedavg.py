@@ -1,0 +1,86 @@
+"""Property tests (hypothesis) for the paper's Eq. 2/3 weighted FedAvg."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fedavg
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _models(n, d, seed):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(rng.randn(n, d).astype(np.float32))
+
+
+@given(n=st.integers(2, 8), d=st.integers(1, 64), seed=st.integers(0, 999))
+def test_equal_weights_is_plain_average(n, d, seed):
+    ms = _models(n, d, seed)
+    prev = jnp.zeros((d,))
+    w = jnp.ones((n,))
+    out = fedavg.weighted_fedavg(ms, w, prev)
+    expected = 0.5 * ms.mean(0)
+    np.testing.assert_allclose(out, expected, rtol=1e-5, atol=1e-6)
+
+
+@given(n=st.integers(2, 6), seed=st.integers(0, 999))
+def test_output_in_convex_hull_midpoint(n, seed):
+    """Eq. 3: out = (convex combo + prev)/2 => bounded by extremes."""
+    d = 16
+    ms = _models(n, d, seed)
+    prev = _models(1, d, seed + 1)[0]
+    w = jnp.asarray(np.random.RandomState(seed).rand(n).astype(np.float32) + 0.01)
+    out = fedavg.weighted_fedavg(ms, w, prev)
+    lo = 0.5 * (ms.min(0) + prev)
+    hi = 0.5 * (ms.max(0) + prev)
+    assert bool(jnp.all(out >= lo - 1e-5) and jnp.all(out <= hi + 1e-5))
+
+
+@given(seed=st.integers(0, 999))
+def test_zero_total_weight_keeps_previous_model(seed):
+    ms = _models(4, 8, seed)
+    prev = _models(1, 8, seed + 1)[0]
+    out = fedavg.weighted_fedavg(ms, jnp.zeros((4,)), prev)
+    np.testing.assert_allclose(out, prev, rtol=1e-6)
+
+
+@given(n=st.integers(2, 6), seed=st.integers(0, 999))
+def test_weight_scale_invariance(n, seed):
+    """Eq. 3 normalizes by w_T: scaling all weights changes nothing."""
+    ms = _models(n, 8, seed)
+    prev = jnp.ones((8,))
+    w = jnp.asarray(np.random.RandomState(seed).rand(n).astype(np.float32) + 0.1)
+    a = fedavg.weighted_fedavg(ms, w, prev)
+    b = fedavg.weighted_fedavg(ms, 7.3 * w, prev)
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+@given(n=st.integers(2, 6), seed=st.integers(0, 999))
+def test_streaming_matches_stacked(n, seed):
+    ms = _models(n, 12, seed)
+    prev = _models(1, 12, seed + 1)[0]
+    w = jnp.asarray(np.random.RandomState(seed).rand(n).astype(np.float32))
+    stacked = fedavg.weighted_fedavg(ms, w, prev)
+    acc = fedavg.streaming_init(prev)
+    for i in range(n):
+        acc = fedavg.streaming_add(acc, ms[i], w[i])
+    stream = fedavg.streaming_finish(acc, prev)
+    np.testing.assert_allclose(stream, stacked, rtol=1e-4, atol=1e-5)
+
+
+def test_zero_weight_member_excluded():
+    ms = jnp.stack([jnp.ones((4,)), 100.0 * jnp.ones((4,))])
+    prev = jnp.ones((4,))
+    out = fedavg.weighted_fedavg(ms, jnp.asarray([1.0, 0.0]), prev)
+    np.testing.assert_allclose(out, jnp.ones((4,)), rtol=1e-6)
+
+
+def test_pytree_structure_preserved():
+    tree = {"a": jnp.ones((3, 4, 5)), "b": (jnp.zeros((3, 2)),)}
+    prev = {"a": jnp.zeros((4, 5)), "b": (jnp.ones((2,)),)}
+    w = jnp.asarray([0.5, 0.2, 0.3])
+    out = fedavg.weighted_fedavg(tree, w, prev)
+    assert out["a"].shape == (4, 5) and out["b"][0].shape == (2,)

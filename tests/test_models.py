@@ -1,0 +1,103 @@
+"""Per-arch smoke tests: reduced same-family config, one train step on CPU,
+output shapes + finite loss; decode/prefill consistency for cache-bearing
+archs (the assigned-architecture deliverable's smoke requirement)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, cell_status, get_config, smoke_config
+from repro.models import transformer
+from repro.train import step as step_lib
+
+B, S = 2, 64
+
+
+def _batch(cfg):
+    if cfg.frontend == "audio":
+        return {
+            "frame_embeds": jnp.ones((B, S, cfg.d_model), jnp.bfloat16),
+            "labels": jnp.ones((B, S), jnp.int32),
+            "loss_mask": jnp.ones((B, S), jnp.float32),
+        }
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(0), (B, S), 0,
+                                     cfg.vocab_size),
+        "labels": jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                     cfg.vocab_size),
+    }
+    if cfg.frontend == "vision":
+        batch["patch_embeds"] = jnp.ones(
+            (B, cfg.num_patch_tokens, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_smoke(arch):
+    cfg = smoke_config(arch)
+    state, _ = step_lib.init_train_state(cfg, jax.random.PRNGKey(0))
+    ts = jax.jit(step_lib.make_train_step(cfg))
+    state2, metrics = ts(state, _batch(cfg))
+    assert np.isfinite(float(metrics["loss"]))
+    assert float(metrics["grad_norm"]) > 0
+    assert int(state2["step"]) == 1
+    # some params changed (hubert's embed table gets no grads — frame-embed
+    # inputs — so check across all leaves)
+    changed = any(
+        not np.allclose(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(state["params"]),
+                        jax.tree.leaves(state2["params"])))
+    assert changed
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCH_IDS
+                                  if get_config(a).supports_decode])
+def test_prefill_then_decode_consistency(arch):
+    """Prefill S tokens then decode token S must match a full forward of
+    S+1 tokens (cache correctness across every layer kind)."""
+    cfg = smoke_config(arch)
+    params, _ = transformer.init(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, S + 1), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks[:, :S]}
+    if cfg.frontend == "vision":
+        batch["patch_embeds"] = jnp.ones((B, cfg.num_patch_tokens, cfg.d_model),
+                                         jnp.bfloat16) * 0.01
+    cache, _ = transformer.cache_init(cfg, B, S + 8)
+    logits_p, cache = jax.jit(
+        lambda p, b, c: transformer.prefill(p, cfg, b, c))(params, batch, cache)
+    logits_d, _ = jax.jit(
+        lambda p, c, t, pos: transformer.decode_step(p, cfg, t, c, pos))(
+        params, cache, toks[:, S:S + 1], jnp.asarray(S, jnp.int32))
+
+    full_batch = dict(batch, tokens=toks)
+    cache2, _ = transformer.cache_init(cfg, B, S + 8)
+    logits_full, _ = jax.jit(
+        lambda p, b, c: transformer.prefill(p, cfg, b, c))(params, full_batch,
+                                                           cache2)
+    np.testing.assert_allclose(np.asarray(logits_d, np.float32),
+                               np.asarray(logits_full, np.float32),
+                               rtol=0.08, atol=0.08)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_abstract_init(arch):
+    """Full (unreduced) configs build abstract params with sane counts."""
+    cfg = get_config(arch)
+    params, axes = step_lib.abstract_params(cfg)
+    n = sum(x.size for x in jax.tree.leaves(params))
+    expected_scale = {
+        "recurrentgemma-2b": 2e9, "chatglm3-6b": 6e9, "command-r-35b": 35e9,
+        "gemma3-12b": 12e9, "llama3-8b": 8e9, "llava-next-mistral-7b": 7e9,
+        "hubert-xlarge": 1e9, "llama4-maverick-400b-a17b": 400e9,
+        "dbrx-132b": 132e9, "xlstm-125m": 125e6,
+    }[arch]
+    assert 0.4 * expected_scale < n < 2.6 * expected_scale, (arch, n)
+
+
+def test_cell_status_skip_rules():
+    assert cell_status(get_config("hubert-xlarge"), SHAPES["decode_32k"])[0] is False
+    assert cell_status(get_config("llama3-8b"), SHAPES["long_500k"])[0] is False
+    assert cell_status(get_config("recurrentgemma-2b"), SHAPES["long_500k"])[0]
+    assert cell_status(get_config("gemma3-12b"), SHAPES["long_500k"])[0]
+    assert cell_status(get_config("xlstm-125m"), SHAPES["long_500k"])[0]

@@ -1,0 +1,46 @@
+"""Reputation impls (paper §IV-D1): decrease-only, floor 0, ties punished."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.reputation import IMPL1, IMPL2, ReputationImpl, get, register
+
+
+def test_registry():
+    assert get("impl1").penalty == pytest.approx(0.01)
+    assert get("impl1").buffer_size == 5
+    assert get("impl2").penalty == pytest.approx(0.05)
+    assert get("impl2").buffer_size == 10
+    with pytest.raises(KeyError):
+        get("nope")
+
+
+def test_lowest_accuracy_sender_punished():
+    row = jnp.ones((5,))
+    senders = jnp.asarray([1, 2, 3])
+    accs = jnp.asarray([0.9, 0.2, 0.8])
+    new = IMPL1.update_row(row, senders, accs)
+    np.testing.assert_allclose(new, [1.0, 1.0, 0.99, 1.0, 1.0], atol=1e-6)
+
+
+def test_ties_all_punished():
+    row = jnp.ones((4,))
+    new = IMPL2.update_row(row, jnp.asarray([0, 1, 2]),
+                           jnp.asarray([0.3, 0.3, 0.9]))
+    np.testing.assert_allclose(new, [0.95, 0.95, 1.0, 1.0], atol=1e-6)
+
+
+def test_reputation_never_increases_and_floors_at_zero():
+    impl = ReputationImpl("fast", penalty=0.3, buffer_size=2)
+    row = jnp.ones((2,))
+    for _ in range(10):
+        prev = row
+        row = impl.update_row(row, jnp.asarray([0]), jnp.asarray([0.1]))
+        assert bool(jnp.all(row <= prev + 1e-9))
+    assert float(row[0]) == pytest.approx(0.0)
+    assert float(row[1]) == pytest.approx(1.0)
+
+
+def test_custom_impl_pluggable():
+    mine = register(ReputationImpl("custom-x", penalty=0.2, buffer_size=3))
+    assert get("custom-x") is mine

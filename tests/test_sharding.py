@@ -1,0 +1,124 @@
+"""Sharding rules engine + HLO cost walker unit tests."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro import sharding as sh
+from repro.data.partition import dirichlet_class_probs
+from repro.launch import hlo_cost
+
+
+class FakeMesh:
+    def __init__(self, shape):  # dict axis -> size
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+def test_divisibility_drops_assignment():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    rules = sh.make_rules()
+    # kv_heads=8 cannot shard over model=16 -> replicated
+    spec = sh.logical_to_spec(("batch", None, "kv_heads", "head_dim"), mesh,
+                              rules, (128, 32, 8, 128))
+    assert spec == P("data")
+    # heads=32 shards fine
+    spec = sh.logical_to_spec(("batch", None, "heads", "head_dim"), mesh,
+                              rules, (128, 32, 32, 128))
+    assert spec == P("data", None, "model")
+
+
+def test_axis_used_once_per_tensor():
+    mesh = FakeMesh({"data": 4, "model": 4})
+    rules = sh.make_rules(fsdp=True)
+    # both embed (fsdp->data) and batch want data; batch (first dim) wins
+    spec = sh.logical_to_spec(("batch", "embed"), mesh, rules, (64, 64))
+    assert spec == P("data")
+
+
+def test_multi_axis_batch_sharding():
+    mesh = FakeMesh({"pod": 2, "data": 16, "model": 16})
+    rules = sh.make_rules()
+    spec = sh.logical_to_spec(("batch", "seq"), mesh, rules, (256, 4096))
+    assert spec == P(("pod", "data"))
+
+
+def test_decode_kv_seq_fallback_order():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    rules = sh.make_rules()
+    rules[sh.KV_SEQ] = (("data",), ("model",))
+    # batch=1 can't take data -> kv_seq gets data
+    spec = sh.logical_to_spec(("batch", "kv_seq", "kv_heads", "head_dim"),
+                              mesh, rules, (1, 524288, 8, 128))
+    assert spec == P(None, "data")
+    # batch=128 takes data -> kv_seq falls to model
+    spec = sh.logical_to_spec(("batch", "kv_seq", "kv_heads", "head_dim"),
+                              mesh, rules, (128, 32768, 8, 128))
+    assert spec == P("data", "model")
+
+
+# ------------------------------------------------------------ hlo cost walker
+def test_shape_parse():
+    assert hlo_cost.shape_elems_bytes("bf16[4,8]{1,0}") == (32, 64)
+    assert hlo_cost.shape_elems_bytes("(f32[2,2], s32[3])") == (7, 28)
+    assert hlo_cost.shape_elems_bytes("pred[]")[1] == 1
+
+
+def test_instr_parse_tuple_result_with_index_comment():
+    line = ('  %while.1 = (s32[], f32[2,2]{1,0}, /*index=2*/f32[4]{0}) '
+            'while(%tuple.1), condition=%cond.1, body=%body.1, '
+            'backend_config={"known_trip_count":{"n":"7"}}')
+    ins = hlo_cost.parse_instr(line)
+    assert ins.opcode == "while"
+    assert hlo_cost._TRIPCOUNT_RE.search(ins.line).group(1) == "7"
+
+
+def test_dot_flops_counted_with_trip_count():
+    txt = """
+%body.1 (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %gte.1 = f32[8,16]{1,0} get-tuple-element(%p), index=1
+  %c.1 = f32[16,16]{1,0} constant({...})
+  %dot.1 = f32[8,16]{1,0} dot(%gte.1, %c.1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %gte.0 = s32[] get-tuple-element(%p), index=0
+  %one = s32[] constant(1)
+  %add.1 = s32[] add(%gte.0, %one)
+  ROOT %tuple.2 = (s32[], f32[8,16]{1,0}) tuple(%add.1, %dot.1)
+}
+
+%cond.1 (p.1: (s32[], f32[8,16])) -> pred[] {
+  %gte.2 = s32[] get-tuple-element(%p.1), index=0
+  %n = s32[] constant(5)
+  ROOT %lt = pred[] compare(%gte.2, %n), direction=LT
+}
+
+ENTRY %main (x: f32[8,16]) -> f32[8,16] {
+  %zero = s32[] constant(0)
+  %tuple.1 = (s32[], f32[8,16]{1,0}) tuple(%zero, %x)
+  %while.1 = (s32[], f32[8,16]{1,0}) while(%tuple.1), condition=%cond.1, body=%body.1
+  ROOT %gte.3 = f32[8,16]{1,0} get-tuple-element(%while.1), index=1
+}
+"""
+    res = hlo_cost.analyze(txt)
+    assert res.while_trips == [5]
+    assert res.flops == pytest.approx(2 * 8 * 16 * 16 * 5)
+
+
+# --------------------------------------------------------- dirichlet partition
+settings.register_profile("ci2", max_examples=20, deadline=None)
+settings.load_profile("ci2")
+
+
+@given(nodes=st.integers(2, 8), classes=st.integers(2, 10),
+       alpha=st.sampled_from([0.1, 1.0, 10.0]), seed=st.integers(0, 99))
+def test_dirichlet_rows_are_distributions(nodes, classes, alpha, seed):
+    m = dirichlet_class_probs(nodes, classes, alpha, seed)
+    assert m.shape == (nodes, classes)
+    np.testing.assert_allclose(m.sum(axis=1), 1.0, rtol=1e-6)
+    assert (m >= 0).all()
+
+
+def test_smaller_alpha_more_imbalanced():
+    even = dirichlet_class_probs(5, 10, 100.0, 0)
+    skew = dirichlet_class_probs(5, 10, 0.1, 0)
+    assert skew.max() > even.max()

@@ -1,0 +1,139 @@
+"""Network simulator behaviour: ttl-bounded partial consensus, expiry,
+malicious reputation dynamics, stragglers, node failure (paper §III-B, §VI)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.chain.network import (SimConfig, Simulator, fully_connected,
+                                 mean_reputation, ring)
+from repro.chain.node import DFLNode
+from repro.core.reputation import IMPL1, IMPL2
+
+D = 8  # toy model dim
+
+
+def _mk_node(name, seed, acc=0.8, malicious=False, rep=IMPL1, ttl=2,
+             expire=50.0):
+    params = {"w": jnp.full((D,), float(seed))}
+
+    def train_fn(p, _k):
+        return jax.tree.map(lambda x: x + 0.1, p), {}
+
+    def eval_fn(p):
+        return acc
+
+    return DFLNode(name=name, model_structure="toy", params=params,
+                   train_fn=train_fn, eval_fn=eval_fn, rep_impl=rep, ttl=ttl,
+                   malicious=malicious, expire_after=expire,
+                   rng=jax.random.PRNGKey(seed))
+
+
+def test_ttl_bounds_partial_consensus_range():
+    """On a 6-ring with ttl=1, a node's transaction reaches only direct
+    neighbors — the defining property of partial consensus (§III-B)."""
+    names = [f"n{i}" for i in range(6)]
+    nodes = [_mk_node(n, i, ttl=1) for i, n in enumerate(names)]
+    sim = Simulator(nodes, ring(names), lambda p: 0.5,
+                    SimConfig(ticks=80, seed=0, record_every=100))
+    sim.run()
+    # n0's transactions were seen by n1 and n5 (its buffer senders),
+    # never by n3 (distance 3)
+    addr0 = nodes[0].info.address
+    assert addr0 in sim.nodes["n1"].reputation or any(
+        b.sender == addr0 for b in sim.nodes["n1"].buffer)
+    seen_by_n3 = addr0 in sim.nodes["n3"].reputation or any(
+        b.sender == addr0 for b in sim.nodes["n3"].buffer)
+    assert not seen_by_n3
+
+
+def test_ttl2_reaches_distance_two():
+    names = [f"n{i}" for i in range(6)]
+    nodes = [_mk_node(n, i, ttl=2) for i, n in enumerate(names)]
+    sim = Simulator(nodes, ring(names), lambda p: 0.5,
+                    SimConfig(ticks=80, seed=0, record_every=100))
+    sim.run()
+    addr0 = nodes[0].info.address
+    n2_saw = addr0 in sim.nodes["n2"].reputation or any(
+        b.sender == addr0 for b in sim.nodes["n2"].buffer)
+    assert n2_saw
+
+
+def test_expired_transactions_dropped():
+    names = ["a", "b"]
+    nodes = [_mk_node(n, i, expire=0.0) for i, n in enumerate(names)]
+    sim = Simulator(nodes, fully_connected(names), lambda p: 0.5,
+                    SimConfig(ticks=60, seed=0, latency=(2, 4),
+                              record_every=100))
+    sim.run()
+    assert sim.stats["tx_delivered"] == 0
+    assert sim.stats["tx_dropped_expired"] > 0
+
+
+def test_malicious_node_reputation_drops():
+    """1-of-5 malicious (random model) loses reputation fastest (Fig 15)."""
+    names = [f"n{i}" for i in range(5)]
+    nodes = []
+    for i, n in enumerate(names):
+        params = {"w": jnp.full((D,), 1.0)}
+
+        def train_fn(p, _k):
+            return p, {}
+
+        # receivers score received models by closeness to their own weights:
+        # random (malicious) models land far away -> low accuracy
+        def mk_eval(own=params):
+            def eval_fn(recv):
+                d = float(jnp.mean(jnp.abs(recv["w"] - own["w"])))
+                return max(0.0, 1.0 - d)
+            return eval_fn
+
+        node = DFLNode(name=n, model_structure="toy", params=params,
+                       train_fn=train_fn, eval_fn=lambda p: 0.9,
+                       rep_impl=IMPL2, ttl=2, malicious=(i == 0),
+                       rng=jax.random.PRNGKey(i))
+        node.eval_fn = mk_eval()
+        nodes.append(node)
+    sim = Simulator(nodes, fully_connected(names), lambda p: 0.5,
+                    SimConfig(ticks=400, seed=3, record_every=100))
+    sim.run()
+    rep_bad = mean_reputation(nodes[1:], nodes[0].info.address)
+    rep_good = np.mean([
+        mean_reputation([m for m in nodes if m is not n], n.info.address)
+        for n in nodes[1:]])
+    assert rep_bad < rep_good, (rep_bad, rep_good)
+
+
+def test_node_failure_is_survivable():
+    names = [f"n{i}" for i in range(4)]
+    nodes = [_mk_node(n, i) for i, n in enumerate(names)]
+    sim = Simulator(nodes, fully_connected(names), lambda p: 0.5,
+                    SimConfig(ticks=120, seed=1, record_every=100))
+    sim.kill_node("n3")
+    sim.run()
+    assert sim.stats["tx_delivered"] > 0
+    assert all(len(sim.nodes[n].accuracy_history) > 0 for n in names[:3])
+    assert len(sim.nodes["n3"].accuracy_history) == 0
+
+
+def test_straggler_sends_fewer_transactions():
+    names = [f"n{i}" for i in range(3)]
+    nodes = [_mk_node(n, i) for i, n in enumerate(names)]
+    sim = Simulator(nodes, fully_connected(names), lambda p: 0.5,
+                    SimConfig(ticks=200, seed=2, record_every=100))
+    sim.set_straggler("n0", 6)
+    sim.run()
+    sent = {n: sim.nodes[n].ledger.contribution_count() +
+            len(sim.nodes[n].pending_tx) for n in names}
+    assert sent["n0"] < sent["n1"] and sent["n0"] < sent["n2"]
+
+
+def test_fedavg_triggers_at_buffer_size():
+    names = [f"n{i}" for i in range(4)]
+    nodes = [_mk_node(n, i, rep=IMPL1) for i, n in enumerate(names)]  # buffer 5
+    sim = Simulator(nodes, fully_connected(names), lambda p: 0.5,
+                    SimConfig(ticks=150, seed=0, record_every=100))
+    sim.run()
+    assert sim.stats["fedavg_rounds"] > 0
+    for n in nodes:
+        assert len(n.buffer) < IMPL1.buffer_size

@@ -1,0 +1,45 @@
+"""End-to-end launcher tests (subprocess): plain training + checkpoint
+resume, and DFL federated training with a mid-run node failure."""
+import json
+import os
+
+import pytest
+
+PLAIN_RESUME = r"""
+import json, tempfile, os
+from repro.launch import train as t
+d = tempfile.mkdtemp()
+t.main(["--arch", "xlstm-125m", "--smoke", "--steps", "6", "--batch", "2",
+        "--seq", "32", "--ckpt-dir", d, "--ckpt-every", "3"])
+from repro.train import checkpoint as ck
+assert ck.verify_chain(d)
+m = ck.latest_manifest(d)
+assert m["step"] == 6, m["step"]
+# resume and continue
+t.main(["--arch", "xlstm-125m", "--smoke", "--steps", "8", "--batch", "2",
+        "--seq", "32", "--ckpt-dir", d, "--resume"])
+print(json.dumps({"ok": True}))
+"""
+
+DFL_FAILURE = r"""
+import json
+from repro.launch import train as t
+t.main(["--arch", "xlstm-125m", "--smoke", "--dfl", "--fed", "4",
+        "--rounds", "4", "--local-steps", "1", "--ttl", "1",
+        "--batch", "2", "--seq", "32", "--fail-node", "1@2"])
+print(json.dumps({"ok": True}))
+"""
+
+
+def test_plain_train_and_resume(subprocess_runner):
+    res = subprocess_runner(PLAIN_RESUME)
+    assert res.returncode == 0, res.stderr[-2000:]
+    assert json.loads(res.stdout.strip().splitlines()[-1])["ok"]
+    assert "resumed from step 6" in res.stdout
+
+
+def test_dfl_federation_with_failure(subprocess_runner):
+    res = subprocess_runner(DFL_FAILURE, host_devices=4)
+    assert res.returncode == 0, res.stderr[-2000:]
+    assert json.loads(res.stdout.strip().splitlines()[-1])["ok"]
+    assert "ring renumbers 4 -> 3" in res.stdout
