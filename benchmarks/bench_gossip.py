@@ -1,12 +1,13 @@
 """DFL-at-pod-scale benchmark (beyond the paper's tables): collective bytes
-of the DFL gossip round vs synchronous data-parallel all-reduce, and the
-int8-compression saving — the paper's "waive global consensus" claim mapped
-onto the TPU collective roofline term.
+of the DFL gossip round vs synchronous data-parallel all-reduce, the
+int8-compression saving, a gossip-topology sweep, and the vectorized
+simulator's wall-clock speedup over the heap reference at large N.
 
 Derived from lowered HLO (no hardware): per-round cross-fed link bytes for
   * sync DP: grad all-reduce every step  (H steps per round)
-  * DFL:     2*ttl model ppermutes every H steps (fp32 / int8)
-plus wall-clock microbenches of the jitted gossip round on host devices.
+  * DFL:     schedule-permute model gossip every H steps (fp32 / int8)
+plus wall-clock microbenches of the jitted gossip round on host devices and
+a heap-vs-`simlax` wall-clock comparison (paper §VI-D "larger networks").
 """
 from __future__ import annotations
 
@@ -15,11 +16,13 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
+from repro.chain import scenarios, simlax
+from repro.chain.network import SimConfig, Simulator
 from repro.configs import smoke_config
 from repro.core import dfl as dfl_lib
 from repro.core import gossip as gossip_lib
+from repro.core import topology as topology_lib
 from repro.core.reputation import get as get_rep
 from repro.launch import hlo_cost
 from repro.launch.mesh import make_fed_mesh
@@ -30,6 +33,59 @@ def collective_bytes_of(fn, *args):
     lowered = jax.jit(fn).lower(*args)
     txt = lowered.compile().as_text()
     return hlo_cost.analyze(txt)
+
+
+def simulator_speedup(n: int = 256, quick: bool = False):
+    """Heap `Simulator` vs vectorized `LaxSimulator` on one shared toy
+    scenario: seconds/tick each, and the speedup ratio (acceptance: >=10x
+    at >= 256 nodes)."""
+    topo = topology_lib.kregular(n, 2)
+    sc = scenarios.toy_scenario(n, dim=8, malicious=(0,))
+    interval, latency, ttl = 12, 1, 2
+
+    # --- heap reference: a short measured window (it is the slow one)
+    heap_ticks = 4 if quick else 12
+    nodes = sc.make_heap_nodes(rep_impl=get_rep("impl2"), ttl=ttl)
+    names = [f"n{i}" for i in range(n)]
+    heap = Simulator(nodes, topo.as_name_dict(names), sc.heap_test_fn(),
+                     SimConfig(ticks=heap_ticks, seed=0,
+                               train_interval=(interval, interval),
+                               latency=(latency, latency),
+                               record_every=10 ** 9))
+    heap.next_train = {names[i]: 1 + i % interval for i in range(n)}
+    t0 = time.perf_counter()
+    heap.run()
+    heap_wall = time.perf_counter() - t0
+    heap_s_per_tick = heap_wall / heap_ticks
+
+    # --- vectorized engine: full 200-tick run, wall includes trace+compile
+    lax_ticks = 50 if quick else 200
+    cfg = simlax.SimLaxConfig(ticks=lax_ticks,
+                              train_interval=(interval, interval),
+                              latency=latency, ttl=ttl, record_every=20,
+                              seed=0)
+    sim = simlax.LaxSimulator(
+        topology=topo, train_fn=sc.train_fn, eval_fn=sc.eval_fn,
+        test_fn=sc.test_fn, eval_data=sc.eval_data(),
+        rep_impl=get_rep("impl2"), cfg=cfg, malicious=(0,),
+        initial_countdown=[1 + i % interval for i in range(n)])
+    t0 = time.perf_counter()
+    res = sim.run(sc.init_params_stacked())
+    lax_wall = time.perf_counter() - t0
+    lax_s_per_tick = lax_wall / lax_ticks
+
+    out = {
+        "nodes": n, "topology": "kregular2",
+        "heap_ticks": heap_ticks, "heap_wall_s": round(heap_wall, 3),
+        "heap_s_per_tick": round(heap_s_per_tick, 5),
+        "lax_ticks": lax_ticks, "lax_wall_s": round(lax_wall, 3),
+        "lax_s_per_tick": round(lax_s_per_tick, 5),
+        "lax_deliveries": res.stats["deliveries"],
+        "speedup": round(heap_s_per_tick / max(lax_s_per_tick, 1e-9), 1),
+    }
+    print(f"gossip,simlax_speedup,{n}nodes,{out['speedup']}x"
+          f",heap={heap_s_per_tick:.3f}s/tick,lax={lax_s_per_tick:.4f}s/tick")
+    return out
 
 
 def main(quick: bool = False):
@@ -47,15 +103,14 @@ def main(quick: bool = False):
         res = subprocess.run(
             [sys.executable, "-m", "benchmarks.bench_gossip"]
             + (["--quick"] if quick else []),
-            env=env, capture_output=True, text=True, timeout=1200)
+            env=env, capture_output=True, text=True, timeout=2400)
         print(res.stdout, end="")
         if res.returncode != 0:
-            print("gossip,ERROR,", res.stderr[-500:])
-            return {}
-        try:
-            return json.load(open("experiments/bench_gossip.json"))
-        except Exception:
-            return {}
+            # propagate: the CI smoke job must go red when the bench crashes
+            raise RuntimeError(
+                f"bench_gossip child exited {res.returncode}: "
+                + res.stderr[-500:])
+        return json.load(open("experiments/bench_gossip.json"))
     cfg = smoke_config("llama3-8b")
     mesh = make_fed_mesh(F, 1, 1)
     params_n = sum(x.size for x in jax.tree.leaves(
@@ -64,11 +119,11 @@ def main(quick: bool = False):
     vb = {"tokens": jnp.ones((F, 2, 64), jnp.int32),
           "labels": jnp.ones((F, 2, 64), jnp.int32)}
 
-    rows = []
-    for compress, ttl in ((None, 1), ("int8", 1), (None, 2)):
+    def bench_round(*, compress, ttl, topology=None, topo_name="ring"):
         fn = gossip_lib.make_gossip_round(
             dfl_lib.make_lm_eval_fn(cfg), fed_axis="fed", fed_size=F,
-            ttl=ttl, rep_impl=get_rep("impl2"), compress=compress, mesh=mesh)
+            ttl=ttl, rep_impl=get_rep("impl2"), compress=compress, mesh=mesh,
+            topology=topology)
         with mesh:
             res = collective_bytes_of(fn, fed_state["params"], rep_rows, vb)
             jfn = jax.jit(fn)
@@ -81,12 +136,33 @@ def main(quick: bool = False):
                 jax.block_until_ready(o)
             dt = (time.perf_counter() - t0) / reps
         cp_bytes = res.collective_bytes.get("collective-permute", 0)
-        rows.append({"compress": compress, "ttl": ttl,
-                     "permute_bytes_per_round": cp_bytes,
-                     "all_collective_bytes": res.total_collective_bytes,
-                     "wall_s_per_round_cpu": round(dt, 4)})
+        return {"compress": compress, "ttl": ttl, "topology": topo_name,
+                "permute_bytes_per_round": cp_bytes,
+                "permute_count": res.collective_count.get(
+                    "collective-permute", 0),
+                "all_collective_bytes": res.total_collective_bytes,
+                "wall_s_per_round_cpu": round(dt, 4)}
+
+    rows = []
+    for compress, ttl in ((None, 1), ("int8", 1), (None, 2)):
+        row = bench_round(compress=compress, ttl=ttl)
+        rows.append(row)
         print(f"gossip,ttl={ttl},compress={compress},"
-              f"permute_bytes={cp_bytes:.3e},wall={dt*1e6:.0f}us")
+              f"permute_bytes={row['permute_bytes_per_round']:.3e},"
+              f"wall={row['wall_s_per_round_cpu']*1e6:.0f}us")
+
+    # topology sweep: link bytes scale with the permute-schedule size
+    topo_rows = []
+    for topo_name, topo in (("ring", topology_lib.ring(F)),
+                            ("full", topology_lib.full(F)),
+                            ("erdos", topology_lib.erdos_renyi(F, 0.7, 1))):
+        row = bench_round(compress=None, ttl=1, topology=topo,
+                          topo_name=topo_name)
+        topo_rows.append(row)
+        print(f"gossip,topology={topo_name},"
+              f"permutes={row['permute_count']:.0f},"
+              f"permute_bytes={row['permute_bytes_per_round']:.3e},"
+              f"wall={row['wall_s_per_round_cpu']*1e6:.0f}us")
 
     # sync-DP comparison: grads all-reduced across fed every step, H steps/round
     H = 4
@@ -96,9 +172,11 @@ def main(quick: bool = False):
     out = {
         "params": int(params_n),
         "rows": rows,
+        "topology_rows": topo_rows,
         "sync_dp_bytes_per_round_H4": fp32_grad_bytes * H,
         "reduction_fp32": round(fp32_grad_bytes * H / max(dfl_fp32, 1), 2),
         "reduction_int8": round(fp32_grad_bytes * H / max(dfl_int8, 1), 2),
+        "simulator": simulator_speedup(quick=quick),
     }
     print(f"gossip,dfl_vs_syncdp_fp32,{out['reduction_fp32']}x_fewer_link_bytes")
     print(f"gossip,dfl_vs_syncdp_int8,{out['reduction_int8']}x_fewer_link_bytes")
@@ -106,6 +184,8 @@ def main(quick: bool = False):
 
 
 if __name__ == "__main__":
+    import os
     import sys
+    os.makedirs("experiments", exist_ok=True)
     json.dump(main(quick="--quick" in sys.argv),
               open("experiments/bench_gossip.json", "w"), indent=1)

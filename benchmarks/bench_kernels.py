@@ -11,9 +11,7 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import fedavg
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.quantize.ops import dequantize_flat, quantize_flat

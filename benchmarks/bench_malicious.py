@@ -17,17 +17,14 @@ from repro.chain.network import mean_reputation
 from repro.core.reputation import get as get_rep
 
 
-def run(impl_name: str, ticks: int, seed: int = 0, nodes_n: int = 5):
+def run(impl_name: str, ticks: int, seed: int = 0, nodes_n: int = 5,
+        topology: str = "full"):
     nodes, test_fn, _ = build_federation(
         num_nodes=nodes_n, rep_impl=get_rep(impl_name), malicious=(0,),
         samples_per_train=12, train_steps=8, seed=seed)
     mal_addr = nodes[0].info.address
-    rep_hist = []
 
-    sim = run_sim(nodes, test_fn, ticks=ticks, seed=seed)
-    # reputation history recorded post-hoc per node record() snapshots
-    for n in nodes[1:]:
-        pass
+    sim = run_sim(nodes, test_fn, ticks=ticks, seed=seed, topology=topology)
     honest = nodes[1:]
     cs = curves(honest)
     final = {k: v["acc"][-1] for k, v in cs.items()}
@@ -36,11 +33,55 @@ def run(impl_name: str, ticks: int, seed: int = 0, nodes_n: int = 5):
         mean_reputation([m for m in honest if m is not n], n.info.address)
         for n in honest]))
     return {
-        "impl": impl_name, "curves": cs, "final": final,
+        "impl": impl_name, "topology": topology, "curves": cs, "final": final,
         "mean_final_honest": sum(final.values()) / len(final),
         "malicious_reputation": rep_mal,
         "honest_reputation": rep_honest,
     }
+
+
+def topology_scale_sweep(quick: bool = False):
+    """Poisoning robustness across gossip topologies and network sizes
+    (paper §VI swept with the vectorized engine — heap can't reach these N)."""
+    from repro.chain import scenarios, simlax
+    from repro.core import topology as topology_lib
+
+    ticks = 120 if quick else 400
+    sizes = (64,) if quick else (64, 256)
+    out = []
+    for n in sizes:
+        mal = tuple(range(max(1, n // 20)))   # 5% poisoners
+        sc = scenarios.toy_scenario(n, dim=8, malicious=mal)
+        for kind, kw in (("full", {}), ("kregular", {"degree": 3}),
+                         ("smallworld", {"degree": 3, "beta": 0.2}),
+                         ("erdos", {"p": min(0.5, 8.0 / n)})):
+            topo = topology_lib.make(kind, n, seed=1, **kw)
+            cfg = simlax.SimLaxConfig(
+                ticks=ticks, train_interval=(10, 10), latency=1, ttl=2,
+                record_every=max(10, ticks // 10), seed=0)
+            sim = simlax.LaxSimulator(
+                topology=topo, train_fn=sc.train_fn, eval_fn=sc.eval_fn,
+                test_fn=sc.test_fn, eval_data=sc.eval_data(),
+                rep_impl=get_rep("impl2"), cfg=cfg, malicious=mal,
+                initial_countdown=[1 + (7 * i) % 10 for i in range(n)])
+            res = sim.run(sc.init_params_stacked())
+            honest = [i for i in range(n) if i not in mal]
+            rec = {
+                "nodes": n, "topology": kind,
+                "malicious_frac": len(mal) / n,
+                "honest_acc": float(res.acc_history[-1][honest].mean()),
+                "malicious_reputation": float(np.mean(
+                    [res.mean_reputation(i) for i in mal])),
+                "honest_reputation": float(np.mean(
+                    [res.mean_reputation(i) for i in honest[:64]])),
+                "deliveries": res.stats["deliveries"],
+            }
+            out.append(rec)
+            print(f"malicious,scale,{n}nodes,{kind},"
+                  f"honest_acc={rec['honest_acc']:.3f},"
+                  f"rep_malicious={rec['malicious_reputation']:.2f},"
+                  f"rep_honest={rec['honest_reputation']:.2f}")
+    return out
 
 
 def main(quick: bool = False):
@@ -57,8 +98,10 @@ def main(quick: bool = False):
               f"{out[1]['mean_final_honest'] >= out[0]['mean_final_honest']}")
         print(f"malicious,reputation_detects_attacker,"
               f"{all(r['malicious_reputation'] < r['honest_reputation'] for r in out)}")
-    return out
+    return {"paper": out, "topology_scale": topology_scale_sweep(quick)}
 
 
 if __name__ == "__main__":
+    import os
+    os.makedirs("experiments", exist_ok=True)
     json.dump(main(), open("experiments/bench_malicious.json", "w"), indent=1)

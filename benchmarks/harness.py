@@ -17,8 +17,8 @@ import numpy as np
 from repro.chain.network import SimConfig, Simulator, fully_connected
 from repro.chain.node import DFLNode
 from repro.configs.lenet_dfl import CONFIG as LCFG
-from repro.core.reputation import ReputationImpl, get as get_rep
-from repro.data.partition import dirichlet_class_probs, iid_class_probs
+from repro.core.reputation import ReputationImpl
+from repro.data.partition import iid_class_probs
 from repro.data.synthetic import SyntheticMnist
 from repro.models import lenet
 from repro.optim import caffe_inv, sgd_momentum
@@ -181,9 +181,17 @@ def build_federation(*, num_nodes: int, rep_impl: ReputationImpl,
 
 
 def run_sim(nodes, test_fn, *, ticks: int, seed: int = 0,
-            train_interval=(8, 16), record_every: int = 10):
+            train_interval=(8, 16), record_every: int = 10,
+            topology: str = "full", **topology_kw):
+    """topology: any repro.core.topology kind ("full" = the paper's §VI)."""
     names = [n.name for n in nodes]
-    sim = Simulator(nodes, fully_connected(names), test_fn,
+    if topology == "full":
+        adj = fully_connected(names)
+    else:
+        from repro.core import topology as topology_lib
+        adj = topology_lib.make(topology, len(names),
+                                **topology_kw).as_name_dict(names)
+    sim = Simulator(nodes, adj, test_fn,
                     SimConfig(ticks=ticks, seed=seed,
                               train_interval=train_interval,
                               record_every=record_every))

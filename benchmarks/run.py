@@ -36,17 +36,30 @@ def _summarize(name, data):
             for r in data:
                 print(f"noniid,Dir5({r['alpha']}),final_acc={r['mean_final']:.3f}")
         elif name == "malicious":
-            for r in data:
+            rows = data["paper"] if isinstance(data, dict) else data
+            for r in rows:
                 print(f"malicious,{r['impl']},"
                       f"honest_acc={r['mean_final_honest']:.3f},"
                       f"rep_malicious={r['malicious_reputation']:.2f}")
+            if isinstance(data, dict):
+                for r in data.get("topology_scale", []):
+                    print(f"malicious,scale,{r['nodes']}nodes,{r['topology']},"
+                          f"honest_acc={r['honest_acc']:.3f},"
+                          f"rep_malicious={r['malicious_reputation']:.2f}")
         elif name == "gossip":
             for row in data.get("rows", []):
                 print(f"gossip,ttl={row['ttl']},compress={row['compress']},"
                       f"permute_bytes={row['permute_bytes_per_round']:.3e}")
+            for row in data.get("topology_rows", []):
+                print(f"gossip,topology={row['topology']},"
+                      f"permute_bytes={row['permute_bytes_per_round']:.3e}")
             if "reduction_fp32" in data:
                 print(f"gossip,dfl_vs_syncdp_fp32,{data['reduction_fp32']}x")
                 print(f"gossip,dfl_vs_syncdp_int8,{data['reduction_int8']}x")
+            if data.get("simulator"):
+                s = data["simulator"]
+                print(f"gossip,simlax_speedup,{s['nodes']}nodes,"
+                      f"{s['speedup']}x")
         elif name == "kernels":
             for r in data:
                 print(f"kernels,{r['kernel']},{r['s_per_call']*1e6:.0f}us_per_call")

@@ -8,8 +8,6 @@ repro/launch/dryrun.py --dfl).
 
     PYTHONPATH=src python examples/federated_lm.py
 """
-import sys
-
 from repro.launch import train as train_mod
 
 

@@ -3,9 +3,9 @@ the paper's §VI experiment in ~40 lines against the public API.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
+import os
+import sys
 
-import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "benchmarks"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 

@@ -16,7 +16,6 @@ import random
 from typing import Callable, Dict, List, Optional, Sequence
 
 from repro.chain.node import DFLNode
-from repro.chain.types import Transaction
 
 
 @dataclasses.dataclass

@@ -1,0 +1,307 @@
+"""Vectorized tick simulator: the paper's §VI-D network experiments at
+thousand-node scale.
+
+The heap `Simulator` (repro.chain.network) walks a Python event queue one
+message at a time — faithful, but tens of nodes at most. This engine replays
+the same tick process as ONE jitted ``lax.scan`` over ticks with every
+per-node action vectorized:
+
+* node train steps are ``vmap``'d over the federation;
+* message delivery is a masked gather/scatter over the topology's adjacency:
+  ``arrive[dst, src]`` holds the delivery tick of the in-flight model from
+  ``src`` (INT32_MAX when none), set at broadcast time to
+  ``t + hop_distance * latency`` for every node within ``ttl`` hops — with
+  deterministic per-hop latency this is exactly the heap simulator's
+  first-arrival (duplicate-dropping) flood;
+* the FedAvg buffer is the streaming form of Eq. 3 (weighted sum + weight
+  total + count) plus a running (min accuracy, argmin sender) pair for the
+  reputation punishment, all (N,) / (N, N) arrays;
+* latency, train countdowns and straggler factors are integer tick counters
+  carried in arrays.
+
+Scope: train/broadcast/receipt/FedAvg/reputation dynamics — the metrics the
+paper's figures plot. Block assembly, signatures and ledger bookkeeping stay
+in the heap simulator, which remains the behavioral reference; `simlax` is
+validated against it on shared scenarios (tests/test_simlax.py).
+
+Deliberate approximations vs the heap reference (all vanish in aggregate,
+see the parity test):
+* a FedAvg round consumes the WHOLE pending buffer at end-of-tick, not
+  exactly ``buffer_size`` entries mid-tick;
+* exactly one worst sender is punished per round (ties are measure-zero for
+  continuous accuracies);
+* a node re-broadcasting before its previous model finished propagating
+  overwrites the in-flight snapshot (never happens when
+  ``min train interval > ttl * latency``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import topology as topology_lib
+from repro.core.reputation import ReputationImpl
+
+_NEVER = np.iinfo(np.int32).max
+_EPS = 1e-12
+
+
+@dataclasses.dataclass(frozen=True)
+class SimLaxConfig:
+    ticks: int = 200
+    train_interval: tuple = (8, 16)   # uniform random ticks between trains
+    latency: int = 2                  # per-hop delivery delay (ticks)
+    ttl: int = 2                      # flood radius (hops)
+    record_every: int = 10
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class SimLaxResult:
+    params: object                    # pytree, leaves (N, ...)
+    reputation: np.ndarray            # (N, N) row i = node i's local view
+    acc_history: np.ndarray           # (num_records, N) test accuracy
+    record_ticks: np.ndarray          # (num_records,)
+    stats: dict                       # broadcasts / deliveries / fedavg_rounds
+
+    def mean_reputation(self, target: int) -> float:
+        """target's reputation averaged over other nodes' local views
+        (paper Fig 15/17 metric)."""
+        n = self.reputation.shape[0]
+        others = [i for i in range(n) if i != target]
+        return float(self.reputation[others, target].mean())
+
+
+class LaxSimulator:
+    """Drives a vectorized federation over a virtual-time network.
+
+    train_fn(params, key) -> params          one node, vmap'd over N
+    eval_fn(params, eval_data_i) -> acc      receiver's receipt measurement
+    test_fn(params) -> acc                   global test metric, vmap'd
+    eval_data: pytree, leaves (N, ...)       per-receiver validation data
+    """
+
+    def __init__(self, *, topology: topology_lib.Topology,
+                 train_fn: Callable, eval_fn: Callable, test_fn: Callable,
+                 eval_data, rep_impl: ReputationImpl, cfg: SimLaxConfig,
+                 malicious: Sequence[int] = (),
+                 stragglers: Optional[dict] = None,
+                 dead: Sequence[int] = (),
+                 initial_countdown: Optional[Sequence[int]] = None):
+        self.topology = topology
+        self.cfg = cfg
+        self.rep_impl = rep_impl
+        n = topology.num_nodes
+
+        if cfg.latency < 1:
+            raise ValueError(
+                "latency must be >= 1 tick (0 would schedule arrivals at "
+                "the already-processed current tick and drop every message)")
+        alive = np.ones((n,), np.bool_)
+        alive[list(dead)] = False
+        self.alive = alive
+        # flooding routes only through alive nodes
+        adj = topology.adj & alive[None, :] & alive[:, None]
+        dist = topology_lib.hop_distance_from_adj(adj)
+        reach = (dist >= 1) & (dist <= cfg.ttl)
+        self._reach = jnp.asarray(reach)
+        delay = np.where(reach, dist * cfg.latency, 0).astype(np.int32)
+        self._delay = jnp.asarray(delay)
+
+        mal = np.zeros((n,), np.bool_)
+        mal[list(malicious)] = True
+        self._malicious = jnp.asarray(mal)
+        strag = np.ones((n,), np.int32)
+        for k, v in (stragglers or {}).items():
+            strag[k] = v
+        self._straggler = jnp.asarray(strag)
+        self._alive_j = jnp.asarray(alive)
+
+        self._train_fn = train_fn
+        self._eval_fn = eval_fn
+        self._test_fn = test_fn
+        self._eval_data = eval_data
+        self._initial_countdown = (
+            None if initial_countdown is None
+            else jnp.asarray(np.asarray(initial_countdown, np.int32)))
+
+    # ------------------------------------------------------------------ pieces
+    def _interval(self, key):
+        lo, hi = self.cfg.train_interval
+        base = (jnp.full(key.shape[:-1] or (), lo, jnp.int32) if lo == hi
+                else jax.random.randint(key, (), lo, hi + 1, jnp.int32))
+        return base
+
+    def _poison(self, key, params_like):
+        leaves, treedef = jax.tree.flatten(params_like)
+        keys = jax.random.split(key, len(leaves))
+        bad = [jax.random.normal(k, l.shape, l.dtype)
+               if jnp.issubdtype(l.dtype, jnp.floating) else l
+               for k, l in zip(keys, leaves)]
+        return jax.tree.unflatten(treedef, bad)
+
+    # --------------------------------------------------------------------- run
+    def run(self, params0):
+        """params0: pytree with leading N dim. Returns SimLaxResult."""
+        cfg = self.cfg
+        n = self.topology.num_nodes
+        rep_impl = self.rep_impl
+        alive = self._alive_j
+        reach, delay = self._reach, self._delay
+        malicious, straggler = self._malicious, self._straggler
+        eval_data = self._eval_data
+        train_v = jax.vmap(self._train_fn)
+        test_v = jax.vmap(self._test_fn)
+        # accs[dst, src] = eval of src's in-flight model on dst's data
+        def pair_eval_all(sent, data):
+            return jax.vmap(
+                lambda d: jax.vmap(lambda s: self._eval_fn(s, d))(sent)
+            )(data)
+
+        key0 = jax.random.PRNGKey(cfg.seed)
+        zeros_like_params = jax.tree.map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), params0)
+
+        init = dict(
+            params=params0,
+            sent=jax.tree.map(jnp.zeros_like, params0),
+            arrive=jnp.full((n, n), _NEVER, jnp.int32),
+            rep=jnp.full((n, n), rep_impl.initial, jnp.float32),
+            acc_sum=zeros_like_params,
+            w_sum=jnp.zeros((n,), jnp.float32),
+            buf_cnt=jnp.zeros((n,), jnp.int32),
+            min_acc=jnp.full((n,), jnp.inf, jnp.float32),
+            min_sender=jnp.zeros((n,), jnp.int32),
+            # heap parity: the FIRST countdown is not straggler-scaled
+            next_train=(self._initial_countdown
+                        if self._initial_countdown is not None
+                        else jax.vmap(self._interval)(
+                            jax.random.split(
+                                jax.random.fold_in(key0, 12345), n))),
+            broadcasts=jnp.zeros((n,), jnp.int32),
+            deliveries=jnp.zeros((), jnp.int32),
+            fedavg_rounds=jnp.zeros((), jnp.int32),
+        )
+
+        def body(state, t):
+            key_t = jax.random.fold_in(key0, t)
+
+            # ---- 1. deliveries: models whose tick counter hits t
+            due = (state["arrive"] == t) & alive[:, None]    # (dst, src)
+            accs = pair_eval_all(state["sent"], eval_data)   # (dst, src)
+            accs = jnp.where(due, accs, 0.0)
+            w = state["rep"] * accs * due                    # Eq. 2 per pair
+            acc_sum = jax.tree.map(
+                lambda a, s: a + jnp.einsum(
+                    "ds,s...->d...", w, s.astype(jnp.float32)),
+                state["acc_sum"], state["sent"])
+            w_sum = state["w_sum"] + w.sum(axis=1)
+            buf_cnt = state["buf_cnt"] + due.sum(axis=1).astype(jnp.int32)
+            # running (min acc, argmin sender) for the punishment
+            masked = jnp.where(due, accs, jnp.inf)           # (dst, src)
+            batch_min = masked.min(axis=1)
+            batch_arg = masked.argmin(axis=1).astype(jnp.int32)
+            better = batch_min < state["min_acc"]
+            min_acc = jnp.where(better, batch_min, state["min_acc"])
+            min_sender = jnp.where(better, batch_arg, state["min_sender"])
+            arrive = jnp.where(due, _NEVER, state["arrive"])
+
+            # ---- 2. weighted FedAvg (Eq. 3) where the buffer filled up
+            fire = buf_cnt >= rep_impl.buffer_size           # (N,)
+            safe = w_sum > _EPS
+            apply = fire & safe
+
+            def leaf(acc, p):
+                avg = acc / jnp.maximum(w_sum, _EPS).reshape(
+                    (-1,) + (1,) * (acc.ndim - 1))
+                out = 0.5 * (avg + p.astype(jnp.float32))
+                keep = apply.reshape((-1,) + (1,) * (acc.ndim - 1))
+                return jnp.where(keep, out, p.astype(jnp.float32)).astype(
+                    p.dtype)
+
+            params = jax.tree.map(leaf, acc_sum, state["params"])
+            # punish the worst sender of each fired buffer (§IV-D1)
+            pen = jnp.zeros((n, n), jnp.float32).at[
+                jnp.arange(n), min_sender].add(
+                jnp.where(fire & (min_acc < jnp.inf), rep_impl.penalty, 0.0))
+            rep = jnp.clip(state["rep"] - pen, rep_impl.floor,
+                           rep_impl.initial)
+            # reset consumed buffers
+            keep1 = ~fire
+            acc_sum = jax.tree.map(
+                lambda a: a * keep1.reshape((-1,) + (1,) * (a.ndim - 1)),
+                acc_sum)
+            w_sum = w_sum * keep1
+            buf_cnt = buf_cnt * keep1
+            min_acc = jnp.where(fire, jnp.inf, min_acc)
+            min_sender = jnp.where(fire, 0, min_sender)
+
+            # ---- 3. train + broadcast where the countdown expired
+            next_train = state["next_train"] - 1
+            trains = (next_train <= 0) & alive                # (N,)
+            tkeys = jax.random.split(jax.random.fold_in(key_t, 0), n)
+            trained = train_v(params, tkeys)
+            params = jax.tree.map(
+                lambda new, old: jnp.where(
+                    (trains & ~malicious).reshape(
+                        (-1,) + (1,) * (new.ndim - 1)),
+                    new, old),
+                trained, params)
+            if bool(np.any(np.asarray(malicious))):
+                pkeys = jax.random.split(jax.random.fold_in(key_t, 1), n)
+                poison = jax.vmap(lambda k: self._poison(
+                    k, jax.tree.map(lambda x: x[0], params0)))(pkeys)
+                outgoing = jax.tree.map(
+                    lambda p, bad: jnp.where(
+                        malicious.reshape((-1,) + (1,) * (p.ndim - 1)),
+                        bad, p),
+                    params, poison)
+            else:
+                outgoing = params
+            sent = jax.tree.map(
+                lambda s, o: jnp.where(
+                    trains.reshape((-1,) + (1,) * (s.ndim - 1)), o, s),
+                state["sent"], outgoing)
+            sched = trains[None, :] & reach                   # (dst, src)
+            arrive = jnp.where(sched, t + delay, arrive)
+            ikeys = jax.random.split(jax.random.fold_in(key_t, 2), n)
+            fresh = jax.vmap(self._interval)(ikeys) * straggler
+            next_train = jnp.where(trains, fresh, next_train)
+
+            new_state = dict(
+                params=params, sent=sent, arrive=arrive, rep=rep,
+                acc_sum=acc_sum, w_sum=w_sum, buf_cnt=buf_cnt,
+                min_acc=min_acc, min_sender=min_sender,
+                next_train=next_train,
+                broadcasts=state["broadcasts"] + trains.astype(jnp.int32),
+                deliveries=state["deliveries"] + due.sum(),
+                fedavg_rounds=state["fedavg_rounds"] + apply.sum(),
+            )
+            # the global test eval can dominate at scale: only run it on
+            # record ticks (the non-record rows are dropped anyway)
+            acc_row = jax.lax.cond(
+                t % cfg.record_every == 0,
+                lambda p: test_v(p).astype(jnp.float32),
+                lambda p: jnp.zeros((n,), jnp.float32),
+                params)
+            return new_state, acc_row
+
+        final, acc_by_tick = jax.lax.scan(
+            body, init, jnp.arange(cfg.ticks, dtype=jnp.int32))
+        rec = np.arange(0, cfg.ticks, cfg.record_every)
+        return SimLaxResult(
+            params=jax.tree.map(np.asarray, final["params"]),
+            reputation=np.asarray(final["rep"]),
+            acc_history=np.asarray(acc_by_tick)[rec],
+            record_ticks=rec,
+            stats={
+                "broadcasts": int(final["broadcasts"].sum()),
+                "broadcasts_per_node": np.asarray(final["broadcasts"]),
+                "deliveries": int(final["deliveries"]),
+                "fedavg_rounds": int(final["fedavg_rounds"]),
+            },
+        )

@@ -8,7 +8,6 @@ receipt's received_at_ttl implements Eq. (1).
 from __future__ import annotations
 
 import dataclasses
-import time
 from dataclasses import dataclass, field
 from typing import List, Optional
 

@@ -1,0 +1,65 @@
+"""Version shims for the jax APIs this repo uses across jax releases.
+
+The codebase targets the modern spellings (``jax.shard_map`` with
+``axis_names``/``check_vma``, ``jax.make_mesh`` with ``axis_types``); CI and
+dev containers may carry an older jax (0.4.x) where the same features live
+under ``jax.experimental.shard_map`` with ``auto``/``check_rep``. Everything
+routes through here so call sites stay on one spelling.
+"""
+from __future__ import annotations
+
+import jax
+
+_HAS_NEW_SHARD_MAP = hasattr(jax, "shard_map")
+
+
+def shard_map(fn, *, mesh=None, in_specs, out_specs, axis_names=None,
+              check_vma=False):
+    """``jax.shard_map`` on new jax; ``jax.experimental.shard_map`` fallback.
+
+    ``axis_names`` is the set of MANUAL axes (new-jax convention). On old jax
+    the complement of ``axis_names`` is passed as ``auto`` and ``check_vma``
+    maps to ``check_rep``.
+    """
+    if _HAS_NEW_SHARD_MAP:
+        kwargs = dict(in_specs=in_specs, out_specs=out_specs,
+                      check_vma=check_vma)
+        if axis_names is not None:
+            kwargs["axis_names"] = set(axis_names)
+        if mesh is not None:
+            kwargs["mesh"] = mesh
+        return jax.shard_map(fn, **kwargs)
+
+    from jax.experimental.shard_map import shard_map as _sm
+    if mesh is None:
+        raise ValueError(
+            "mesh is required with jax<0.6 (no ambient-mesh shard_map)")
+    kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=check_vma)
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+        if auto:
+            kwargs["auto"] = auto
+    return _sm(fn, **kwargs)
+
+
+def pallas_tpu_compiler_params(pltpu, **kwargs):
+    """Pallas-TPU compiler params across the TPUCompilerParams ->
+    CompilerParams rename."""
+    cls = getattr(pltpu, "CompilerParams",
+                  getattr(pltpu, "TPUCompilerParams", None))
+    if cls is None:
+        raise ImportError(
+            "this jax.experimental.pallas.tpu exposes neither CompilerParams "
+            "nor TPUCompilerParams; unsupported pallas version")
+    return cls(**kwargs)
+
+
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` with all-Auto axis types where supported."""
+    try:
+        from jax.sharding import AxisType
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    except (ImportError, TypeError):
+        return jax.make_mesh(shape, axes)

@@ -8,7 +8,7 @@ pure description — no jax state is touched at import time. Model construction
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Sequence
 
 # Layer kinds usable inside a block pattern.

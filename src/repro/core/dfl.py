@@ -23,6 +23,7 @@ from repro import sharding as sh
 from repro.configs.base import ArchConfig, InputShape
 from repro.core import gossip as gossip_lib
 from repro.core import reputation as rep_lib
+from repro.core import topology as topology_lib
 from repro.models import transformer
 from repro.train import step as step_lib
 
@@ -35,6 +36,18 @@ class DFLConfig:
     compress: Optional[str] = None  # None | "int8"
     val_rows: int = 4             # validation microbatch rows per node
     val_seq: int = 1024           # validation sequence length (LM receipts)
+    # gossip graph over the federation axis (repro.core.topology.make)
+    topology: str = "ring"        # ring|kregular|erdos|smallworld|full
+    topology_degree: int = 2      # kregular/smallworld neighbor offsets
+    topology_p: float = 0.25      # erdos edge probability
+    topology_beta: float = 0.2    # smallworld rewiring probability
+    topology_seed: int = 0
+
+    def make_topology(self, fed_size: int) -> topology_lib.Topology:
+        return topology_lib.make(
+            self.topology, fed_size, degree=self.topology_degree,
+            p=self.topology_p, beta=self.topology_beta,
+            seed=self.topology_seed)
 
 
 def fed_axis_for(mesh) -> str:
@@ -137,7 +150,8 @@ def lower_gossip_round(cfg: ArchConfig, shape: InputShape, mesh, rules,
 
     round_fn = gossip_lib.make_gossip_round(
         make_lm_eval_fn(cfg), fed_axis=fed_axis, fed_size=fed_size,
-        ttl=dfl.ttl, rep_impl=rep_impl, compress=dfl.compress, mesh=mesh)
+        ttl=dfl.ttl, rep_impl=rep_impl, compress=dfl.compress, mesh=mesh,
+        topology=dfl.make_topology(fed_size))
 
     with sh.activation_sharding(mesh, grules):
         lowered = jax.jit(

@@ -1,35 +1,43 @@
-"""Partial consensus on a TPU mesh: ttl-bounded ring gossip (paper §III-B).
+"""Partial consensus on a TPU mesh: ttl-bounded gossip (paper §III-B) over an
+arbitrary static topology.
 
 The paper broadcasts model transactions `ttl` hops into a p2p network; every
 receiver measures the model's accuracy on its own data (the receipt) and
 feeds reputation-weighted FedAvg. Here the "network" is the federation axis
-of the mesh (pod axis multi-pod, or the data axis single-pod) and a broadcast
-hop is one ``jax.lax.ppermute`` — the whole round is ONE jitted program:
+of the mesh (pod axis multi-pod, or the data axis single-pod) and the gossip
+graph is a `repro.core.topology.Topology` baked into ONE jitted program: its
+ttl-bounded flood compiles to a static schedule of permutation steps
+(`topology.gossip_schedule` — exact ball for circulant graphs, deduplicated
+colour-class chains otherwise), one ``jax.lax.ppermute`` each:
 
-    for hop in 1..ttl:   (static unroll)
-        fwd <- ppermute(fwd, +1); bwd <- ppermute(bwd, -1)
-        for each received model m from sender s:
-            acc_s = eval(m, my validation microbatch)      # the receipt
-            w_s   = reputation_row[s] * acc_s              # Eq. 2
-            accumulate w_s * m                             # streaming Eq. 3
-    new_model = (sum w m / sum w + my_model) / 2           # Eq. 3
-    reputation_row <- punish lowest-accuracy sender        # impl1/impl2
+    for each step (perm, parent):          (static unroll)
+        payload <- ppermute(parent step's payload or my model, perm)
+        s = senders[step, me]     # -1: broken chain or duplicate delivery
+        acc_s = eval(payload, my validation microbatch)   # the receipt
+        w_s   = reputation_row[s] * acc_s * (s >= 0)      # Eq. 2
+        accumulate w_s * payload                          # streaming Eq. 3
+    new_model = (sum w m / sum w + my_model) / 2              # Eq. 3
+    reputation_row <- punish lowest-accuracy sender           # impl1/impl2
 
-No cross-fed collective other than the 2*ttl permutes: global consensus is
-waived exactly as in the paper. shard_map is manual over the fed axis only;
-data/model stay auto so the model itself keeps its pjit sharding.
+The default topology is the seed's bidirectional ring, which lowers to the
+same 2*ttl collective-permutes as the original hard-wired ``ring_perms``
+implementation. No cross-fed collective other than the schedule's permutes:
+global consensus is waived exactly as in the paper. shard_map is manual over
+the fed axis only; data/model stay auto so the model itself keeps its pjit
+sharding.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro import sharding as sh
 from repro.core import compression, fedavg
+from repro.core import topology as topology_lib
 from repro.core.reputation import ReputationImpl
 
 
@@ -38,6 +46,8 @@ def tree_ppermute(tree, axis_name: str, perm):
 
 
 def ring_perms(n: int):
+    """The seed's hard-wired bidirectional ring (kept as a reference point —
+    `topology.ring(n).perm_schedule()` reproduces exactly these two perms)."""
     fwd = [(i, (i + 1) % n) for i in range(n)]
     bwd = [(i, (i - 1) % n) for i in range(n)]
     return fwd, bwd
@@ -52,11 +62,16 @@ def make_gossip_round(
     rep_impl: ReputationImpl,
     compress: Optional[str] = None,
     mesh=None,
+    topology: Optional[topology_lib.Topology] = None,
 ):
     """Build the jitted gossip round.
 
     eval_fn(params, val_batch) -> accuracy scalar in [0, 1]; evaluated by the
     RECEIVER on its own validation microbatch (the paper's receipt).
+
+    ``topology`` is any `repro.core.topology.Topology` over ``fed_size`` nodes
+    (default: the bidirectional ring, matching the seed lowering). The round
+    costs ``gossip_schedule(topology, ttl).num_collectives`` permutes.
 
     Inputs of the returned fn (all leading-dim fed-sharded):
         fed_params: pytree, leaves (F, ...)
@@ -66,7 +81,12 @@ def make_gossip_round(
     """
     if not 1 <= ttl:
         raise ValueError("ttl must be >= 1")
-    fwd_perm, bwd_perm = ring_perms(fed_size)
+    if topology is None:
+        topology = topology_lib.ring(fed_size)
+    if topology.num_nodes != fed_size:
+        raise ValueError(
+            f"topology has {topology.num_nodes} nodes, fed_size={fed_size}")
+    schedule = topology_lib.gossip_schedule(topology, ttl)
 
     def _send(tree):
         if compress == "int8":
@@ -83,37 +103,61 @@ def make_gossip_round(
                 jax.lax.optimization_barrier(payload), spec)
         return payload
 
-    def _node_fn(params, rep_row, val_batch):
+    def _node_fn(params, rep_row, val_batch, me_arr):
         # leaves arrive with a leading fed dim of size 1 — strip it
         params = jax.tree.map(lambda x: x[0], params)
         rep_row = rep_row[0]                    # (F,)
         val_batch = jax.tree.map(lambda x: x[0], val_batch)
-        me = jax.lax.axis_index(fed_axis)
+        # node id from a fed-sharded iota rather than jax.lax.axis_index:
+        # axis_index lowers to a PartitionId instruction that the SPMD
+        # partitioner rejects when the mesh has additional auto axes
+        me = me_arr[0]
 
-        payload, spec = _send(params)
-        fwd = bwd = payload
+        payload0, spec = _send(params)
         acc_state = fedavg.streaming_init(params)
-        senders, accs = [], []
-        for hop in range(1, ttl + 1):
-            fwd = tree_ppermute(fwd, fed_axis, fwd_perm)
-            bwd = tree_ppermute(bwd, fed_axis, bwd_perm)
-            for payload_h, off in ((fwd, -hop), (bwd, +hop)):
-                sender = jnp.mod(me + off, fed_size)
-                model = _recv(payload_h, spec)
-                acc = eval_fn(model, val_batch)          # receipt accuracy
-                rep = jnp.take(rep_row, sender, axis=0)
-                w = fedavg.model_weights(rep, acc)       # Eq. 2
-                acc_state = fedavg.streaming_add(acc_state, model, w)
-                senders.append(sender)
-                accs.append(acc)
+        senders, accs, valids = [], [], []
+        payloads = []   # payload after each step, for forwarding chains
+        for s, (perm, parent) in enumerate(schedule.steps):
+            src = payload0 if parent < 0 else payloads[parent]
+            payload = tree_ppermute(src, fed_axis, list(perm))
+            payloads.append(payload)
+            sender = jnp.take(jnp.asarray(schedule.senders[s]), me, axis=0)
+            valid = (sender >= 0).astype(jnp.float32)
+            sender = jnp.maximum(sender, 0)
+            model = _recv(payload, spec)
+            # masked steps (broken chain / duplicate delivery) carry zeros
+            # or an already-counted model: mask the receipt so neither a
+            # stray NaN nor a double-count can reach the weights
+            acc = jnp.where(valid > 0, eval_fn(model, val_batch), 0.0)
+            rep = jnp.take(rep_row, sender, axis=0)
+            w = fedavg.model_weights(rep, acc) * valid        # Eq. 2
+            acc_state = fedavg.streaming_add(acc_state, model, w)
+            senders.append(sender)
+            accs.append(acc)
+            valids.append(valid)
         new_params = fedavg.streaming_finish(acc_state, params)  # Eq. 3
         sender_ids = jnp.stack(senders)
         acc_vec = jnp.stack(accs)
-        new_rep = rep_impl.update_row(rep_row, sender_ids, acc_vec)
+        valid_vec = jnp.stack(valids)
+        # invalid receipts: acc pinned above 1.0 so they are never "worst",
+        # and their (clamped-to-0) sender id is never punished
+        updated_rep = rep_impl.update_row(
+            rep_row, sender_ids, jnp.where(valid_vec > 0, acc_vec, 2.0))
+        # punish-the-worst needs competition: a node with a single distinct
+        # sender (degree-1 topologies) would otherwise zero its only
+        # neighbor's reputation and freeze itself out of averaging. The
+        # sender sets are static, so the guard is a baked per-device flag.
+        distinct = jnp.asarray(
+            [len({int(s) for s in schedule.senders[:, i] if s >= 0}) > 1
+             for i in range(fed_size)])
+        new_rep = jnp.where(jnp.take(distinct, me), updated_rep, rep_row)
+        n_valid = jnp.maximum(jnp.sum(valid_vec), 1.0)
         metrics = {
-            "mean_neighbor_acc": jnp.mean(acc_vec),
-            "min_neighbor_acc": jnp.min(acc_vec),
+            "mean_neighbor_acc": jnp.sum(acc_vec * valid_vec) / n_valid,
+            "min_neighbor_acc": jnp.min(
+                jnp.where(valid_vec > 0, acc_vec, jnp.inf)),
             "rep_min": jnp.min(new_rep),
+            "models_received": jnp.sum(valid_vec),
         }
         # restore the leading fed dim for out_specs
         return (
@@ -122,22 +166,22 @@ def make_gossip_round(
             jax.tree.map(lambda x: x[None], metrics),
         )
 
-    def node_fn(params, rep_row, val_batch):
+    def node_fn(params, rep_row, val_batch, me_arr):
         # activation constraints cannot be applied on vma-typed arrays
         # inside the manual region — suppress them for the receipt evals
         with sh.no_activation_sharding():
-            return _node_fn(params, rep_row, val_batch)
+            return _node_fn(params, rep_row, val_batch, me_arr)
 
     def gossip_round(fed_params, rep_rows, val_batch):
-        kwargs = dict(
-            in_specs=(P(fed_axis), P(fed_axis), P(fed_axis)),
+        ids = jnp.arange(fed_size, dtype=jnp.int32)
+        return compat.shard_map(
+            node_fn,
+            mesh=mesh,
+            in_specs=(P(fed_axis), P(fed_axis), P(fed_axis), P(fed_axis)),
             out_specs=(P(fed_axis), P(fed_axis), P(fed_axis)),
             axis_names={fed_axis},
             check_vma=False,
-        )
-        if mesh is not None:
-            kwargs["mesh"] = mesh
-        return jax.shard_map(node_fn, **kwargs)(fed_params, rep_rows, val_batch)
+        )(fed_params, rep_rows, val_batch, ids)
 
     return gossip_round
 
@@ -166,14 +210,13 @@ def make_local_steps(train_step_fn, *, fed_axis: str, num_steps: int = 1,
                 jax.tree.map(lambda x: x[None], metrics))
 
     def local_steps(fed_state, fed_batches):
-        kwargs = dict(
+        return compat.shard_map(
+            node_fn,
+            mesh=mesh,
             in_specs=(P(fed_axis), P(fed_axis)),
             out_specs=(P(fed_axis), P(fed_axis)),
             axis_names={fed_axis},
             check_vma=False,
-        )
-        if mesh is not None:
-            kwargs["mesh"] = mesh
-        return jax.shard_map(node_fn, **kwargs)(fed_state, fed_batches)
+        )(fed_state, fed_batches)
 
     return local_steps

@@ -18,7 +18,6 @@ DFL treats this as a plug-in (§III-E): register custom implementations with
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
 
 import jax.numpy as jnp
 

@@ -1,0 +1,365 @@
+"""Static gossip topologies for the DFL federation (paper §VI-D scale-out).
+
+The paper evaluates a fully-connected 5-node network and leaves "larger
+networks and more complex situations" to its simulator. Related surveys
+(arXiv:2401.17319) stress that the gossip graph shapes both convergence and
+poisoning robustness, so this module makes the graph a first-class, swappable
+object consumed by BOTH execution paths:
+
+* the jitted pod-scale gossip round (`repro.core.gossip`) — the adjacency is
+  decomposed into *permutation schedules*: a set of partial permutations
+  (directed edge colouring) each of which lowers to one
+  ``jax.lax.ppermute`` per hop;
+* the tick simulators (`repro.chain.network` heap reference and the
+  vectorized `repro.chain.simlax`) — as a dense adjacency matrix / name dict.
+
+Supported families (``make(kind, n, ...)``):
+    ring        1-regular ring (the seed's hard-wired graph)
+    kregular    circulant ring with neighbours at offsets ±1..±k
+    erdos       Erdős–Rényi G(n, p), resampled until connected
+    smallworld  Watts–Strogatz: kregular ring with edges rewired w.p. beta
+    full        fully connected (the paper's §VI topology)
+
+Everything here is host-side numpy: graphs are built once, validated, and
+baked into the jitted round as static constants.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+KINDS = ("ring", "kregular", "erdos", "smallworld", "full")
+
+_UNREACH = np.iinfo(np.int32).max
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """An undirected, connected, self-loop-free gossip graph."""
+
+    kind: str
+    adj: np.ndarray  # (N, N) bool, symmetric, zero diagonal
+
+    def __post_init__(self):
+        validate_adjacency(self.adj)
+
+    # ------------------------------------------------------------- basic views
+    @property
+    def num_nodes(self) -> int:
+        return self.adj.shape[0]
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.adj.sum()) // 2
+
+    def degrees(self) -> np.ndarray:
+        return self.adj.sum(axis=1).astype(np.int32)
+
+    def neighbors(self, i: int) -> List[int]:
+        return [int(j) for j in np.flatnonzero(self.adj[i])]
+
+    def as_name_dict(self, names: Sequence[str]) -> Dict[str, List[str]]:
+        """Adjacency in the heap `Simulator`'s {name: [peer, ...]} form."""
+        if len(names) != self.num_nodes:
+            raise ValueError(
+                f"{len(names)} names for {self.num_nodes} nodes")
+        return {names[i]: [names[j] for j in self.neighbors(i)]
+                for i in range(self.num_nodes)}
+
+    # ---------------------------------------------------------------- analysis
+    def hop_distance(self) -> np.ndarray:
+        """(N, N) int32 BFS hop counts; unreachable pairs get INT32_MAX."""
+        return hop_distance_from_adj(self.adj)
+
+    def is_connected(self) -> bool:
+        return bool((self.hop_distance() < _UNREACH).all())
+
+    # ------------------------------------------------------ permutation decomp
+    def perm_schedule(self) -> List[List[tuple]]:
+        """Decompose directed edges into partial permutations.
+
+        Each returned colour class is a list of ``(src, dst)`` pairs in which
+        every node appears at most once as a source and at most once as a
+        destination — exactly the contract of ``jax.lax.ppermute``. Every
+        directed edge (both orientations of each undirected edge) lands in
+        exactly one class; König's bound guarantees max-degree classes exist,
+        the greedy here may use a few more on irregular graphs (harmless: one
+        extra ppermute per extra class).
+
+        Circulant graphs (ring/kregular) are special-cased so the classes come
+        out as the offset permutations [+1, -1, +2, -2, ...] — for ``ring``
+        this reproduces the seed's ``ring_perms`` lowering verbatim.
+        """
+        n = self.num_nodes
+        offsets = _circulant_offsets(self.adj)
+        if offsets is not None:
+            sched = []
+            for k in offsets:
+                sched.append([(i, (i + k) % n) for i in range(n)])
+                if 2 * k != n:  # ±n/2 coincide on even n: one perm suffices
+                    sched.append([(i, (i - k) % n) for i in range(n)])
+            return sched
+        edges = [(i, int(j)) for i in range(n)
+                 for j in np.flatnonzero(self.adj[i])]
+        sched = []
+        while edges:
+            srcs, dsts, cls, rest = set(), set(), [], []
+            for (u, v) in edges:
+                if u in srcs or v in dsts:
+                    rest.append((u, v))
+                else:
+                    srcs.add(u)
+                    dsts.add(v)
+                    cls.append((u, v))
+            sched.append(cls)
+            edges = rest
+        return sched
+
+
+def hop_distance_from_adj(adj: np.ndarray) -> np.ndarray:
+    """BFS hop counts over a raw (possibly partially-masked) adjacency;
+    unreachable pairs get INT32_MAX. No validity requirements — usable on
+    graphs with isolated nodes (e.g. dead-node-masked simulations)."""
+    n = adj.shape[0]
+    dist = np.full((n, n), _UNREACH, np.int32)
+    for s in range(n):
+        dist[s, s] = 0
+        frontier = [s]
+        d = 0
+        while frontier:
+            d += 1
+            nxt = []
+            for u in frontier:
+                for v in np.flatnonzero(adj[u]):
+                    if dist[s, v] == _UNREACH:
+                        dist[s, v] = d
+                        nxt.append(int(v))
+            frontier = nxt
+    return dist
+
+
+def validate_adjacency(adj: np.ndarray) -> None:
+    if adj.ndim != 2 or adj.shape[0] != adj.shape[1]:
+        raise ValueError(f"adjacency must be square, got {adj.shape}")
+    if adj.dtype != np.bool_:
+        raise ValueError("adjacency must be boolean")
+    if adj.shape[0] < 2:
+        raise ValueError("a gossip graph needs at least 2 nodes")
+    if np.diagonal(adj).any():
+        raise ValueError("self-loops are not allowed")
+    if not (adj == adj.T).all():
+        raise ValueError("adjacency must be symmetric (undirected gossip)")
+    if (adj.sum(axis=1) == 0).any():
+        raise ValueError("isolated node: every node needs >= 1 neighbor")
+
+
+def _circulant_offsets(adj: np.ndarray):
+    """If adj is the circulant graph with neighbour offsets ±1..±k, return
+    [1..k]; otherwise None."""
+    n = adj.shape[0]
+    row = adj[0]
+    offs = sorted(int(o) for o in np.flatnonzero(row) if int(o) <= n // 2)
+    ks = [o for o in offs if o <= (n - 1) // 2 or 2 * o == n]
+    if ks != list(range(1, len(ks) + 1)):
+        return None
+    expect = np.zeros((n, n), np.bool_)
+    for k in range(1, len(ks) + 1):
+        for i in range(n):
+            expect[i, (i + k) % n] = expect[i, (i - k) % n] = True
+    return list(range(1, len(ks) + 1)) if (expect == adj).all() else None
+
+
+# ------------------------------------------------------------------ generators
+def ring(n: int) -> Topology:
+    return kregular(n, 1)
+
+
+def kregular(n: int, k: int = 1) -> Topology:
+    """Circulant ring: node i adjacent to i±1..i±k (mod n)."""
+    if k < 1 or (2 * k > n - 1 and not (n % 2 == 0 and k == n // 2)):
+        raise ValueError(f"kregular needs 1 <= k <= (n-1)/2 (or k=n/2, even "
+                         f"n); got n={n}, k={k}")
+    adj = np.zeros((n, n), np.bool_)
+    for d in range(1, k + 1):
+        for i in range(n):
+            adj[i, (i + d) % n] = adj[i, (i - d) % n] = True
+    return Topology("kregular" if k > 1 else "ring", adj)
+
+
+def full(n: int) -> Topology:
+    adj = ~np.eye(n, dtype=np.bool_)
+    return Topology("full", adj)
+
+
+def erdos_renyi(n: int, p: float = 0.2, seed: int = 0,
+                max_tries: int = 200) -> Topology:
+    """G(n, p), resampled (fresh seed each try) until connected."""
+    if not 0.0 < p <= 1.0:
+        raise ValueError(f"erdos needs 0 < p <= 1, got {p}")
+    rng = np.random.RandomState(seed)
+    for _ in range(max_tries):
+        upper = rng.rand(n, n) < p
+        adj = np.triu(upper, 1)
+        adj = adj | adj.T
+        if (adj.sum(axis=1) > 0).all():
+            topo = Topology("erdos", adj)
+            if topo.is_connected():
+                return topo
+    raise ValueError(
+        f"could not sample a connected G({n}, {p}) in {max_tries} tries; "
+        "raise p")
+
+
+def small_world(n: int, k: int = 2, beta: float = 0.2,
+                seed: int = 0) -> Topology:
+    """Watts–Strogatz: kregular ring, each +offset edge rewired w.p. beta."""
+    if not 0.0 <= beta <= 1.0:
+        raise ValueError(f"smallworld needs 0 <= beta <= 1, got {beta}")
+    rng = np.random.RandomState(seed)
+    adj = kregular(n, k).adj.copy()
+    for d in range(1, k + 1):
+        for i in range(n):
+            j = (i + d) % n
+            if not adj[i, j] or rng.rand() >= beta:
+                continue
+            candidates = np.flatnonzero(~adj[i])
+            candidates = candidates[candidates != i]
+            if candidates.size == 0:
+                continue
+            t = int(rng.choice(candidates))
+            adj[i, j] = adj[j, i] = False
+            adj[i, t] = adj[t, i] = True
+    topo = Topology("smallworld", adj)
+    if not topo.is_connected():  # rare at beta<1; rewire again deterministically
+        return small_world(n, k, beta, seed + 1)
+    return topo
+
+
+def make(kind: str, n: int, *, degree: int = 2, p: float = 0.2,
+         beta: float = 0.2, seed: int = 0) -> Topology:
+    """CLI-facing factory: ``--topology ring|kregular|erdos|smallworld|full``."""
+    if kind == "ring":
+        return ring(n)
+    if kind == "kregular":
+        return kregular(n, degree)
+    if kind == "erdos":
+        return erdos_renyi(n, p, seed)
+    if kind == "smallworld":
+        return small_world(n, degree, beta, seed)
+    if kind == "full":
+        return full(n)
+    raise ValueError(f"unknown topology {kind!r}; choose from {KINDS}")
+
+
+# ------------------------------------------------------------ gossip schedules
+@dataclasses.dataclass(frozen=True)
+class GossipSchedule:
+    """Static lowering plan for one gossip round over a topology.
+
+    ``steps``   sequence of (perm, parent) pairs. Each step permutes either
+                the node's own payload (``parent == -1``) or the payload
+                received at an earlier step (``parent`` = that step's index,
+                forming a forwarding chain). One ppermute per step:
+                ``num_collectives == len(steps)``.
+    ``senders`` (num_steps, N) int32: senders[s, i] is the node whose model
+                device i holds after step s, or -1 when nothing new arrives
+                there (broken chain, or a model this receiver already got at
+                an earlier step) — the receiver masks that contribution's
+                weight to zero, so every (receiver, sender) pair is counted
+                AT MOST ONCE per round.
+
+    Coverage: circulant graphs (ring/kregular) get the EXACT ttl-ball — one
+    offset permutation per in-ball distance, each in-ball sender delivered
+    exactly once. Irregular graphs flood along colour-class chains: hop 1
+    covers every direct neighbour exactly once; deeper hops cover the
+    chain-walk subset of the ttl-ball (deduplicated, never double-counted).
+    """
+
+    steps: tuple       # ((perm, parent), ...)
+    senders: np.ndarray
+
+    @property
+    def num_collectives(self) -> int:
+        return len(self.steps)
+
+
+def _circulant_ball_schedule(n: int, k: int, ttl: int):
+    """One permutation per offset in the ttl-ball {1..k*ttl} (mod wrap).
+
+    In a circulant graph the ball of radius ttl is exactly the offsets
+    o <= k*ttl; delivering each by its own one-hop permutation keeps the
+    collective count at 2*k*ttl (the chain lowering's count) while hitting
+    every in-ball sender exactly once — for k=1 this is the seed ring
+    lowering's 2*ttl permutes.
+    """
+    steps, senders = [], []
+    idx = np.arange(n)
+    radius = min(k * ttl, (n - 1) // 2)
+    for o in range(1, radius + 1):
+        steps.append((tuple((i, (i + o) % n) for i in range(n)), -1))
+        senders.append((idx - o) % n)
+        steps.append((tuple((i, (i - o) % n) for i in range(n)), -1))
+        senders.append((idx + o) % n)
+    if n % 2 == 0 and k * ttl >= n // 2:
+        o = n // 2
+        steps.append((tuple((i, (i + o) % n) for i in range(n)), -1))
+        senders.append((idx + o) % n)
+    return steps, np.asarray(senders, np.int32)
+
+
+def gossip_schedule(topo: Topology, ttl: int) -> GossipSchedule:
+    if ttl < 1:
+        raise ValueError("ttl must be >= 1")
+    n = topo.num_nodes
+    offsets = _circulant_offsets(topo.adj)
+    if offsets is not None:
+        steps, senders = _circulant_ball_schedule(n, len(offsets), ttl)
+        return GossipSchedule(steps=tuple(steps), senders=senders)
+
+    # irregular graph: forward along each colour-class chain for ttl hops,
+    # masking out (receiver, sender) pairs already delivered earlier
+    perms = topo.perm_schedule()
+    steps, senders = [], []
+    delivered = np.zeros((n, n), bool)   # [receiver, sender]
+    for perm in perms:
+        recv_from = np.full((n,), -1, np.int64)
+        for (src, dst) in perm:
+            recv_from[dst] = src
+        cur = recv_from.copy()  # after hop 1, device i holds cur[i]'s model
+        parent = -1
+        for h in range(ttl):
+            row = np.full((n,), -1, np.int32)
+            for i in range(n):
+                s = cur[i]
+                if s >= 0 and s != i and not delivered[i, s]:
+                    row[i] = s
+                    delivered[i, s] = True
+            steps.append((tuple(perm), parent))
+            senders.append(row)
+            parent = len(steps) - 1
+            ok = cur >= 0
+            nxt = np.full((n,), -1, np.int64)
+            nxt[ok] = recv_from[cur[ok]]  # extend the backward walk one link
+            cur = nxt
+    # prune steps that deliver nothing (e.g. 2-cycle colour classes bounce
+    # every payload home at even hops) unless a later delivering step
+    # forwards through them — each step costs a full-model ppermute
+    keep = [bool((row >= 0).any()) for row in senders]
+    for s in range(len(steps)):
+        if keep[s]:
+            p = steps[s][1]
+            while p >= 0 and not keep[p]:
+                keep[p] = True
+                p = steps[p][1]
+    remap, kept_steps, kept_senders = {}, [], []
+    for s, (step, row) in enumerate(zip(steps, senders)):
+        if not keep[s]:
+            continue
+        perm, parent = step
+        remap[s] = len(kept_steps)
+        kept_steps.append((perm, remap[parent] if parent >= 0 else -1))
+        kept_senders.append(row)
+    return GossipSchedule(steps=tuple(kept_steps),
+                          senders=np.asarray(kept_senders, np.int32))

@@ -8,7 +8,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import fedavg as fedavg_ref
 from repro.kernels.wfedavg.wfedavg import wfedavg_flat

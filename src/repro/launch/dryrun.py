@@ -43,7 +43,7 @@ def _tree_bytes(tree) -> int:
 
 def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                dfl: bool = False, extra_rules=None, cfg_overrides=None,
-               mesh=None):
+               mesh=None, dfl_cfg=None):
     """Returns (record dict, lowered, compiled). ``mesh`` overrides the
     production mesh (hillclimb experiments re-viewing the same chips)."""
     cfg = get_config(arch)
@@ -65,7 +65,8 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     with mesh, sh.activation_sharding(mesh, rules):
         if dfl:
             from repro.core import dfl as dfl_lib
-            lowered = dfl_lib.lower_gossip_round(cfg, shape, mesh, rules)
+            lowered = dfl_lib.lower_gossip_round(cfg, shape, mesh, rules,
+                                                 dfl=dfl_cfg)
         elif shape.kind == "train":
             state, axes = step_lib.abstract_train_state(cfg)
             batch = step_lib.input_specs(cfg, shape)
@@ -126,6 +127,8 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         "mesh_axes": list(mesh.axis_names),
         "chips": chips,
         "dfl": dfl,
+        "topology": (dfl_cfg.topology if (dfl and dfl_cfg is not None)
+                     else ("ring" if dfl else None)),
         "step_kind": "gossip" if dfl else shape.kind,
         "params": int(total_params),
         "bytes_per_device": {
@@ -150,6 +153,13 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--dfl", action="store_true",
                     help="lower the DFL gossip round instead of the plain step")
+    from repro.core.topology import KINDS  # numpy-only module: safe pre-mesh
+    ap.add_argument("--topology", default="ring", choices=KINDS,
+                    help="gossip graph over the federation axis (--dfl only)")
+    ap.add_argument("--topology-degree", type=int, default=2,
+                    help="kregular/smallworld neighbor offsets per side")
+    ap.add_argument("--ttl", type=int, default=1,
+                    help="gossip flood radius in hops (--dfl only)")
     ap.add_argument("--out", default="experiments/dryrun.json")
     ap.add_argument("--print-hlo", action="store_true")
     args = ap.parse_args()
@@ -164,25 +174,35 @@ def main():
             ap.error("--arch/--shape or --all required")
         cells = [(args.arch, args.shape)]
 
+    dfl_cfg = None
+    if args.dfl:
+        from repro.core.dfl import DFLConfig
+        dfl_cfg = DFLConfig(ttl=args.ttl, topology=args.topology,
+                            topology_degree=args.topology_degree)
+
     results = []
     if os.path.exists(args.out):
         with open(args.out) as f:
             results = json.load(f)
-    done = {(r["arch"], r["shape"], r.get("mesh"), r.get("dfl", False))
+    topo_tag = args.topology if args.dfl else None
+    done = {(r["arch"], r["shape"], r.get("mesh"), r.get("dfl", False),
+             # records predating the topology field were all ring gossip
+             r.get("topology", "ring" if r.get("dfl") else None))
             for r in results if r.get("status") in ("ok", "skip")}
 
     mesh_tag = "2x16x16" if args.multi_pod else "16x16"
     for arch, shape in cells:
-        key = (arch, shape, mesh_tag, args.dfl)
-        skip_key = (arch, shape, None, args.dfl)
+        key = (arch, shape, mesh_tag, args.dfl, topo_tag)
+        skip_key = (arch, shape, None, args.dfl, topo_tag)
         if key in done or skip_key in done:
             print(f"[dryrun] {arch} x {shape} ({mesh_tag}) cached, skipping")
             continue
-        print(f"[dryrun] {arch} x {shape} mesh={mesh_tag} dfl={args.dfl} ...",
-              flush=True)
+        print(f"[dryrun] {arch} x {shape} mesh={mesh_tag} dfl={args.dfl} "
+              f"topology={topo_tag} ...", flush=True)
         try:
             rec, lowered, compiled = lower_cell(
-                arch, shape, multi_pod=args.multi_pod, dfl=args.dfl)
+                arch, shape, multi_pod=args.multi_pod, dfl=args.dfl,
+                dfl_cfg=dfl_cfg)
             if rec["status"] == "ok":
                 print(f"  compiled in {rec['compile_s']}s; "
                       f"flops/dev={rec['roofline']['hlo_flops']:.3e} "

@@ -2,12 +2,11 @@
 jax device state (the dry-run sets XLA_FLAGS before any jax import)."""
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro import compat
 
 
 def _mk(shape, axes):
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):

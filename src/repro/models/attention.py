@@ -15,9 +15,6 @@ and the dry-run lowering path):
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

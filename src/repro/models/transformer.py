@@ -15,7 +15,6 @@ Entry points:
 """
 from __future__ import annotations
 
-import functools
 import math
 from typing import Any
 

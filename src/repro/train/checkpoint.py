@@ -22,7 +22,7 @@ import json
 import os
 import re
 import shutil
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import numpy as np

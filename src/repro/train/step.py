@@ -6,12 +6,10 @@ axes with a mesh; the dry-run lowers the same functions the real launcher runs.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding
 
 from repro import sharding as sh
 from repro.configs.base import ArchConfig, InputShape

@@ -4,7 +4,7 @@ import pytest
 
 from repro.chain import crypto
 from repro.chain.ledger import Ledger
-from repro.chain.types import (Block, BlockConfirmation, NodeInformation,
+from repro.chain.types import (BlockConfirmation, NodeInformation,
                                Receipt, Transaction)
 
 

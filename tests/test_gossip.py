@@ -88,12 +88,105 @@ print(json.dumps({"ok": True, "rel": rel}))
 """
 
 
+TOPOLOGY_GOSSIP = r"""
+import jax, jax.numpy as jnp, numpy as np, json
+from repro.core import gossip as gossip_lib, topology as T
+from repro.core.reputation import IMPL2
+from repro.launch.mesh import make_fed_mesh
+from repro.launch import hlo_cost
+
+F, D = 8, 16
+mesh = make_fed_mesh(F, 1, 1)
+models = jnp.arange(F * D, dtype=jnp.float32).reshape(F, D) / (F * D)
+rep = jnp.ones((F, F))
+def eval_fn(params, vb):
+    return jnp.clip(jnp.mean(params) + 0.5, 0.0, 1.0)
+vb = jnp.zeros((F, 1))
+
+def permute_count(fn):
+    with mesh:
+        txt = jax.jit(fn).lower(models, rep, vb).compile().as_text()
+    return hlo_cost.analyze(txt).collective_count.get("collective-permute", 0)
+
+# 1) ring topology reproduces the seed lowering: exactly 2*ttl permutes
+for ttl in (1, 2):
+    fn = gossip_lib.make_gossip_round(
+        eval_fn, fed_axis="fed", fed_size=F, ttl=ttl, rep_impl=IMPL2,
+        mesh=mesh, topology=T.ring(F))
+    assert permute_count(fn) == 2 * ttl, ttl
+
+# 2) three non-ring topologies lower, execute, and match a host oracle (ttl=1)
+mn = np.asarray(models)
+def acc_of(j): return float(np.clip(mn[j].mean() + 0.5, 0, 1))
+for topo in (T.kregular(F, 2), T.erdos_renyi(F, 0.4, 1),
+             T.small_world(F, 2, 0.3, 0), T.full(F)):
+    fn = gossip_lib.make_gossip_round(
+        eval_fn, fed_axis="fed", fed_size=F, ttl=1, rep_impl=IMPL2,
+        mesh=mesh, topology=topo)
+    sched = T.gossip_schedule(topo, 1)
+    assert permute_count(fn) == sched.num_collectives, topo.kind
+    with mesh:
+        new, new_rep, m = jax.jit(fn)(models, rep, vb)
+    expect = np.zeros((F, D))
+    for i in range(F):
+        nb = topo.neighbors(i)
+        w = np.array([acc_of(j) for j in nb])
+        expect[i] = 0.5 * ((w / w.sum()) @ mn[nb] + mn[i])
+    np.testing.assert_allclose(np.asarray(new), expect, rtol=1e-5)
+    np.testing.assert_array_equal(
+        np.asarray(m["models_received"]), topo.degrees().astype(np.float32))
+
+# 3) kregular ttl=2: the whole ttl-ball, each sender weighted exactly once
+topo, ttl = T.kregular(F, 2), 2
+fn = gossip_lib.make_gossip_round(
+    eval_fn, fed_axis="fed", fed_size=F, ttl=ttl, rep_impl=IMPL2,
+    mesh=mesh, topology=topo)
+with mesh:
+    new, _, m = jax.jit(fn)(models, rep, vb)
+dist = topo.hop_distance()
+expect = np.zeros((F, D))
+for i in range(F):
+    ball = [j for j in range(F) if 1 <= dist[i, j] <= ttl]
+    w = np.array([acc_of(j) for j in ball])
+    expect[i] = 0.5 * ((w / w.sum()) @ mn[ball] + mn[i])
+np.testing.assert_allclose(np.asarray(new), expect, rtol=1e-5)
+np.testing.assert_array_equal(
+    np.asarray(m["models_received"]),
+    ((dist >= 1) & (dist <= ttl)).sum(1).astype(np.float32))
+
+# 4) degree-1 node never punishes its only neighbor (reputation freeze guard)
+adj = np.zeros((F, F), bool)
+for a, b in [(0, 1), (1, 2), (2, 0), (2, 3)] + [(i, (i + 1) % 4) for i in range(4, F - 1)]:
+    adj[a, b] = adj[b, a] = True
+adj[3, 4] = adj[4, 3] = True          # keep the graph connected
+adj[F - 1, 0] = adj[0, F - 1] = True
+deg1 = int(np.flatnonzero(adj.sum(1) == 1)[0]) if (adj.sum(1) == 1).any() else None
+if deg1 is None:
+    adj[5, 6] = adj[6, 5] = False     # force node 6 to degree 1 via 5 only
+topo = T.Topology("custom", adj)
+fn = gossip_lib.make_gossip_round(
+    eval_fn, fed_axis="fed", fed_size=F, ttl=1, rep_impl=IMPL2,
+    mesh=mesh, topology=topo)
+with mesh:
+    _, new_rep, _ = jax.jit(fn)(models, rep, vb)
+rep_np = np.asarray(new_rep)
+for i in range(F):
+    if topo.degrees()[i] == 1:
+        np.testing.assert_array_equal(rep_np[i], np.ones(F))  # no punishment
+    else:
+        assert rep_np[i].min() == 0.95, (i, rep_np[i])        # worst punished
+assert (topo.degrees() == 1).any()    # the scenario really has a deg-1 node
+print(json.dumps({"ok": True}))
+"""
+
+
 @pytest.mark.parametrize("name,code", [
     ("gossip_matches_oracle", GOSSIP_EQUIV),
     ("local_steps_isolated_per_node", LOCAL_ISOLATION),
     ("int8_compressed_gossip_close_to_exact", INT8_GOSSIP),
+    ("arbitrary_topologies_lower_and_match_oracle", TOPOLOGY_GOSSIP),
 ])
 def test_multidevice(subprocess_runner, name, code):
-    res = subprocess_runner(code, host_devices=4)
+    res = subprocess_runner(code, host_devices=8 if "topolog" in name else 4)
     assert res.returncode == 0, res.stderr[-3000:]
     assert json.loads(res.stdout.strip().splitlines()[-1])["ok"]

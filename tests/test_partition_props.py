@@ -1,0 +1,20 @@
+"""Property tests (hypothesis) for the Dirichlet data partition."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # minimal installs still collect the suite
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.data.partition import dirichlet_class_probs  # noqa: E402
+
+settings.register_profile("ci2", max_examples=20, deadline=None)
+settings.load_profile("ci2")
+
+
+@given(nodes=st.integers(2, 8), classes=st.integers(2, 10),
+       alpha=st.sampled_from([0.1, 1.0, 10.0]), seed=st.integers(0, 99))
+def test_dirichlet_rows_are_distributions(nodes, classes, alpha, seed):
+    m = dirichlet_class_probs(nodes, classes, alpha, seed)
+    assert m.shape == (nodes, classes)
+    np.testing.assert_allclose(m.sum(axis=1), 1.0, rtol=1e-6)
+    assert (m >= 0).all()

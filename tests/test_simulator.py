@@ -3,7 +3,6 @@ malicious reputation dynamics, stragglers, node failure (paper §III-B, §VI).""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.chain.network import (SimConfig, Simulator, fully_connected,
                                  mean_reputation, ring)

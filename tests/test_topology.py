@@ -1,0 +1,170 @@
+"""Gossip topology generators, validation, and permutation schedules."""
+import numpy as np
+import pytest
+
+from repro.core import topology as T
+from repro.core.gossip import ring_perms
+
+
+ALL_KINDS = [
+    ("ring", lambda n: T.ring(n)),
+    ("kregular", lambda n: T.kregular(n, 2)),
+    ("erdos", lambda n: T.erdos_renyi(n, 0.35, seed=1)),
+    ("smallworld", lambda n: T.small_world(n, 2, 0.3, seed=0)),
+    ("full", lambda n: T.full(n)),
+]
+
+
+@pytest.mark.parametrize("kind,mk", ALL_KINDS)
+@pytest.mark.parametrize("n", [6, 9, 16])
+def test_generators_valid_and_connected(kind, mk, n):
+    topo = mk(n)
+    T.validate_adjacency(topo.adj)  # symmetric, boolean, no self-loops
+    assert topo.num_nodes == n
+    assert topo.is_connected()
+
+
+def test_degrees():
+    assert (T.kregular(10, 3).degrees() == 6).all()
+    assert (T.full(7).degrees() == 6).all()
+    assert (T.ring(5).degrees() == 2).all()
+    # smallworld rewiring preserves the edge count
+    assert T.small_world(20, 2, 0.5, seed=3).num_edges == T.kregular(20, 2).num_edges
+
+
+@pytest.mark.parametrize("kind,mk", ALL_KINDS)
+def test_perm_schedule_partitions_directed_edges(kind, mk):
+    topo = mk(12)
+    n = topo.num_nodes
+    cover = np.zeros((n, n), int)
+    for cls in topo.perm_schedule():
+        srcs = [s for s, _ in cls]
+        dsts = [d for _, d in cls]
+        # a ppermute-able partial permutation: each node sends/receives <= once
+        assert len(set(srcs)) == len(srcs)
+        assert len(set(dsts)) == len(dsts)
+        for s, d in cls:
+            cover[s, d] += 1
+    np.testing.assert_array_equal(cover, topo.adj.astype(int))
+
+
+def test_ring_schedule_reproduces_seed_ring_perms():
+    for n in (4, 6, 11):
+        fwd, bwd = ring_perms(n)
+        sched = [list(c) for c in T.ring(n).perm_schedule()]
+        assert sched == [fwd, bwd]
+
+
+def _delivery_counts(gs, n):
+    got = np.zeros((n, n), int)
+    for row in gs.senders:
+        for i, s in enumerate(row):
+            if s >= 0:
+                got[i, s] += 1
+    return got
+
+
+def test_gossip_schedule_ring_senders_closed_form():
+    n, ttl = 8, 3
+    gs = T.gossip_schedule(T.ring(n), ttl)
+    assert gs.num_collectives == 2 * ttl  # the seed lowering's permute count
+    idx = np.arange(n)
+    # one ±offset step per in-ball distance: senders at ∓1, ±1, ∓2, ...
+    for h in range(ttl):
+        np.testing.assert_array_equal(gs.senders[2 * h], (idx - (h + 1)) % n)
+        np.testing.assert_array_equal(gs.senders[2 * h + 1],
+                                      (idx + (h + 1)) % n)
+
+
+def test_gossip_schedule_hop1_covers_every_neighbor_once():
+    topo = T.erdos_renyi(14, 0.3, seed=2)
+    gs = T.gossip_schedule(topo, 1)
+    np.testing.assert_array_equal(_delivery_counts(gs, 14),
+                                  topo.adj.astype(int))
+
+
+@pytest.mark.parametrize("n,k,ttl", [(8, 2, 2), (10, 2, 3), (9, 3, 2)])
+def test_circulant_ttl_ball_exact_no_duplicates(n, k, ttl):
+    """kregular at ttl>=2: every node in the ttl-ball delivered EXACTLY once
+    (the chain lowering double-delivered overlap offsets and missed the
+    ball's edge)."""
+    topo = T.kregular(n, k)
+    gs = T.gossip_schedule(topo, ttl)
+    dist = topo.hop_distance()
+    ball = ((dist >= 1) & (dist <= ttl)).astype(int)
+    np.testing.assert_array_equal(_delivery_counts(gs, n), ball)
+
+
+def test_irregular_schedule_prunes_useless_steps():
+    """Steps that deliver to nobody (2-cycle colour classes bounce payloads
+    home at even hops) cost a full-model ppermute each — they must be pruned
+    unless a delivering step forwards through them."""
+    for seed in range(5):
+        topo = T.erdos_renyi(12, 0.3, seed=seed)
+        for ttl in (2, 3):
+            gs = T.gossip_schedule(topo, ttl)
+            parents = {p for (_, p) in gs.steps if p >= 0}
+            for s, (_, _p) in enumerate(gs.steps):
+                delivers = bool((gs.senders[s] >= 0).any())
+                assert delivers or s in parents, (seed, ttl, s)
+
+
+def test_irregular_multittl_never_double_delivers():
+    topo = T.erdos_renyi(12, 0.35, seed=1)
+    gs = T.gossip_schedule(topo, 2)
+    counts = _delivery_counts(gs, 12)
+    assert counts.max() <= 1
+    # hop-1 coverage (direct neighbours) is always complete
+    assert ((counts - topo.adj.astype(int)) >= 0)[topo.adj].all()
+    # chains only walk within the ttl-ball
+    dist = topo.hop_distance()
+    assert (counts[dist > 2] == 0).all()
+    assert np.diagonal(counts).sum() == 0
+
+
+def test_hop_distance_ring():
+    n = 10
+    dist = T.ring(n).hop_distance()
+    for j in range(n):
+        assert dist[0, j] == min(j, n - j)
+
+
+def test_as_name_dict_matches_heap_helpers():
+    from repro.chain import network
+    names = [f"n{i}" for i in range(6)]
+    assert T.full(6).as_name_dict(names) == network.fully_connected(names)
+    got = T.ring(6).as_name_dict(names)
+    want = network.ring(names)
+    assert {k: set(v) for k, v in got.items()} == \
+        {k: set(v) for k, v in want.items()}
+
+
+def test_make_dispatch_and_validation():
+    assert T.make("ring", 8).kind == "ring"
+    assert T.make("kregular", 8, degree=3).degrees()[0] == 6
+    assert T.make("erdos", 8, p=0.5, seed=0).kind == "erdos"
+    assert T.make("smallworld", 8, degree=2, beta=0.1).kind == "smallworld"
+    assert T.make("full", 8).num_edges == 28
+    with pytest.raises(ValueError):
+        T.make("torus", 8)
+    with pytest.raises(ValueError):
+        T.kregular(6, 5)
+    with pytest.raises(ValueError):
+        T.erdos_renyi(6, 0.0)
+    bad = np.ones((4, 4), dtype=bool)  # self-loops
+    with pytest.raises(ValueError):
+        T.validate_adjacency(bad)
+    asym = np.zeros((4, 4), dtype=bool)
+    asym[0, 1] = True
+    with pytest.raises(ValueError):
+        T.validate_adjacency(asym)
+
+
+def test_even_n_full_graph_half_offset_not_double_covered():
+    # the ±n/2 offset is a single permutation on even n; cover must be exact
+    topo = T.full(6)
+    cover = np.zeros((6, 6), int)
+    for cls in topo.perm_schedule():
+        for s, d in cls:
+            cover[s, d] += 1
+    np.testing.assert_array_equal(cover, topo.adj.astype(int))

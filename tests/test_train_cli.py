@@ -1,9 +1,6 @@
 """End-to-end launcher tests (subprocess): plain training + checkpoint
 resume, and DFL federated training with a mid-run node failure."""
 import json
-import os
-
-import pytest
 
 PLAIN_RESUME = r"""
 import json, tempfile, os
