@@ -88,6 +88,19 @@ def simulator_speedup(n: int = 256, quick: bool = False):
     return out
 
 
+def sparse_vs_dense(quick: bool = False):
+    """Per-tick cost of the sparse (budgeted slot) receipt engine vs the
+    dense N^2 oracle at paper-beyond scale (acceptance: >=3x at N=512)."""
+    from benchmarks.harness import engine_pertick_speedup
+    out = engine_pertick_speedup(
+        n=256 if quick else 512, quick=quick)
+    print(f"gossip,sparse_vs_dense,{out['nodes']}nodes,"
+          f"budget={out['delivery_budget']},{out['speedup']}x,"
+          f"dense={out['dense_s_per_tick']:.4f}s/tick,"
+          f"sparse={out['sparse_s_per_tick']:.4f}s/tick")
+    return out
+
+
 def main(quick: bool = False):
     out = {}
     F = min(4, jax.device_count())
@@ -177,6 +190,7 @@ def main(quick: bool = False):
         "reduction_fp32": round(fp32_grad_bytes * H / max(dfl_fp32, 1), 2),
         "reduction_int8": round(fp32_grad_bytes * H / max(dfl_int8, 1), 2),
         "simulator": simulator_speedup(quick=quick),
+        "sparse_vs_dense": sparse_vs_dense(quick=quick),
     }
     print(f"gossip,dfl_vs_syncdp_fp32,{out['reduction_fp32']}x_fewer_link_bytes")
     print(f"gossip,dfl_vs_syncdp_int8,{out['reduction_int8']}x_fewer_link_bytes")

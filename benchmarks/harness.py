@@ -180,6 +180,54 @@ def build_federation(*, num_nodes: int, rep_impl: ReputationImpl,
     return nodes, test_fn, ds
 
 
+def engine_pertick_speedup(n: int = 512, dim: int = 128, *,
+                           quick: bool = False, ttl: int = 2,
+                           degree: int = 2):
+    """Sparse vs dense receipt-delivery engines on one toy scenario:
+    steady-state seconds/tick each and the ratio (acceptance: >=3x at
+    N=512). Per-tick is measured as (wall(T2)-wall(T1))/(T2-T1), min of 2
+    runs each, cancelling trace+compile; dim=128 makes the receipt eval
+    visible against the O(N^2) int bookkeeping both engines share (a real
+    receipt model is far heavier still — see the LeNet scenario)."""
+    import time as _time
+
+    from repro.chain import scenarios, simlax
+    from repro.core import topology as topology_lib
+    from repro.core.reputation import get as get_rep
+
+    topo = topology_lib.kregular(n, degree)
+    mal = tuple(range(max(1, n // 32)))
+    sc = scenarios.toy_scenario(n, dim=dim, malicious=mal)
+    t1, t2 = (12, 96) if quick else (24, 192)
+    out = {"nodes": n, "dim": dim, "topology": f"kregular{degree}",
+           "ttl": ttl}
+    for eng in ("sparse", "dense"):
+        walls = {}
+        for ticks in (t1, t2):
+            cfg = simlax.SimLaxConfig(
+                ticks=ticks, train_interval=(12, 12), latency=1, ttl=ttl,
+                record_every=10 ** 9, seed=0, delivery=eng)
+            sim = simlax.LaxSimulator(
+                topology=topo, train_fn=sc.train_fn, eval_fn=sc.eval_fn,
+                test_fn=sc.test_fn, eval_data=sc.eval_data(),
+                rep_impl=get_rep("impl2"), cfg=cfg, malicious=mal,
+                initial_countdown=[1 + i % 12 for i in range(n)])
+            best = float("inf")
+            for _ in range(2):
+                t0 = _time.perf_counter()
+                sim.run(sc.init_params_stacked())
+                best = min(best, _time.perf_counter() - t0)
+            walls[ticks] = best
+        # floor at 0.1ms/tick: compile-time variance between the two runs
+        # can otherwise swallow the whole sparse measurement
+        out[f"{eng}_s_per_tick"] = round(
+            max((walls[t2] - walls[t1]) / (t2 - t1), 1e-4), 6)
+        out["delivery_budget"] = sim.delivery_budget
+    out["speedup"] = round(
+        out["dense_s_per_tick"] / out["sparse_s_per_tick"], 2)
+    return out
+
+
 def run_sim(nodes, test_fn, *, ticks: int, seed: int = 0,
             train_interval=(8, 16), record_every: int = 10,
             topology: str = "full", **topology_kw):

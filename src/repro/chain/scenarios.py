@@ -1,21 +1,28 @@
-"""Shared toy federation scenarios runnable on BOTH simulator engines.
+"""Shared federation scenarios runnable on BOTH simulator engines.
 
 The heap `Simulator` (behavioral reference) and the vectorized `LaxSimulator`
-must agree on the paper's headline metrics; to compare them we need one
-scenario expressible as heap-side Python callbacks AND as vmappable jax
-functions over stacked arrays. The toy model here is a D-dim vector pulled
-toward a target by each local train step:
+must agree on the paper's headline metrics; to compare them we need scenarios
+expressible as heap-side Python callbacks AND as vmappable jax functions over
+stacked arrays. Two scenarios live here:
 
-    train:   w <- w + LR * (target - w)          (deterministic — no RNG, so
-                                                  both engines walk identical
-                                                  parameter trajectories)
+``ToyScenario`` — a D-dim vector pulled toward a target by each local train
+step (deterministic, so both engines walk identical parameter trajectories):
+
+    train:   w <- w + LR * (target - w)
     receipt: acc(w) = clip(1 - mean|w - target|) (receiver-side measurement;
                                                   poisoned N(0,1) models land
                                                   far from target -> acc ~ 0)
     test:    same closeness metric (the global "accuracy" curve)
 
-Used by tests/test_simlax.py (heap-vs-lax parity) and
-benchmarks/bench_gossip.py (wall-clock speedup at scale).
+``LeNetScenario`` — the paper's REAL §VI-D workload: LeNet-5 on synthetic
+MNIST, non-I.I.D. Dirichlet label shards (`repro.data.partition`), SGD local
+training, receipt accuracy measured on the receiver's own held-out shard
+(§IV-B3), optional poisoned senders. Feasible in `simlax` only with the
+sparse delivery engine (receipt evals cost a real forward pass).
+
+Used by tests/test_simlax.py (heap-vs-lax and sparse-vs-dense parity),
+benchmarks/bench_gossip.py / bench_malicious.py, and
+`repro.launch.dryrun --engine lax`.
 """
 from __future__ import annotations
 
@@ -27,7 +34,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.chain.node import DFLNode
+from repro.configs.lenet_dfl import CONFIG as LENET_CFG
 from repro.core.reputation import ReputationImpl
+from repro.data.partition import dirichlet_class_probs, iid_class_probs
+from repro.data.synthetic import SyntheticMnist
+from repro.models import lenet
 
 LR = 0.1
 
@@ -98,3 +109,172 @@ def toy_scenario(n: int, dim: int = 16, malicious: Sequence[int] = (),
         .astype(np.float32)
     return ToyScenario(dim=dim, target=target, init_w=init_w,
                        malicious=tuple(malicious))
+
+
+# =========================================================== real-model (LeNet)
+@dataclasses.dataclass
+class LeNetScenario:
+    """Paper §VI-D at federation scale: LeNet-5, non-I.I.D. Dirichlet shards,
+    receipt accuracy on the receiver's own held-out data, optional poisoned
+    senders (the `malicious` set is handed to the engine, which swaps those
+    nodes' outgoing models for N(0,1) noise — exactly the paper's §VI-E
+    attack)."""
+
+    class_probs: np.ndarray      # (n, classes) per-node label distribution
+    train_images: np.ndarray     # (n, P, 28, 28, 1) local training pools
+    train_labels: np.ndarray     # (n, P)
+    eval_images: np.ndarray      # (n, E, 28, 28, 1) receipt-eval held-out sets
+    eval_labels: np.ndarray     # (n, E)
+    test_images: np.ndarray      # (T, 28, 28, 1) global I.I.D. test set
+    test_labels: np.ndarray      # (T,)
+    malicious: tuple
+    train_steps: int             # SGD steps per training action
+    batch: int
+    lr: float
+    seed: int
+
+    @property
+    def num_nodes(self) -> int:
+        return self.train_images.shape[0]
+
+    # ------------------------------------------------------------- jax (lax) side
+    def init_params_stacked(self):
+        keys = jax.random.split(jax.random.PRNGKey(self.seed),
+                                self.num_nodes)
+        return jax.vmap(lambda k: lenet.init(k, LENET_CFG))(keys)
+
+    def train_data(self):
+        return {"images": jnp.asarray(self.train_images),
+                "labels": jnp.asarray(self.train_labels)}
+
+    def eval_data(self):
+        return {"images": jnp.asarray(self.eval_images),
+                "labels": jnp.asarray(self.eval_labels)}
+
+    def train_fn(self, params, key, data):
+        """`train_steps` plain-SGD steps on batches resampled from this
+        node's pool (vmapped over the federation by the engine)."""
+        pool = data["labels"].shape[0]
+        idx = jax.random.randint(key, (self.train_steps, self.batch), 0, pool)
+
+        def step(p, ix):
+            b = {"images": data["images"][ix], "labels": data["labels"][ix]}
+            (_, _), g = jax.value_and_grad(
+                lenet.loss_and_acc, has_aux=True)(p, b)
+            return jax.tree.map(lambda a, gg: a - self.lr * gg, p, g), None
+
+        params, _ = jax.lax.scan(step, params, idx)
+        return params
+
+    def eval_fn(self, params, ed):
+        return lenet.accuracy(params, ed["images"], ed["labels"])
+
+    def test_fn(self, params):
+        return lenet.accuracy(params, jnp.asarray(self.test_images),
+                              jnp.asarray(self.test_labels))
+
+    # ------------------------------------------------------------------ heap side
+    def make_heap_nodes(self, *, rep_impl: ReputationImpl, ttl: int,
+                        seed: int = 0) -> List[DFLNode]:
+        """Same scenario as heap-`Simulator` nodes (small N only: every
+        receipt costs a real forward pass, one at a time)."""
+        train_jit = jax.jit(self.train_fn)
+        eval_jit = jax.jit(lenet.accuracy)
+        keys = jax.random.split(jax.random.PRNGKey(self.seed),
+                                self.num_nodes)
+        nodes = []
+        for i in range(self.num_nodes):
+            params = lenet.init(keys[i], LENET_CFG)
+            data_i = {"images": jnp.asarray(self.train_images[i]),
+                      "labels": jnp.asarray(self.train_labels[i])}
+            ei = jnp.asarray(self.eval_images[i])
+            el = jnp.asarray(self.eval_labels[i])
+
+            def train_fn(p, k, data=data_i):
+                return train_jit(p, k, data), {}
+
+            def eval_fn(p, ei=ei, el=el):
+                return float(eval_jit(p, ei, el))
+
+            nodes.append(DFLNode(
+                name=f"n{i}", model_structure="lenet5", params=params,
+                train_fn=train_fn, eval_fn=eval_fn, rep_impl=rep_impl,
+                ttl=ttl, malicious=(i in self.malicious),
+                rng=jax.random.PRNGKey(seed * 1000 + i)))
+        return nodes
+
+    def heap_test_fn(self):
+        eval_jit = jax.jit(lenet.accuracy)
+        ti = jnp.asarray(self.test_images)
+        tl = jnp.asarray(self.test_labels)
+
+        def test_fn(p):
+            return float(eval_jit(p, ti, tl))
+
+        return test_fn
+
+
+def lenet_scenario(n: int, *, alpha: float = 1.0,
+                   malicious: Sequence[int] = (), seed: int = 0,
+                   pool: int = 256, eval_size: int = 64,
+                   test_size: int = 512, train_steps: int = 2,
+                   batch: int = 32, noise: float = 1.5,
+                   lr: float = 0.1) -> LeNetScenario:
+    """Build the §VI-D federation data: Dirichlet(alpha) label shards
+    (``alpha=None`` -> I.I.D.), per-node train pools and held-out receipt
+    sets drawn from the node's OWN distribution, one global I.I.D. test set.
+    noise=1.5 calibrates SyntheticMnist so single-node LeNet saturates in
+    the mid-90s like the paper's MNIST setup (see benchmarks/harness.py)."""
+    ds = SyntheticMnist(seed=seed, noise=noise)
+    if alpha is None:
+        probs = iid_class_probs(n, ds.num_classes)
+    else:
+        probs = dirichlet_class_probs(n, ds.num_classes, alpha, seed=seed)
+    tr_i = np.empty((n, pool, ds.image_size, ds.image_size, 1), np.float32)
+    tr_l = np.empty((n, pool), np.int32)
+    ev_i = np.empty((n, eval_size, ds.image_size, ds.image_size, 1),
+                    np.float32)
+    ev_l = np.empty((n, eval_size), np.int32)
+    for i in range(n):
+        rng = np.random.RandomState(seed * 100 + i)
+        tr_i[i], tr_l[i] = ds.batch(rng, pool, class_probs=probs[i])
+        ev_i[i], ev_l[i] = ds.batch(
+            np.random.RandomState(seed * 100 + i + 5000), eval_size,
+            class_probs=probs[i])
+    te_i, te_l = ds.batch(np.random.RandomState(9999), test_size)
+    return LeNetScenario(
+        class_probs=probs, train_images=tr_i, train_labels=tr_l,
+        eval_images=ev_i, eval_labels=ev_l,
+        test_images=te_i.astype(np.float32), test_labels=te_l.astype(np.int32),
+        malicious=tuple(malicious), train_steps=train_steps, batch=batch,
+        lr=lr, seed=seed)
+
+
+# the calibrated §VI-D data/optimizer recipe — single source for the
+# acceptance test, bench_malicious, and the dryrun CLI sanity pass
+LENET_PAPER_HP = dict(alpha=1.0, pool=384, eval_size=16, test_size=256,
+                      batch=16, lr=0.12)
+
+
+def lenet_paper_setup(n: int = 10, *, ticks: int = 108, train_steps: int = 8,
+                      seed: int = 0, delivery: str = "sparse"):
+    """The calibrated §VI-D acceptance recipe, shared by
+    tests/test_simlax.py::test_lenet_poisoned_federation_reaches_paper_accuracy
+    and benchmarks/bench_malicious.py so they cannot drift apart: 20%
+    poisoned senders, Dirichlet(1) shards, kregular(n, 2) ttl=2, SGD
+    hyperparameters tuned so honest nodes clear 90% mean test accuracy
+    within the default 108 ticks on 2 CPU cores.
+
+    Returns (scenario, malicious, topology, SimLaxConfig, initial_countdown).
+    """
+    from repro.chain import simlax          # one-way dep: simlax <- scenarios
+    from repro.core import topology as topology_lib
+    mal = tuple(range(max(1, n // 5)))      # 20% poisoned senders
+    sc = lenet_scenario(n, malicious=mal, seed=seed,
+                        train_steps=train_steps, **LENET_PAPER_HP)
+    topo = topology_lib.kregular(n, 2)
+    cfg = simlax.SimLaxConfig(ticks=ticks, train_interval=(6, 6), latency=1,
+                              ttl=2, record_every=12, seed=seed,
+                              delivery=delivery)
+    countdown = [3 + (5 * i) % 6 for i in range(n)]
+    return sc, mal, topo, cfg, countdown

@@ -6,7 +6,8 @@ message at a time — faithful, but tens of nodes at most. This engine replays
 the same tick process as ONE jitted ``lax.scan`` over ticks with every
 per-node action vectorized:
 
-* node train steps are ``vmap``'d over the federation;
+* node train steps are ``vmap``'d over the federation (optionally over
+  per-node training data too — real-model scenarios shard a dataset);
 * message delivery is a masked gather/scatter over the topology's adjacency:
   ``arrive[dst, src]`` holds the delivery tick of the in-flight model from
   ``src`` (INT32_MAX when none), set at broadcast time to
@@ -18,6 +19,25 @@ per-node action vectorized:
   reputation punishment, all (N,) / (N, N) arrays;
 * latency, train countdowns and straggler factors are integer tick counters
   carried in arrays.
+
+Receipt evaluation has two interchangeable engines (``SimLaxConfig.delivery``):
+
+``sparse`` (default)
+    Per tick the due ``(dst, src)`` pairs are compacted into a fixed-size
+    slot buffer of width ``budget = max_dst |ball(dst, ttl)|``
+    (`repro.core.topology.delivery_budget` — no receiver can have more
+    in-flight models than its ttl-ball holds senders, so the buffer never
+    overflows). ``eval_fn`` runs once per SLOT via one nested vmap and the
+    weights / running-min are scattered back: per-tick receipt cost is
+    O(N * budget * eval) ≈ O(deliveries * eval) instead of O(N² * eval).
+    This is what makes real receipt models (LeNet, LMs) feasible: the model
+    forward pass dominates and only actually-delivered pairs pay it.
+
+``dense``
+    The original oracle: ``eval_fn`` on all N² ``(dst, src)`` pairs every
+    tick, masked by dueness. Kept as the behavioral reference — the two
+    engines are parity-tested to produce identical event streams and
+    matching state (tests/test_simlax.py).
 
 Scope: train/broadcast/receipt/FedAvg/reputation dynamics — the metrics the
 paper's figures plot. Block assembly, signatures and ledger bookkeeping stay
@@ -31,12 +51,15 @@ see the parity test):
 * exactly one worst sender is punished per round (ties are measure-zero for
   continuous accuracies);
 * a node re-broadcasting before its previous model finished propagating
-  overwrites the in-flight snapshot (never happens when
-  ``min train interval > ttl * latency``).
+  overwrites the in-flight snapshot — ``__init__`` warns when
+  ``min train interval < ttl * latency`` makes that reachable (the heap
+  engine keeps every snapshot, so event streams diverge there; pinned in
+  tests/test_simlax.py).
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable, Optional, Sequence
 
 import jax
@@ -49,6 +72,8 @@ from repro.core.reputation import ReputationImpl
 _NEVER = np.iinfo(np.int32).max
 _EPS = 1e-12
 
+DELIVERY_ENGINES = ("sparse", "dense")
+
 
 @dataclasses.dataclass(frozen=True)
 class SimLaxConfig:
@@ -58,6 +83,7 @@ class SimLaxConfig:
     ttl: int = 2                      # flood radius (hops)
     record_every: int = 10
     seed: int = 0
+    delivery: str = "sparse"          # receipt engine: "sparse" | "dense"
 
 
 @dataclasses.dataclass
@@ -67,6 +93,9 @@ class SimLaxResult:
     acc_history: np.ndarray           # (num_records, N) test accuracy
     record_ticks: np.ndarray          # (num_records,)
     stats: dict                       # broadcasts / deliveries / fedavg_rounds
+    final_state: dict = dataclasses.field(default_factory=dict)
+    # ^ raw end-of-run carry (arrive/w_sum/buf_cnt/min_acc/min_sender as
+    #   numpy) — the engine-parity tests compare it across delivery engines
 
     def mean_reputation(self, target: int) -> float:
         """target's reputation averaged over other nodes' local views
@@ -80,9 +109,11 @@ class LaxSimulator:
     """Drives a vectorized federation over a virtual-time network.
 
     train_fn(params, key) -> params          one node, vmap'd over N
+      (or train_fn(params, key, data) -> params when ``train_data`` given)
     eval_fn(params, eval_data_i) -> acc      receiver's receipt measurement
     test_fn(params) -> acc                   global test metric, vmap'd
     eval_data: pytree, leaves (N, ...)       per-receiver validation data
+    train_data: pytree, leaves (N, ...)      optional per-node training shard
     """
 
     def __init__(self, *, topology: topology_lib.Topology,
@@ -91,7 +122,8 @@ class LaxSimulator:
                  malicious: Sequence[int] = (),
                  stragglers: Optional[dict] = None,
                  dead: Sequence[int] = (),
-                 initial_countdown: Optional[Sequence[int]] = None):
+                 initial_countdown: Optional[Sequence[int]] = None,
+                 train_data=None):
         self.topology = topology
         self.cfg = cfg
         self.rep_impl = rep_impl
@@ -101,6 +133,22 @@ class LaxSimulator:
             raise ValueError(
                 "latency must be >= 1 tick (0 would schedule arrivals at "
                 "the already-processed current tick and drop every message)")
+        if cfg.delivery not in DELIVERY_ENGINES:
+            raise ValueError(
+                f"unknown delivery engine {cfg.delivery!r}; "
+                f"choose from {DELIVERY_ENGINES}")
+        # strict <: deliveries are processed before same-tick re-broadcast,
+        # so interval == ttl*latency still delivers every hop-ttl arrival
+        if cfg.train_interval[0] < cfg.ttl * cfg.latency:
+            warnings.warn(
+                f"min train interval ({cfg.train_interval[0]}) < ttl * "
+                f"latency ({cfg.ttl * cfg.latency}): a node can re-broadcast "
+                "before its previous model finished propagating, and this "
+                "engine's single in-flight snapshot per (dst, src) pair "
+                "overwrites the old delivery — event counts will fall below "
+                "the heap reference's. Raise train_interval or lower "
+                "ttl/latency for exact parity.",
+                stacklevel=2)
         alive = np.ones((n,), np.bool_)
         alive[list(dead)] = False
         self.alive = alive
@@ -111,6 +159,17 @@ class LaxSimulator:
         self._reach = jnp.asarray(reach)
         delay = np.where(reach, dist * cfg.latency, 0).astype(np.int32)
         self._delay = jnp.asarray(delay)
+        # sparse engine: fixed slot-buffer width = the exact worst case of
+        # simultaneous arrivals at one receiver (its ttl-ball size). Slots
+        # are STATIC: slot k of dst is its k-th in-ball sender (ascending
+        # src index, so the masked argmin reproduces the dense engine's
+        # lowest-src tie-break) — a delivery can only come from the ball,
+        # so dueness is a cheap (N, budget) gather, no per-tick compaction.
+        self.delivery_budget = max(
+            1, topology_lib.delivery_budget(adj, cfg.ttl, dist=dist))
+        slot_src = np.argsort(~reach, axis=1, kind="stable")
+        self._slot_src = jnp.asarray(
+            slot_src[:, :self.delivery_budget].astype(np.int32))
 
         mal = np.zeros((n,), np.bool_)
         mal[list(malicious)] = True
@@ -125,6 +184,7 @@ class LaxSimulator:
         self._eval_fn = eval_fn
         self._test_fn = test_fn
         self._eval_data = eval_data
+        self._train_data = train_data
         self._initial_countdown = (
             None if initial_countdown is None
             else jnp.asarray(np.asarray(initial_countdown, np.int32)))
@@ -144,6 +204,54 @@ class LaxSimulator:
                for k, l in zip(keys, leaves)]
         return jax.tree.unflatten(treedef, bad)
 
+    # ------------------------------------------------------------- delivery
+    def _deliver_dense(self, state, due, eval_data):
+        """Oracle: eval ALL N² (dst, src) pairs, mask by dueness."""
+        # accs[dst, src] = eval of src's in-flight model on dst's data
+        accs = jax.vmap(
+            lambda d: jax.vmap(lambda s: self._eval_fn(s, d))(state["sent"])
+        )(eval_data)                                     # (dst, src)
+        accs = jnp.where(due, accs, 0.0)
+        w = state["rep"] * accs * due                    # Eq. 2 per pair
+        acc_sum = jax.tree.map(
+            lambda a, s: a + jnp.einsum(
+                "ds,s...->d...", w, s.astype(jnp.float32)),
+            state["acc_sum"], state["sent"])
+        w_sum = state["w_sum"] + w.sum(axis=1)
+        buf_cnt = state["buf_cnt"] + due.sum(axis=1).astype(jnp.int32)
+        # running (min acc, argmin sender) for the punishment
+        masked = jnp.where(due, accs, jnp.inf)           # (dst, src)
+        batch_min = masked.min(axis=1)
+        batch_sender = masked.argmin(axis=1).astype(jnp.int32)
+        return acc_sum, w_sum, buf_cnt, batch_min, batch_sender
+
+    def _deliver_sparse(self, state, due, eval_data):
+        """Budgeted: gather the (N, budget) static ball slots, eval only
+        those via one nested vmap, scatter weights/min back."""
+        slot_src = self._slot_src                        # (dst, slot)
+        slot_ok = jnp.take_along_axis(due, slot_src, axis=1)
+        # gather the in-ball models once: leaves (N, B, ...)
+        gathered = jax.tree.map(lambda s: s[slot_src], state["sent"])
+        accs = jax.vmap(
+            lambda models, d: jax.vmap(
+                lambda m: self._eval_fn(m, d))(models)
+        )(gathered, eval_data)                           # (dst, slot)
+        accs = jnp.where(slot_ok, accs, 0.0)
+        rep_slot = jnp.take_along_axis(state["rep"], slot_src, axis=1)
+        w = rep_slot * accs * slot_ok                    # Eq. 2 per slot
+        acc_sum = jax.tree.map(
+            lambda a, g: a + jnp.einsum(
+                "nb,nb...->n...", w, g.astype(jnp.float32)),
+            state["acc_sum"], gathered)
+        w_sum = state["w_sum"] + w.sum(axis=1)
+        buf_cnt = state["buf_cnt"] + slot_ok.sum(axis=1).astype(jnp.int32)
+        masked = jnp.where(slot_ok, accs, jnp.inf)       # (dst, slot)
+        batch_min = masked.min(axis=1)
+        arg_slot = masked.argmin(axis=1)
+        batch_sender = jnp.take_along_axis(
+            slot_src, arg_slot[:, None], axis=1)[:, 0]
+        return acc_sum, w_sum, buf_cnt, batch_min, batch_sender
+
     # --------------------------------------------------------------------- run
     def run(self, params0):
         """params0: pytree with leading N dim. Returns SimLaxResult."""
@@ -154,13 +262,14 @@ class LaxSimulator:
         reach, delay = self._reach, self._delay
         malicious, straggler = self._malicious, self._straggler
         eval_data = self._eval_data
-        train_v = jax.vmap(self._train_fn)
+        train_data = self._train_data
+        if train_data is None:
+            train_v = jax.vmap(self._train_fn)
+        else:
+            train_v = jax.vmap(self._train_fn, in_axes=(0, 0, 0))
         test_v = jax.vmap(self._test_fn)
-        # accs[dst, src] = eval of src's in-flight model on dst's data
-        def pair_eval_all(sent, data):
-            return jax.vmap(
-                lambda d: jax.vmap(lambda s: self._eval_fn(s, d))(sent)
-            )(data)
+        deliver = (self._deliver_sparse if cfg.delivery == "sparse"
+                   else self._deliver_dense)
 
         key0 = jax.random.PRNGKey(cfg.seed)
         zeros_like_params = jax.tree.map(
@@ -190,24 +299,22 @@ class LaxSimulator:
         def body(state, t):
             key_t = jax.random.fold_in(key0, t)
 
-            # ---- 1. deliveries: models whose tick counter hits t
+            # ---- 1. deliveries: models whose tick counter hits t.
+            # On a no-delivery tick every update below is a no-op, so the
+            # (model-forward-pass-heavy) eval work is skipped entirely via
+            # cond — most ticks between broadcast waves cost nothing.
             due = (state["arrive"] == t) & alive[:, None]    # (dst, src)
-            accs = pair_eval_all(state["sent"], eval_data)   # (dst, src)
-            accs = jnp.where(due, accs, 0.0)
-            w = state["rep"] * accs * due                    # Eq. 2 per pair
-            acc_sum = jax.tree.map(
-                lambda a, s: a + jnp.einsum(
-                    "ds,s...->d...", w, s.astype(jnp.float32)),
-                state["acc_sum"], state["sent"])
-            w_sum = state["w_sum"] + w.sum(axis=1)
-            buf_cnt = state["buf_cnt"] + due.sum(axis=1).astype(jnp.int32)
-            # running (min acc, argmin sender) for the punishment
-            masked = jnp.where(due, accs, jnp.inf)           # (dst, src)
-            batch_min = masked.min(axis=1)
-            batch_arg = masked.argmin(axis=1).astype(jnp.int32)
+            acc_sum, w_sum, buf_cnt, batch_min, batch_sender = jax.lax.cond(
+                due.any(),
+                lambda s: deliver(s, due, eval_data),
+                lambda s: (s["acc_sum"], s["w_sum"], s["buf_cnt"],
+                           jnp.full((n,), jnp.inf, jnp.float32),
+                           jnp.zeros((n,), jnp.int32)),
+                state)
             better = batch_min < state["min_acc"]
             min_acc = jnp.where(better, batch_min, state["min_acc"])
-            min_sender = jnp.where(better, batch_arg, state["min_sender"])
+            min_sender = jnp.where(better, batch_sender,
+                                   state["min_sender"])
             arrive = jnp.where(due, _NEVER, state["arrive"])
 
             # ---- 2. weighted FedAvg (Eq. 3) where the buffer filled up
@@ -241,31 +348,44 @@ class LaxSimulator:
             min_sender = jnp.where(fire, 0, min_sender)
 
             # ---- 3. train + broadcast where the countdown expired
+            # (cond-gated like delivery: the vmapped train step + poison
+            # sampling only run on ticks where some countdown expired)
             next_train = state["next_train"] - 1
             trains = (next_train <= 0) & alive                # (N,)
-            tkeys = jax.random.split(jax.random.fold_in(key_t, 0), n)
-            trained = train_v(params, tkeys)
-            params = jax.tree.map(
-                lambda new, old: jnp.where(
-                    (trains & ~malicious).reshape(
-                        (-1,) + (1,) * (new.ndim - 1)),
-                    new, old),
-                trained, params)
-            if bool(np.any(np.asarray(malicious))):
-                pkeys = jax.random.split(jax.random.fold_in(key_t, 1), n)
-                poison = jax.vmap(lambda k: self._poison(
-                    k, jax.tree.map(lambda x: x[0], params0)))(pkeys)
-                outgoing = jax.tree.map(
-                    lambda p, bad: jnp.where(
-                        malicious.reshape((-1,) + (1,) * (p.ndim - 1)),
-                        bad, p),
-                    params, poison)
-            else:
-                outgoing = params
-            sent = jax.tree.map(
-                lambda s, o: jnp.where(
-                    trains.reshape((-1,) + (1,) * (s.ndim - 1)), o, s),
-                state["sent"], outgoing)
+
+            def do_train(operand):
+                params, sent = operand
+                tkeys = jax.random.split(jax.random.fold_in(key_t, 0), n)
+                if train_data is None:
+                    trained = train_v(params, tkeys)
+                else:
+                    trained = train_v(params, tkeys, train_data)
+                params = jax.tree.map(
+                    lambda new, old: jnp.where(
+                        (trains & ~malicious).reshape(
+                            (-1,) + (1,) * (new.ndim - 1)),
+                        new, old),
+                    trained, params)
+                if bool(np.any(np.asarray(malicious))):
+                    pkeys = jax.random.split(jax.random.fold_in(key_t, 1), n)
+                    poison = jax.vmap(lambda k: self._poison(
+                        k, jax.tree.map(lambda x: x[0], params0)))(pkeys)
+                    outgoing = jax.tree.map(
+                        lambda p, bad: jnp.where(
+                            malicious.reshape((-1,) + (1,) * (p.ndim - 1)),
+                            bad, p),
+                        params, poison)
+                else:
+                    outgoing = params
+                sent = jax.tree.map(
+                    lambda s, o: jnp.where(
+                        trains.reshape((-1,) + (1,) * (s.ndim - 1)), o, s),
+                    sent, outgoing)
+                return params, sent
+
+            params, sent = jax.lax.cond(
+                trains.any(), do_train, lambda operand: operand,
+                (params, state["sent"]))
             sched = trains[None, :] & reach                   # (dst, src)
             arrive = jnp.where(sched, t + delay, arrive)
             ikeys = jax.random.split(jax.random.fold_in(key_t, 2), n)
@@ -303,5 +423,12 @@ class LaxSimulator:
                 "broadcasts_per_node": np.asarray(final["broadcasts"]),
                 "deliveries": int(final["deliveries"]),
                 "fedavg_rounds": int(final["fedavg_rounds"]),
+                "delivery": cfg.delivery,
+                "delivery_budget": self.delivery_budget,
+            },
+            final_state={
+                k: np.asarray(final[k])
+                for k in ("arrive", "w_sum", "buf_cnt",
+                          "min_acc", "min_sender", "next_train")
             },
         )

@@ -140,6 +140,37 @@ def hop_distance_from_adj(adj: np.ndarray) -> np.ndarray:
     return dist
 
 
+def ttl_ball_sizes(adj: np.ndarray, ttl: int, *,
+                   dist: np.ndarray | None = None) -> np.ndarray:
+    """(N,) int32: per node, how many OTHER nodes lie within ``ttl`` hops.
+
+    This is the per-receiver in-flight bound of the tick simulators: a flood
+    from ``src`` reaches ``dst`` iff ``1 <= dist(src, dst) <= ttl``, and each
+    (dst, src) pair carries at most one in-flight model at a time, so no tick
+    can deliver more than ``|ball(dst, ttl)|`` models to ``dst``. Works on
+    raw (possibly dead-node-masked) adjacencies like
+    ``hop_distance_from_adj``.
+    """
+    if ttl < 1:
+        raise ValueError("ttl must be >= 1")
+    if dist is None:
+        dist = hop_distance_from_adj(adj)
+    return ((dist >= 1) & (dist <= ttl)).sum(axis=1).astype(np.int32)
+
+
+def delivery_budget(adj: np.ndarray, ttl: int, *,
+                    dist: np.ndarray | None = None) -> int:
+    """Static per-tick slot budget for the sparse delivery engine.
+
+    ``max_dst |ball(dst, ttl)|`` — the exact worst case of simultaneous
+    arrivals at one receiver (every in-ball sender timed so its model lands
+    the same tick). The naive bound ``max_degree * ttl``-ish overcounts on
+    dense graphs and undercounts on irregular ones; the BFS ball is both
+    tight and safe, so the fixed-size slot buffer can never overflow.
+    """
+    return int(ttl_ball_sizes(adj, ttl, dist=dist).max())
+
+
 def validate_adjacency(adj: np.ndarray) -> None:
     if adj.ndim != 2 or adj.shape[0] != adj.shape[1]:
         raise ValueError(f"adjacency must be square, got {adj.shape}")

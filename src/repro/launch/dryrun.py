@@ -145,6 +145,72 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     return record, lowered, compiled
 
 
+def run_lax_federation(args):
+    """--engine lax: drive the vectorized tick simulator end-to-end (toy or
+    LeNet scenario) instead of lowering a mesh step — the quick sanity pass
+    for the §VI-D federation dynamics at a chosen scale/topology/engine."""
+    from repro.chain import scenarios, simlax
+    from repro.core import topology as topology_lib
+    from repro.core.reputation import get as get_rep
+
+    n, ticks = args.nodes, args.ticks
+    ttl = max(1, args.ttl)
+    mal = tuple(range(max(1, n // 10)))   # 10% poisoned senders
+    if args.model == "lenet":
+        # the paper recipe's data/optimizer constants (single source in
+        # scenarios.py), at a CLI-friendly 4 steps per training action
+        sc = scenarios.lenet_scenario(
+            n, malicious=mal, train_steps=4, **scenarios.LENET_PAPER_HP)
+        train_data = sc.train_data()
+        interval = (6, 6)
+    else:
+        sc = scenarios.toy_scenario(n, dim=16, malicious=mal)
+        train_data = None
+        interval = (8, 16)
+    topo = topology_lib.make(args.topology, n, degree=args.topology_degree,
+                             seed=1)
+    cfg = simlax.SimLaxConfig(
+        ticks=ticks, train_interval=interval, latency=1,
+        ttl=ttl, record_every=max(1, ticks // 8), seed=0,
+        delivery=args.delivery)
+    sim = simlax.LaxSimulator(
+        topology=topo, train_fn=sc.train_fn, eval_fn=sc.eval_fn,
+        test_fn=sc.test_fn, eval_data=sc.eval_data(),
+        rep_impl=get_rep("impl2"), cfg=cfg, malicious=mal,
+        train_data=train_data,
+        initial_countdown=[1 + (5 * i) % interval[0] for i in range(n)])
+    t0 = time.time()
+    res = sim.run(sc.init_params_stacked())
+    wall = time.time() - t0
+    honest = [i for i in range(n) if i not in mal]
+    record = {
+        "engine": "lax", "model": args.model, "status": "ok",
+        "delivery": args.delivery, "topology": args.topology,
+        "ttl": ttl, "nodes": n, "ticks": ticks,
+        "delivery_budget": res.stats["delivery_budget"],
+        "broadcasts": res.stats["broadcasts"],
+        "deliveries": res.stats["deliveries"],
+        "fedavg_rounds": res.stats["fedavg_rounds"],
+        "honest_acc": float(res.acc_history[-1][honest].mean()),
+        "malicious_reputation": float(
+            sum(res.mean_reputation(i) for i in mal) / len(mal)),
+        "wall_s": round(wall, 1),
+    }
+    print(f"[dryrun] lax {args.model} n={n} ticks={ticks} "
+          f"delivery={args.delivery} budget={record['delivery_budget']} "
+          f"deliveries={record['deliveries']} "
+          f"honest_acc={record['honest_acc']:.3f} wall={wall:.1f}s")
+    results = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    results.append(record)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1, default=str)
+    return 0
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS)
@@ -153,16 +219,33 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--dfl", action="store_true",
                     help="lower the DFL gossip round instead of the plain step")
+    ap.add_argument("--engine", default="mesh", choices=("mesh", "lax"),
+                    help="mesh: lower+compile step cells (default); "
+                    "lax: run the vectorized tick simulator end-to-end")
+    ap.add_argument("--model", default="toy", choices=("toy", "lenet"),
+                    help="federation scenario for --engine lax")
+    ap.add_argument("--nodes", type=int, default=64,
+                    help="federation size for --engine lax")
+    ap.add_argument("--ticks", type=int, default=48,
+                    help="simulated ticks for --engine lax")
+    ap.add_argument("--delivery", default="sparse",
+                    choices=("sparse", "dense"),
+                    help="receipt engine for --engine lax")
     from repro.core.topology import KINDS  # numpy-only module: safe pre-mesh
     ap.add_argument("--topology", default="ring", choices=KINDS,
-                    help="gossip graph over the federation axis (--dfl only)")
+                    help="gossip graph over the federation axis "
+                    "(--dfl and --engine lax)")
     ap.add_argument("--topology-degree", type=int, default=2,
                     help="kregular/smallworld neighbor offsets per side")
     ap.add_argument("--ttl", type=int, default=1,
-                    help="gossip flood radius in hops (--dfl only)")
+                    help="gossip flood radius in hops (--dfl and "
+                    "--engine lax)")
     ap.add_argument("--out", default="experiments/dryrun.json")
     ap.add_argument("--print-hlo", action="store_true")
     args = ap.parse_args()
+
+    if args.engine == "lax":
+        return run_lax_federation(args)
 
     cells = []
     if args.all:
@@ -188,7 +271,8 @@ def main():
     done = {(r["arch"], r["shape"], r.get("mesh"), r.get("dfl", False),
              # records predating the topology field were all ring gossip
              r.get("topology", "ring" if r.get("dfl") else None))
-            for r in results if r.get("status") in ("ok", "skip")}
+            for r in results if r.get("status") in ("ok", "skip")
+            and "arch" in r}   # --engine lax records share the same file
 
     mesh_tag = "2x16x16" if args.multi_pod else "16x16"
     for arch, shape in cells:

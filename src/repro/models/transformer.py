@@ -316,9 +316,12 @@ def train_loss(params, cfg, batch):
     return loss, {"loss": tot / totw, "accuracy": totacc / totw, "aux": aux}
 
 
-def prefill(params, cfg, batch, cache):
-    """Process the prompt, fill the cache, return last-token logits."""
-    h, positions = _embed_inputs(params, cfg, batch)
+def prefill(params, cfg, batch, cache, dtype=jnp.bfloat16):
+    """Process the prompt, fill the cache, return last-token logits.
+    ``dtype`` is the activation/residual dtype (blocks compute in fp32
+    internally and cast back to it; fp32 here keeps the whole stack fp32 —
+    the numerics oracle for prefill-vs-decode consistency checks)."""
+    h, positions = _embed_inputs(params, cfg, batch, dtype=dtype)
     h, cache, _ = _stack_forward(params, cfg, h, positions, cache=cache)
     h_last = h[:, -1:]
     h_last = L.norm_apply(params["final_norm"], h_last, cfg.norm)
@@ -326,11 +329,11 @@ def prefill(params, cfg, batch, cache):
     return logits, cache
 
 
-def decode_step(params, cfg, tokens, cache, position):
+def decode_step(params, cfg, tokens, cache, position, dtype=jnp.bfloat16):
     """One decode step. tokens (B,1); position scalar int32."""
     if cfg.frontend == "audio":
         raise ValueError("encoder-only arch has no decode step")
-    h = L.embed_apply(params["embed"], tokens)
+    h = L.embed_apply(params["embed"], tokens, dtype)
     h = sh.maybe_shard(h, (sh.BATCH, sh.SEQ, None))
     h, cache, _ = _stack_forward(params, cfg, h, None, cache=cache,
                                  decode_position=position)
