@@ -18,7 +18,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.chain import scenarios, simlax
-from repro.chain.network import SimConfig, Simulator
 from repro.configs import smoke_config
 from repro.core import dfl as dfl_lib
 from repro.core import gossip as gossip_lib
@@ -37,22 +36,25 @@ def collective_bytes_of(fn, *args):
 
 def simulator_speedup(n: int = 256, quick: bool = False):
     """Heap `Simulator` vs vectorized `LaxSimulator` on one shared toy
-    scenario: seconds/tick each, and the speedup ratio (acceptance: >=10x
-    at >= 256 nodes)."""
+    scenario, BOTH built from the same FederationSpec: seconds/tick each,
+    and the speedup ratio (acceptance: >=10x at >= 256 nodes)."""
+    from repro.chain.attacks import FederationSpec
+
     topo = topology_lib.kregular(n, 2)
     sc = scenarios.toy_scenario(n, dim=8, malicious=(0,))
     interval, latency, ttl = 12, 1, 2
+    spec = FederationSpec.build(
+        n, malicious=(0,),
+        initial_countdown=[1 + i % interval for i in range(n)])
 
     # --- heap reference: a short measured window (it is the slow one)
     heap_ticks = 4 if quick else 12
-    nodes = sc.make_heap_nodes(rep_impl=get_rep("impl2"), ttl=ttl)
-    names = [f"n{i}" for i in range(n)]
-    heap = Simulator(nodes, topo.as_name_dict(names), sc.heap_test_fn(),
-                     SimConfig(ticks=heap_ticks, seed=0,
-                               train_interval=(interval, interval),
-                               latency=(latency, latency),
-                               record_every=10 ** 9))
-    heap.next_train = {names[i]: 1 + i % interval for i in range(n)}
+    heap_cfg = simlax.SimLaxConfig(ticks=heap_ticks, seed=0,
+                                   train_interval=(interval, interval),
+                                   latency=latency, ttl=ttl,
+                                   record_every=10 ** 9)
+    heap = scenarios.make_heap_simulator(sc, topo, spec, get_rep("impl2"),
+                                         heap_cfg)
     t0 = time.perf_counter()
     heap.run()
     heap_wall = time.perf_counter() - t0
@@ -64,13 +66,9 @@ def simulator_speedup(n: int = 256, quick: bool = False):
                               train_interval=(interval, interval),
                               latency=latency, ttl=ttl, record_every=20,
                               seed=0)
-    sim = simlax.LaxSimulator(
-        topology=topo, train_fn=sc.train_fn, eval_fn=sc.eval_fn,
-        test_fn=sc.test_fn, eval_data=sc.eval_data(),
-        rep_impl=get_rep("impl2"), cfg=cfg, malicious=(0,),
-        initial_countdown=[1 + i % interval for i in range(n)])
+    sim = simlax.LaxSimulator(sc, topo, spec, get_rep("impl2"), cfg)
     t0 = time.perf_counter()
-    res = sim.run(sc.init_params_stacked())
+    res = sim.run()
     lax_wall = time.perf_counter() - t0
     lax_s_per_tick = lax_wall / lax_ticks
 

@@ -43,7 +43,7 @@ def run(impl_name: str, ticks: int, seed: int = 0, nodes_n: int = 5,
 def topology_scale_sweep(quick: bool = False):
     """Poisoning robustness across gossip topologies and network sizes
     (paper §VI swept with the vectorized engine — heap can't reach these N)."""
-    from repro.chain import scenarios, simlax
+    from repro.chain import attacks, scenarios, simlax
     from repro.core import topology as topology_lib
 
     ticks = 120 if quick else 400
@@ -52,6 +52,9 @@ def topology_scale_sweep(quick: bool = False):
     for n in sizes:
         mal = tuple(range(max(1, n // 20)))   # 5% poisoners
         sc = scenarios.toy_scenario(n, dim=8, malicious=mal)
+        spec = attacks.FederationSpec.build(
+            n, malicious=mal,
+            initial_countdown=[1 + (7 * i) % 10 for i in range(n)])
         for kind, kw in (("full", {}), ("kregular", {"degree": 3}),
                          ("smallworld", {"degree": 3, "beta": 0.2}),
                          ("erdos", {"p": min(0.5, 8.0 / n)})):
@@ -59,12 +62,8 @@ def topology_scale_sweep(quick: bool = False):
             cfg = simlax.SimLaxConfig(
                 ticks=ticks, train_interval=(10, 10), latency=1, ttl=2,
                 record_every=max(10, ticks // 10), seed=0)
-            sim = simlax.LaxSimulator(
-                topology=topo, train_fn=sc.train_fn, eval_fn=sc.eval_fn,
-                test_fn=sc.test_fn, eval_data=sc.eval_data(),
-                rep_impl=get_rep("impl2"), cfg=cfg, malicious=mal,
-                initial_countdown=[1 + (7 * i) % 10 for i in range(n)])
-            res = sim.run(sc.init_params_stacked())
+            sim = simlax.LaxSimulator(sc, topo, spec, get_rep("impl2"), cfg)
+            res = sim.run()
             honest = [i for i in range(n) if i not in mal]
             rec = {
                 "nodes": n, "topology": kind,
@@ -93,14 +92,11 @@ def lenet_poisoning(quick: bool = False):
 
     n = 8 if quick else 10
     ticks = 36 if quick else 108
-    sc, mal, topo, cfg, countdown = scenarios.lenet_paper_setup(
+    sc, spec, topo, cfg = scenarios.lenet_paper_setup(
         n, ticks=ticks, train_steps=4 if quick else 8)
-    sim = simlax.LaxSimulator(
-        topology=topo, train_fn=sc.train_fn, eval_fn=sc.eval_fn,
-        test_fn=sc.test_fn, eval_data=sc.eval_data(),
-        rep_impl=get_rep("impl2"), cfg=cfg, malicious=mal,
-        train_data=sc.train_data(), initial_countdown=countdown)
-    res = sim.run(sc.init_params_stacked())
+    mal = spec.malicious
+    sim = simlax.LaxSimulator(sc, topo, spec, get_rep("impl2"), cfg)
+    res = sim.run()
     honest = [i for i in range(n) if i not in mal]
     rec = {
         "nodes": n, "ticks": ticks, "malicious_frac": len(mal) / n,
@@ -119,6 +115,23 @@ def lenet_poisoning(quick: bool = False):
           f"rep_malicious={rec['malicious_reputation']:.2f},"
           f"rep_honest={rec['honest_reputation']:.2f}")
     return rec
+
+
+def attack_sweep(quick: bool = False, attack_names=None, *, n=None,
+                 ticks=None):
+    """One run per registered attack on a fixed kregular topology — the
+    reputation scheme's behaviour under adversaries beyond the paper's
+    single random-model poisoner (rows built by benchmarks/harness.py)."""
+    from benchmarks.harness import attack_sweep as sweep_rows
+    rows = sweep_rows(attack_names=attack_names,
+                      n=n or (16 if quick else 24),
+                      ticks=ticks or (120 if quick else 300))
+    for r in rows:
+        print(f"malicious,attack_sweep,{r['attack']},"
+              f"honest_acc={r['honest_acc']:.3f},"
+              f"rep_attacker={r['attacker_reputation']:.2f},"
+              f"rep_honest={r['honest_reputation']:.2f}")
+    return rows
 
 
 def main(quick: bool = False):
@@ -143,10 +156,29 @@ def main(quick: bool = False):
     print(f"malicious,sparse_vs_dense,{engine['nodes']}nodes,"
           f"{engine['speedup']}x")
     return {"paper": out, "topology_scale": topology_scale_sweep(quick),
+            "attack_sweep": attack_sweep(quick),
             "lenet": lenet_poisoning(quick), "engine": engine}
 
 
 if __name__ == "__main__":
+    import argparse
     import os
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--attack-sweep", nargs="*", default=None,
+                    metavar="ATTACK",
+                    help="run ONLY the attack sweep (optionally restricted "
+                    "to the named attacks) — the CI registry smoke")
+    ap.add_argument("--sweep-nodes", type=int, default=None)
+    ap.add_argument("--sweep-ticks", type=int, default=None)
+    args = ap.parse_args()
     os.makedirs("experiments", exist_ok=True)
-    json.dump(main(), open("experiments/bench_malicious.json", "w"), indent=1)
+    if args.attack_sweep is not None:
+        rows = attack_sweep(quick=True, attack_names=args.attack_sweep or None,
+                            n=args.sweep_nodes, ticks=args.sweep_ticks)
+        json.dump(rows, open("experiments/bench_attack_sweep.json", "w"),
+                  indent=1)
+    else:
+        json.dump(main(args.quick),
+                  open("experiments/bench_malicious.json", "w"), indent=1)

@@ -191,13 +191,15 @@ def engine_pertick_speedup(n: int = 512, dim: int = 128, *,
     receipt model is far heavier still — see the LeNet scenario)."""
     import time as _time
 
-    from repro.chain import scenarios, simlax
+    from repro.chain import attacks, scenarios, simlax
     from repro.core import topology as topology_lib
     from repro.core.reputation import get as get_rep
 
     topo = topology_lib.kregular(n, degree)
     mal = tuple(range(max(1, n // 32)))
     sc = scenarios.toy_scenario(n, dim=dim, malicious=mal)
+    spec = attacks.FederationSpec.build(
+        n, malicious=mal, initial_countdown=[1 + i % 12 for i in range(n)])
     t1, t2 = (12, 96) if quick else (24, 192)
     out = {"nodes": n, "dim": dim, "topology": f"kregular{degree}",
            "ttl": ttl}
@@ -207,15 +209,11 @@ def engine_pertick_speedup(n: int = 512, dim: int = 128, *,
             cfg = simlax.SimLaxConfig(
                 ticks=ticks, train_interval=(12, 12), latency=1, ttl=ttl,
                 record_every=10 ** 9, seed=0, delivery=eng)
-            sim = simlax.LaxSimulator(
-                topology=topo, train_fn=sc.train_fn, eval_fn=sc.eval_fn,
-                test_fn=sc.test_fn, eval_data=sc.eval_data(),
-                rep_impl=get_rep("impl2"), cfg=cfg, malicious=mal,
-                initial_countdown=[1 + i % 12 for i in range(n)])
+            sim = simlax.LaxSimulator(sc, topo, spec, get_rep("impl2"), cfg)
             best = float("inf")
             for _ in range(2):
                 t0 = _time.perf_counter()
-                sim.run(sc.init_params_stacked())
+                sim.run()
                 best = min(best, _time.perf_counter() - t0)
             walls[ticks] = best
         # floor at 0.1ms/tick: compile-time variance between the two runs
@@ -226,6 +224,44 @@ def engine_pertick_speedup(n: int = 512, dim: int = 128, *,
     out["speedup"] = round(
         out["dense_s_per_tick"] / out["sparse_s_per_tick"], 2)
     return out
+
+
+def attack_sweep(*, attack_names=None, n: int = 24, ticks: int = 300,
+                 seed: int = 0, degree: int = 2, ttl: int = 2):
+    """One toy-scenario run per registered attack on a FIXED topology
+    (kregular(n, degree)): honest-accuracy and attacker/honest-reputation
+    columns for the `malicious,attack_sweep` bench line. Returns JSON-ready
+    row dicts (benchmarks/bench_malicious.py prints + persists them)."""
+    from repro.chain import attacks, scenarios, simlax
+    from repro.core import topology as topology_lib
+    from repro.core.reputation import get as get_rep
+
+    topo = topology_lib.kregular(n, degree)
+    mal = tuple(range(max(1, n // 8)))
+    honest = [i for i in range(n) if i not in mal]
+    rows = []
+    for name in (attack_names or attacks.names()):
+        sc = scenarios.get("toy")(n, dim=8, malicious=mal, seed=seed)
+        spec = attacks.FederationSpec.build(
+            n, malicious=mal, attack=name,
+            initial_countdown=[1 + (7 * i) % 10 for i in range(n)])
+        cfg = simlax.SimLaxConfig(
+            ticks=ticks, train_interval=(10, 10), latency=1, ttl=ttl,
+            record_every=max(10, ticks // 10), seed=seed)
+        sim = simlax.LaxSimulator(sc, topo, spec, get_rep("impl2"), cfg)
+        res = sim.run()
+        rows.append({
+            "attack": name, "nodes": n, "ticks": ticks,
+            "topology": f"kregular{degree}", "ttl": ttl,
+            "malicious_frac": len(mal) / n,
+            "honest_acc": float(res.acc_history[-1][honest].mean()),
+            "attacker_reputation": float(np.mean(
+                [res.mean_reputation(i) for i in mal])),
+            "honest_reputation": float(np.mean(
+                [res.mean_reputation(i) for i in honest])),
+            "deliveries": res.stats["deliveries"],
+        })
+    return rows
 
 
 def run_sim(nodes, test_fn, *, ticks: int, seed: int = 0,

@@ -1,0 +1,272 @@
+"""Pluggable model-poisoning attacks + the FederationSpec role sheet.
+
+The paper evaluates its reputation defense against exactly one adversary —
+a node that broadcasts an arbitrary random model (§VI-E) — and that attack
+used to be a hard-coded ``malicious`` boolean inside both simulator engines.
+Related work (Dong et al. 2023, Hallaji et al. 2024) shows reputation
+schemes behave very differently under richer adversaries, so attacks are now
+plug-ins, following the registry pattern of ``repro.core.reputation``:
+
+    attacks.get("signflip")                  # default-parameterized instance
+    attacks.make("gaussian", sigma=3.0)      # parameterized variant
+    attacks.register(MyAttack())             # custom adversaries
+
+An attack is a frozen dataclass with one jit-traceable method::
+
+    apply(key, params, committed, tick) -> outgoing params (same pytree)
+
+* ``params``    — the model the node WOULD honestly broadcast this action
+                  (its honestly-trained candidate; attackers never commit it)
+* ``committed`` — the node's persistent (pre-train) state; doubles as the
+                  shape/dtype template for replacement attacks
+* ``tick``      — the current simulator tick (traced int32 in the lax
+                  engine, a plain int heap-side) for schedule-driven attacks
+
+The same ``apply`` runs vmapped over the federation inside the
+``LaxSimulator`` ``lax.scan`` and one-node-at-a-time inside the heap
+``DFLNode``, so both engines share one adversary definition.
+
+Shipped attacks (all §VI-E-style model poisoning at broadcast time):
+
+``signflip``      broadcast the sign-flipped (optionally scaled) model
+``gaussian``      replace the model with ``sigma * N(0, 1)`` noise — exactly
+                  the paper's "arbitrary random model" attack at sigma=1
+                  (the legacy ``malicious=`` flag maps here, bit-for-bit)
+``scaled``        boosting: exaggerate the local update,
+                  ``committed + factor * (trained - committed)``
+``freerider``     stale-replay: re-broadcast the committed (never-trained)
+                  model unchanged — contributes nothing, looks plausible
+``intermittent``  tick-scheduled on/off wrapper: run ``inner`` during the
+                  first ``duty`` ticks of every ``period``, act honest
+                  otherwise (evades windowed detectors)
+
+``FederationSpec`` is the single role sheet both simulator engines are
+constructed from: per-node attacker assignment (name or instance), dead
+nodes, straggler factors, and the initial train countdown. Building the heap
+and lax simulators from ONE spec is what makes their parity tests a
+single-source-of-truth comparison (tests/test_simlax.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _map_floats(fn, tree):
+    """Apply fn to floating leaves only (step counters etc. pass through)."""
+    return jax.tree.map(
+        lambda x: fn(x) if jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating)
+        else x, tree)
+
+
+@dataclasses.dataclass(frozen=True)
+class SignFlip:
+    """Constant sign-flip poisoning: broadcast ``-scale *`` the honestly
+    trained model. scale>1 additionally boosts the magnitude."""
+    scale: float = 1.0
+    name: str = "signflip"
+
+    def apply(self, key, params, committed, tick):
+        del key, committed, tick
+        return _map_floats(lambda x: (-self.scale) * x, params)
+
+
+@dataclasses.dataclass(frozen=True)
+class GaussianNoise:
+    """Replace the model with ``sigma * N(0, 1)`` noise — the paper's §VI-E
+    "broadcast an arbitrary random model" attack at sigma=1 (the legacy
+    hard-coded behavior; non-float leaves pass through untouched)."""
+    sigma: float = 1.0
+    name: str = "gaussian"
+
+    def apply(self, key, params, committed, tick):
+        del params, tick
+        leaves, treedef = jax.tree.flatten(committed)
+        keys = jax.random.split(key, len(leaves))
+        bad = [self.sigma * jax.random.normal(k, l.shape, l.dtype)
+               if jnp.issubdtype(jnp.asarray(l).dtype, jnp.floating) else l
+               for k, l in zip(keys, leaves)]
+        return jax.tree.unflatten(treedef, bad)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScaledPoison:
+    """Boosting / scaled poisoning: exaggerate the local update by
+    ``factor`` — ``committed + factor * (trained - committed)`` — the
+    classic attack against plain averaging (a boosted update dominates the
+    buffer mean)."""
+    factor: float = 10.0
+    name: str = "scaled"
+
+    def apply(self, key, params, committed, tick):
+        del key, tick
+        return jax.tree.map(
+            lambda tr, cm: (cm + self.factor * (tr - cm)).astype(tr.dtype)
+            if jnp.issubdtype(jnp.asarray(tr).dtype, jnp.floating) else tr,
+            params, committed)
+
+
+@dataclasses.dataclass(frozen=True)
+class FreeRider:
+    """Stale-replay free-riding: broadcast the committed model unchanged.
+    Attackers never commit local training in either engine, so this
+    re-broadcasts the initial (stale) model forever — plausible-looking
+    receipts early, a drag on the federation later."""
+    name: str = "freerider"
+
+    def apply(self, key, params, committed, tick):
+        del key, params, tick
+        return committed
+
+
+@dataclasses.dataclass(frozen=True)
+class Intermittent:
+    """Tick-scheduled on/off attacker: run the ``inner`` attack during the
+    first ``duty`` ticks of every ``period``-tick window, broadcast the
+    honest candidate otherwise. Evades detectors that only watch recent
+    windows; ``tick`` is traced, so the schedule stays inside the scan."""
+    period: int = 8
+    duty: int = 4
+    inner: str = "gaussian"
+    name: str = "intermittent"
+
+    def apply(self, key, params, committed, tick):
+        bad = get(self.inner).apply(key, params, committed, tick)
+        active = (tick % self.period) < self.duty
+        return jax.tree.map(lambda b, p: jnp.where(active, b, p), bad, params)
+
+
+_REGISTRY: Dict[str, object] = {}
+
+
+def register(attack) -> object:
+    """Register a default-parameterized attack instance under its name."""
+    _REGISTRY[attack.name] = attack
+    return attack
+
+
+def get(name: str):
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown attack {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def make(name: str, **params):
+    """A parameterized variant of a registered attack:
+    ``make("gaussian", sigma=3.0)``."""
+    return dataclasses.replace(get(name), **params) if params else get(name)
+
+
+def names() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+SIGNFLIP = register(SignFlip())
+GAUSSIAN = register(GaussianNoise())
+SCALED = register(ScaledPoison())
+FREERIDER = register(FreeRider())
+INTERMITTENT = register(Intermittent())
+
+
+# ================================================================= role sheet
+def _resolve(attack) -> object:
+    return get(attack) if isinstance(attack, str) else attack
+
+
+@dataclasses.dataclass(frozen=True)
+class FederationSpec:
+    """Per-node roles for one federation run — the single source both
+    simulator engines are constructed from.
+
+    attackers: ((node_id, attack_instance), ...) sorted by node id
+    dead:      node ids that never act (failure/elasticity tests)
+    stragglers: ((node_id, factor), ...) train-interval multipliers
+    initial_countdown: per-node ticks until the first train action (length
+        num_nodes), or None for the engine's seeded random draw
+    """
+    num_nodes: int
+    attackers: Tuple[Tuple[int, object], ...] = ()
+    dead: Tuple[int, ...] = ()
+    stragglers: Tuple[Tuple[int, int], ...] = ()
+    initial_countdown: Optional[Tuple[int, ...]] = None
+
+    def __post_init__(self):
+        for i, _ in self.attackers:
+            if not 0 <= i < self.num_nodes:
+                raise ValueError(f"attacker id {i} outside [0, {self.num_nodes})")
+        for i in self.dead:
+            if not 0 <= i < self.num_nodes:
+                raise ValueError(f"dead id {i} outside [0, {self.num_nodes})")
+        for i, f in self.stragglers:
+            if not 0 <= i < self.num_nodes:
+                raise ValueError(f"straggler id {i} outside [0, {self.num_nodes})")
+            if f < 1:
+                raise ValueError(f"straggler factor must be >= 1, got {f}")
+        if (self.initial_countdown is not None
+                and len(self.initial_countdown) != self.num_nodes):
+            raise ValueError(
+                f"initial_countdown has {len(self.initial_countdown)} entries "
+                f"for {self.num_nodes} nodes")
+
+    @classmethod
+    def build(cls, num_nodes: int, *, malicious=(), attack=None,
+              dead: Sequence[int] = (), stragglers: Optional[dict] = None,
+              initial_countdown=None) -> "FederationSpec":
+        """The convenient constructor. ``malicious`` is either a sequence of
+        node ids (all assigned ``attack``, name or instance; default
+        ``gaussian``) or a dict ``{node_id: attack}`` for heterogeneous
+        adversaries (in which case ``attack`` must be omitted)."""
+        if isinstance(malicious, dict):
+            if attack is not None:
+                raise ValueError(
+                    "malicious={node: attack} already assigns per-node "
+                    "attacks; drop the separate attack= argument")
+            attackers = tuple(sorted(
+                (int(i), _resolve(a)) for i, a in malicious.items()))
+        else:
+            atk = _resolve(attack if attack is not None else "gaussian")
+            attackers = tuple((int(i), atk) for i in sorted(set(malicious)))
+        return cls(
+            num_nodes=num_nodes, attackers=attackers,
+            dead=tuple(sorted(set(int(i) for i in dead))),
+            stragglers=tuple(sorted(
+                (int(k), int(v)) for k, v in (stragglers or {}).items())),
+            initial_countdown=(None if initial_countdown is None
+                               else tuple(int(c) for c in initial_countdown)))
+
+    @classmethod
+    def honest(cls, num_nodes: int) -> "FederationSpec":
+        return cls(num_nodes=num_nodes)
+
+    # ------------------------------------------------------------- accessors
+    @property
+    def malicious(self) -> Tuple[int, ...]:
+        return tuple(i for i, _ in self.attackers)
+
+    def attack_for(self, node_id: int):
+        for i, a in self.attackers:
+            if i == node_id:
+                return a
+        return None
+
+    def straggler_map(self) -> Dict[int, int]:
+        return dict(self.stragglers)
+
+    def attack_groups(self) -> List[Tuple[object, np.ndarray]]:
+        """Attackers grouped by attack instance, as (attack, (N,) bool mask)
+        in first-appearance order over ascending node ids — the vectorized
+        engine runs one vmap per group over just that group's node ids, and
+        the group order keys its PRNG folds (group 0 of a single-gaussian
+        spec reproduces the legacy ``malicious=`` stream bit-for-bit)."""
+        groups: List[Tuple[object, np.ndarray]] = []
+        index: Dict[object, int] = {}
+        for i, a in self.attackers:   # attackers are sorted by node id
+            if a not in index:
+                index[a] = len(groups)
+                groups.append((a, np.zeros((self.num_nodes,), np.bool_)))
+            groups[index[a]][1][i] = True
+        return groups

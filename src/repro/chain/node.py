@@ -8,6 +8,13 @@ reproduction) or any LM from the zoo:
     eval_fn(params)                  -> accuracy on THIS node's data (receipts)
     params are arbitrary pytrees; averaging uses repro.core.fedavg (Eq. 2/3,
     optionally the wfedavg Pallas kernel via use_kernel=True).
+
+Adversaries are plug-ins (`repro.chain.attacks`): pass ``attack=`` (name or
+instance) and the node broadcasts ``attack.apply(key, trained, committed,
+tick)`` instead of its honest model — the SAME attack objects drive the
+vectorized engine, so both simulators share one adversary definition. The
+legacy ``malicious=True`` flag maps to the default ``gaussian`` attack (the
+paper's §VI-E random-model poisoning).
 """
 from __future__ import annotations
 
@@ -17,6 +24,7 @@ from typing import Callable, Dict, List, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.chain import attacks as attacks_lib
 from repro.chain import crypto
 from repro.chain.ledger import Ledger
 from repro.chain.types import (Block, BlockConfirmation, NodeInformation,
@@ -38,7 +46,8 @@ class DFLNode:
                  train_fn: Callable, eval_fn: Callable,
                  rep_impl: ReputationImpl, ttl: int = 2,
                  tx_per_block: int = 4, expire_after: float = 50.0,
-                 malicious: bool = False, rng: Optional[jax.Array] = None,
+                 malicious: bool = False, attack=None,
+                 rng: Optional[jax.Array] = None,
                  use_kernel: bool = False):
         self.name = name
         self.kp = crypto.generate_keypair()
@@ -51,7 +60,12 @@ class DFLNode:
         self.ttl = ttl
         self.tx_per_block = tx_per_block
         self.expire_after = expire_after
-        self.malicious = malicious
+        if isinstance(attack, str):
+            attack = attacks_lib.get(attack)
+        if malicious and attack is None:
+            attack = attacks_lib.get("gaussian")   # legacy §VI-E poisoning
+        self.attack = attack
+        self.malicious = attack is not None
         self.rng = rng if rng is not None else jax.random.PRNGKey(0)
         self.use_kernel = use_kernel
 
@@ -66,14 +80,13 @@ class DFLNode:
     # ------------------------------------------------------------ local train
     def train_local(self, now: float):
         self.rng, sub = jax.random.split(self.rng)
-        if self.malicious:
-            # model poisoning (§VI-E): broadcast an arbitrary random model
-            leaves, treedef = jax.tree.flatten(self.params)
-            keys = jax.random.split(sub, len(leaves))
-            bad = [jax.random.normal(k, l.shape, l.dtype) if jnp.issubdtype(l.dtype, jnp.floating) else l
-                   for k, l in zip(keys, leaves)]
-            poisoned = jax.tree.unflatten(treedef, bad)
-            return poisoned, {}
+        if self.attack is not None:
+            # model poisoning: corrupt the honestly trained candidate at
+            # broadcast time WITHOUT committing it (mirrors the vectorized
+            # engine: attackers' persistent params never advance)
+            k_train, k_attack = jax.random.split(sub)
+            trained, _ = self.train_fn(self.params, k_train)
+            return self.attack.apply(k_attack, trained, self.params, now), {}
         self.params, metrics = self.train_fn(self.params, sub)
         return self.params, metrics
 

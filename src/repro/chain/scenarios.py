@@ -3,22 +3,37 @@
 The heap `Simulator` (behavioral reference) and the vectorized `LaxSimulator`
 must agree on the paper's headline metrics; to compare them we need scenarios
 expressible as heap-side Python callbacks AND as vmappable jax functions over
-stacked arrays. Two scenarios live here:
+stacked arrays. A scenario is anything satisfying the formal ``Scenario``
+protocol — ONE uniform signature set for every workload:
+
+    num_nodes                     -> int
+    init_params_stacked()         -> pytree, leaves (N, ...)
+    train_data()                  -> pytree leaves (N, ...) or None
+    eval_data()                   -> pytree leaves (N, ...) per-receiver
+    train_fn(params, key, data)   -> params        (one node, vmappable)
+    eval_fn(params, eval_data_i)  -> accuracy      (receipt measurement)
+    test_fn(params)               -> accuracy      (global test metric)
+
+Scenarios register by name (`scenarios.get("toy")(n, ...)`), mirroring
+``repro.core.reputation`` / ``repro.chain.attacks``, and ONE generic heap
+binder (`make_heap_nodes` / `make_heap_simulator`) turns any scenario plus a
+``FederationSpec`` into heap-`Simulator` nodes — there are no per-scenario
+heap bridges anymore.
 
 ``ToyScenario`` — a D-dim vector pulled toward a target by each local train
 step (deterministic, so both engines walk identical parameter trajectories):
 
     train:   w <- w + LR * (target - w)
     receipt: acc(w) = clip(1 - mean|w - target|) (receiver-side measurement;
-                                                  poisoned N(0,1) models land
-                                                  far from target -> acc ~ 0)
+                                                  poisoned models land far
+                                                  from target -> acc ~ 0)
     test:    same closeness metric (the global "accuracy" curve)
 
 ``LeNetScenario`` — the paper's REAL §VI-D workload: LeNet-5 on synthetic
 MNIST, non-I.I.D. Dirichlet label shards (`repro.data.partition`), SGD local
 training, receipt accuracy measured on the receiver's own held-out shard
-(§IV-B3), optional poisoned senders. Feasible in `simlax` only with the
-sparse delivery engine (receipt evals cost a real forward pass).
+(§IV-B3). Feasible in `simlax` only with the sparse delivery engine
+(receipt evals cost a real forward pass).
 
 Used by tests/test_simlax.py (heap-vs-lax and sparse-vs-dense parity),
 benchmarks/bench_gossip.py / bench_malicious.py, and
@@ -27,12 +42,14 @@ benchmarks/bench_gossip.py / bench_malicious.py, and
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence
+from typing import Callable, Dict, List, Optional, Protocol, Sequence, \
+    runtime_checkable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.chain.attacks import FederationSpec
 from repro.chain.node import DFLNode
 from repro.configs.lenet_dfl import CONFIG as LENET_CFG
 from repro.core.reputation import ReputationImpl
@@ -43,6 +60,125 @@ from repro.models import lenet
 LR = 0.1
 
 
+@runtime_checkable
+class Scenario(Protocol):
+    """The formal contract both simulator engines program against."""
+
+    @property
+    def num_nodes(self) -> int: ...
+
+    def init_params_stacked(self): ...
+
+    def train_data(self): ...          # pytree leaves (N, ...) or None
+
+    def eval_data(self): ...           # pytree leaves (N, ...)
+
+    def train_fn(self, params, key, data): ...
+
+    def eval_fn(self, params, eval_data_i): ...
+
+    def test_fn(self, params): ...
+
+
+# ================================================================== registry
+_REGISTRY: Dict[str, Callable] = {}
+
+
+def register(name: str, builder: Callable) -> Callable:
+    """Register a scenario builder (n, **kwargs) -> Scenario under a name."""
+    _REGISTRY[name] = builder
+    return builder
+
+
+def get(name: str) -> Callable:
+    """The registered builder: ``scenarios.get("toy")(n, malicious=(0,))``."""
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown scenario {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def names() -> tuple:
+    return tuple(sorted(_REGISTRY))
+
+
+# ===================================================== generic heap binding
+def make_heap_nodes(scenario: Scenario, *, rep_impl: ReputationImpl,
+                    ttl: int, seed: int = 0,
+                    spec: Optional[FederationSpec] = None) -> List[DFLNode]:
+    """Bind ANY Scenario to heap-`Simulator` nodes: slice the stacked
+    params/data per node and wrap the uniform jax callbacks into the node's
+    (params, key) -> (params, metrics) / params -> float conventions.
+    ``spec`` assigns attacker roles (falls back to the scenario's legacy
+    ``malicious`` ids with the default gaussian attack)."""
+    n = scenario.num_nodes
+    if spec is None:
+        spec = FederationSpec.build(
+            n, malicious=tuple(getattr(scenario, "malicious", ()) or ()))
+    if spec.num_nodes != n:
+        raise ValueError(f"spec is for {spec.num_nodes} nodes, scenario has {n}")
+    stacked = scenario.init_params_stacked()
+    tdata = scenario.train_data()
+    edata = scenario.eval_data()
+    train_jit = jax.jit(scenario.train_fn)
+    eval_jit = jax.jit(scenario.eval_fn)
+    nodes = []
+    for i in range(n):
+        params_i = jax.tree.map(lambda x: jnp.asarray(x[i]), stacked)
+        data_i = (None if tdata is None
+                  else jax.tree.map(lambda x: jnp.asarray(x[i]), tdata))
+        ed_i = jax.tree.map(lambda x: jnp.asarray(x[i]), edata)
+
+        def train_fn(p, k, data=data_i):
+            return train_jit(p, k, data), {}
+
+        def eval_fn(p, ed=ed_i):
+            return float(eval_jit(p, ed))
+
+        nodes.append(DFLNode(
+            name=f"n{i}", model_structure=type(scenario).__name__.lower(),
+            params=params_i, train_fn=train_fn, eval_fn=eval_fn,
+            rep_impl=rep_impl, ttl=ttl, attack=spec.attack_for(i),
+            rng=jax.random.PRNGKey(seed * 1000 + i)))
+    return nodes
+
+
+def heap_test_fn(scenario: Scenario) -> Callable:
+    """The scenario's global test metric as the heap simulator's
+    params -> float callback."""
+    test_jit = jax.jit(scenario.test_fn)
+
+    def test_fn(p):
+        return float(test_jit(p))
+
+    return test_fn
+
+
+def make_heap_simulator(scenario: Scenario, topology, spec: FederationSpec,
+                        rep_impl: ReputationImpl, cfg, *, seed: int = 0):
+    """Construct the heap `Simulator` from the SAME (scenario, topology,
+    spec, rep_impl, SimLaxConfig) tuple that constructs ``LaxSimulator`` —
+    the single source of truth the engine-parity tests are built from.
+    The scalar per-hop latency becomes the heap's (lo, hi) = (l, l)."""
+    from repro.chain.network import SimConfig, Simulator
+    nodes = make_heap_nodes(scenario, rep_impl=rep_impl, ttl=cfg.ttl,
+                            seed=seed, spec=spec)
+    names_ = [nd.name for nd in nodes]
+    sim = Simulator(
+        nodes, topology.as_name_dict(names_), heap_test_fn(scenario),
+        SimConfig(ticks=cfg.ticks, train_interval=cfg.train_interval,
+                  latency=(cfg.latency, cfg.latency),
+                  record_every=cfg.record_every, seed=cfg.seed))
+    if spec.initial_countdown is not None:
+        sim.next_train = {names_[i]: spec.initial_countdown[i]
+                          for i in range(len(names_))}
+    for i, factor in spec.stragglers:
+        sim.set_straggler(names_[i], factor)
+    for i in spec.dead:
+        sim.kill_node(names_[i])
+    return sim
+
+
+# ======================================================================= toy
 @dataclasses.dataclass
 class ToyScenario:
     dim: int
@@ -50,15 +186,23 @@ class ToyScenario:
     init_w: np.ndarray           # (n, dim) per-node initial params
     malicious: tuple
 
+    @property
+    def num_nodes(self) -> int:
+        return self.init_w.shape[0]
+
     # ------------------------------------------------------------- jax (lax) side
     def init_params_stacked(self):
         return {"w": jnp.asarray(self.init_w)}
+
+    def train_data(self):
+        return None              # the toy train step needs no local data
 
     def eval_data(self):
         n = self.init_w.shape[0]
         return jnp.broadcast_to(self.target, (n, self.dim))
 
-    def train_fn(self, params, _key):
+    def train_fn(self, params, key, data=None):
+        del key, data
         return {"w": params["w"] + LR * (self.target - params["w"])}
 
     def eval_fn(self, params, ref):
@@ -67,37 +211,15 @@ class ToyScenario:
     def test_fn(self, params):
         return self.eval_fn(params, self.target)
 
-    # ------------------------------------------------------------------ heap side
+    # ----------------------------------------- heap side (deprecation shims)
     def make_heap_nodes(self, *, rep_impl: ReputationImpl, ttl: int,
                         seed: int = 0) -> List[DFLNode]:
-        target = np.asarray(self.target)
-        nodes = []
-        for i in range(self.init_w.shape[0]):
-            params = {"w": jnp.asarray(self.init_w[i])}
-
-            def train_fn(p, _k):
-                return {"w": p["w"] + LR * (jnp.asarray(target) - p["w"])}, {}
-
-            def eval_fn(p):
-                return float(np.clip(
-                    1.0 - np.mean(np.abs(np.asarray(p["w"]) - target)),
-                    0.0, 1.0))
-
-            nodes.append(DFLNode(
-                name=f"n{i}", model_structure="toy", params=params,
-                train_fn=train_fn, eval_fn=eval_fn, rep_impl=rep_impl,
-                ttl=ttl, malicious=(i in self.malicious),
-                rng=jax.random.PRNGKey(seed * 1000 + i)))
-        return nodes
+        """Deprecated: use the module-level generic ``make_heap_nodes``."""
+        return make_heap_nodes(self, rep_impl=rep_impl, ttl=ttl, seed=seed)
 
     def heap_test_fn(self):
-        target = np.asarray(self.target)
-
-        def test_fn(p):
-            return float(np.clip(
-                1.0 - np.mean(np.abs(np.asarray(p["w"]) - target)), 0.0, 1.0))
-
-        return test_fn
+        """Deprecated: use the module-level generic ``heap_test_fn``."""
+        return heap_test_fn(self)
 
 
 def toy_scenario(n: int, dim: int = 16, malicious: Sequence[int] = (),
@@ -115,10 +237,10 @@ def toy_scenario(n: int, dim: int = 16, malicious: Sequence[int] = (),
 @dataclasses.dataclass
 class LeNetScenario:
     """Paper §VI-D at federation scale: LeNet-5, non-I.I.D. Dirichlet shards,
-    receipt accuracy on the receiver's own held-out data, optional poisoned
-    senders (the `malicious` set is handed to the engine, which swaps those
-    nodes' outgoing models for N(0,1) noise — exactly the paper's §VI-E
-    attack)."""
+    receipt accuracy on the receiver's own held-out data. ``malicious`` names
+    the default attacker set (legacy: gaussian random-model poisoning, the
+    paper's §VI-E attack); richer adversaries come from a ``FederationSpec``
+    built over ``repro.chain.attacks``."""
 
     class_probs: np.ndarray      # (n, classes) per-node label distribution
     train_images: np.ndarray     # (n, P, 28, 28, 1) local training pools
@@ -173,45 +295,15 @@ class LeNetScenario:
         return lenet.accuracy(params, jnp.asarray(self.test_images),
                               jnp.asarray(self.test_labels))
 
-    # ------------------------------------------------------------------ heap side
+    # ----------------------------------------- heap side (deprecation shims)
     def make_heap_nodes(self, *, rep_impl: ReputationImpl, ttl: int,
                         seed: int = 0) -> List[DFLNode]:
-        """Same scenario as heap-`Simulator` nodes (small N only: every
-        receipt costs a real forward pass, one at a time)."""
-        train_jit = jax.jit(self.train_fn)
-        eval_jit = jax.jit(lenet.accuracy)
-        keys = jax.random.split(jax.random.PRNGKey(self.seed),
-                                self.num_nodes)
-        nodes = []
-        for i in range(self.num_nodes):
-            params = lenet.init(keys[i], LENET_CFG)
-            data_i = {"images": jnp.asarray(self.train_images[i]),
-                      "labels": jnp.asarray(self.train_labels[i])}
-            ei = jnp.asarray(self.eval_images[i])
-            el = jnp.asarray(self.eval_labels[i])
-
-            def train_fn(p, k, data=data_i):
-                return train_jit(p, k, data), {}
-
-            def eval_fn(p, ei=ei, el=el):
-                return float(eval_jit(p, ei, el))
-
-            nodes.append(DFLNode(
-                name=f"n{i}", model_structure="lenet5", params=params,
-                train_fn=train_fn, eval_fn=eval_fn, rep_impl=rep_impl,
-                ttl=ttl, malicious=(i in self.malicious),
-                rng=jax.random.PRNGKey(seed * 1000 + i)))
-        return nodes
+        """Deprecated: use the module-level generic ``make_heap_nodes``."""
+        return make_heap_nodes(self, rep_impl=rep_impl, ttl=ttl, seed=seed)
 
     def heap_test_fn(self):
-        eval_jit = jax.jit(lenet.accuracy)
-        ti = jnp.asarray(self.test_images)
-        tl = jnp.asarray(self.test_labels)
-
-        def test_fn(p):
-            return float(eval_jit(p, ti, tl))
-
-        return test_fn
+        """Deprecated: use the module-level generic ``heap_test_fn``."""
+        return heap_test_fn(self)
 
 
 def lenet_scenario(n: int, *, alpha: float = 1.0,
@@ -250,6 +342,10 @@ def lenet_scenario(n: int, *, alpha: float = 1.0,
         lr=lr, seed=seed)
 
 
+register("toy", toy_scenario)
+register("lenet", lenet_scenario)
+
+
 # the calibrated §VI-D data/optimizer recipe — single source for the
 # acceptance test, bench_malicious, and the dryrun CLI sanity pass
 LENET_PAPER_HP = dict(alpha=1.0, pool=384, eval_size=16, test_size=256,
@@ -265,7 +361,7 @@ def lenet_paper_setup(n: int = 10, *, ticks: int = 108, train_steps: int = 8,
     hyperparameters tuned so honest nodes clear 90% mean test accuracy
     within the default 108 ticks on 2 CPU cores.
 
-    Returns (scenario, malicious, topology, SimLaxConfig, initial_countdown).
+    Returns (scenario, spec, topology, SimLaxConfig).
     """
     from repro.chain import simlax          # one-way dep: simlax <- scenarios
     from repro.core import topology as topology_lib
@@ -277,4 +373,6 @@ def lenet_paper_setup(n: int = 10, *, ticks: int = 108, train_steps: int = 8,
                               ttl=2, record_every=12, seed=seed,
                               delivery=delivery)
     countdown = [3 + (5 * i) % 6 for i in range(n)]
-    return sc, mal, topo, cfg, countdown
+    spec = FederationSpec.build(n, malicious=mal,
+                                initial_countdown=countdown)
+    return sc, spec, topo, cfg

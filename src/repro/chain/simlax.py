@@ -59,6 +59,7 @@ see the parity test):
 from __future__ import annotations
 
 import dataclasses
+import inspect
 import warnings
 from typing import Callable, Optional, Sequence
 
@@ -66,6 +67,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.chain.attacks import FederationSpec
 from repro.core import topology as topology_lib
 from repro.core.reputation import ReputationImpl
 
@@ -84,6 +86,25 @@ class SimLaxConfig:
     record_every: int = 10
     seed: int = 0
     delivery: str = "sparse"          # receipt engine: "sparse" | "dense"
+
+
+def _normalize_train_fn(train_fn: Callable, *, has_train_data: bool) -> Callable:
+    """The engine calls ``train_fn(params, key, data)`` uniformly (the
+    Scenario protocol); legacy two-arg ``train_fn(params, key)`` callables
+    are wrapped to ignore the (absent) data operand. A two-arg train_fn
+    combined with actual train_data is an error — silently training
+    without the data would corrupt results."""
+    try:
+        n_params = len(inspect.signature(train_fn).parameters)
+    except (TypeError, ValueError):     # builtins / partials without sigs
+        return train_fn
+    if n_params >= 3:
+        return train_fn
+    if has_train_data:
+        raise TypeError(
+            "train_fn takes (params, key) but train_data was provided; a "
+            "data-consuming train step must accept (params, key, data)")
+    return lambda params, key, data: train_fn(params, key)
 
 
 @dataclasses.dataclass
@@ -108,26 +129,88 @@ class SimLaxResult:
 class LaxSimulator:
     """Drives a vectorized federation over a virtual-time network.
 
-    train_fn(params, key) -> params          one node, vmap'd over N
-      (or train_fn(params, key, data) -> params when ``train_data`` given)
-    eval_fn(params, eval_data_i) -> acc      receiver's receipt measurement
-    test_fn(params) -> acc                   global test metric, vmap'd
-    eval_data: pytree, leaves (N, ...)       per-receiver validation data
-    train_data: pytree, leaves (N, ...)      optional per-node training shard
+    The primary constructor takes the three first-class abstractions::
+
+        LaxSimulator(scenario, topology, spec, rep_impl, cfg)
+
+    * ``scenario`` — anything satisfying ``repro.chain.scenarios.Scenario``
+      (uniform ``train_fn(params, key, data)`` / ``eval_fn`` / ``test_fn``
+      plus stacked params/data properties);
+    * ``spec`` — a ``repro.chain.attacks.FederationSpec`` role sheet
+      (per-node attacker assignment, dead nodes, stragglers, initial
+      countdowns); the heap ``Simulator`` is constructed from the SAME spec
+      via ``scenarios.make_heap_simulator`` for the parity tests;
+    * attacks run inside the jitted scan: one masked vmap per distinct
+      attack instance, so heterogeneous adversary populations stay traced.
+
+    The pre-spec keyword form (``train_fn=...``, ``malicious=...``,
+    ``dead=...``, ...) remains as a thin deprecation shim that builds the
+    same internals — ``malicious`` ids map to the default ``gaussian``
+    attack, which reproduces the legacy hard-coded poisoning bit-for-bit.
     """
 
-    def __init__(self, *, topology: topology_lib.Topology,
-                 train_fn: Callable, eval_fn: Callable, test_fn: Callable,
-                 eval_data, rep_impl: ReputationImpl, cfg: SimLaxConfig,
+    def __init__(self, scenario=None, topology: topology_lib.Topology = None,
+                 spec: Optional[FederationSpec] = None,
+                 rep_impl: ReputationImpl = None,
+                 cfg: SimLaxConfig = None, *,
+                 train_fn: Callable = None, eval_fn: Callable = None,
+                 test_fn: Callable = None, eval_data=None,
                  malicious: Sequence[int] = (),
                  stragglers: Optional[dict] = None,
                  dead: Sequence[int] = (),
                  initial_countdown: Optional[Sequence[int]] = None,
                  train_data=None):
+        if topology is None:
+            raise TypeError("LaxSimulator requires a topology")
+        if rep_impl is None or cfg is None:
+            raise TypeError("LaxSimulator requires rep_impl and cfg")
+        n = topology.num_nodes
+
+        if scenario is not None:
+            if train_fn or eval_fn or test_fn or eval_data is not None:
+                raise TypeError(
+                    "pass EITHER a scenario OR the legacy "
+                    "train_fn/eval_fn/test_fn/eval_data kwargs, not both")
+            train_fn, eval_fn, test_fn = (scenario.train_fn,
+                                          scenario.eval_fn, scenario.test_fn)
+            eval_data = scenario.eval_data()
+            if train_data is None:
+                train_data = scenario.train_data()
+        else:
+            if train_fn is None or eval_fn is None or test_fn is None \
+                    or eval_data is None:
+                raise TypeError(
+                    "LaxSimulator needs a scenario (preferred) or the "
+                    "legacy train_fn/eval_fn/test_fn/eval_data kwargs")
+            warnings.warn(
+                "constructing LaxSimulator from loose train_fn/eval_fn/"
+                "test_fn kwargs is deprecated; pass a Scenario "
+                "(repro.chain.scenarios) instead",
+                DeprecationWarning, stacklevel=2)
+
+        legacy_roles = (tuple(malicious) != () or tuple(dead) != ()
+                        or bool(stragglers) or initial_countdown is not None)
+        if spec is None:
+            spec = FederationSpec.build(
+                n,
+                malicious=(tuple(malicious)
+                           or tuple(getattr(scenario, "malicious", ()) or ())),
+                dead=tuple(dead), stragglers=stragglers,
+                initial_countdown=initial_countdown)
+        elif legacy_roles:
+            raise TypeError(
+                "pass node roles EITHER via FederationSpec OR via the "
+                "legacy malicious/dead/stragglers/initial_countdown "
+                "kwargs, not both")
+        if spec.num_nodes != n:
+            raise ValueError(
+                f"spec is for {spec.num_nodes} nodes, topology has {n}")
+
+        self.scenario = scenario
+        self.spec = spec
         self.topology = topology
         self.cfg = cfg
         self.rep_impl = rep_impl
-        n = topology.num_nodes
 
         if cfg.latency < 1:
             raise ValueError(
@@ -150,7 +233,7 @@ class LaxSimulator:
                 "ttl/latency for exact parity.",
                 stacklevel=2)
         alive = np.ones((n,), np.bool_)
-        alive[list(dead)] = False
+        alive[list(spec.dead)] = False
         self.alive = alive
         # flooding routes only through alive nodes
         adj = topology.adj & alive[None, :] & alive[:, None]
@@ -171,23 +254,30 @@ class LaxSimulator:
         self._slot_src = jnp.asarray(
             slot_src[:, :self.delivery_budget].astype(np.int32))
 
+        # one gathered vmap per distinct attack instance over that group's
+        # (static) node ids only; group order keys the per-group PRNG folds
+        # (group 0 of a single-gaussian spec replays the legacy hard-coded
+        # poison stream bit-for-bit)
+        self._attack_groups = [(attack, np.flatnonzero(mask))
+                               for attack, mask in spec.attack_groups()]
         mal = np.zeros((n,), np.bool_)
-        mal[list(malicious)] = True
+        mal[list(spec.malicious)] = True
         self._malicious = jnp.asarray(mal)
         strag = np.ones((n,), np.int32)
-        for k, v in (stragglers or {}).items():
+        for k, v in spec.straggler_map().items():
             strag[k] = v
         self._straggler = jnp.asarray(strag)
         self._alive_j = jnp.asarray(alive)
 
-        self._train_fn = train_fn
+        self._train_fn = _normalize_train_fn(
+            train_fn, has_train_data=train_data is not None)
         self._eval_fn = eval_fn
         self._test_fn = test_fn
         self._eval_data = eval_data
         self._train_data = train_data
         self._initial_countdown = (
-            None if initial_countdown is None
-            else jnp.asarray(np.asarray(initial_countdown, np.int32)))
+            None if spec.initial_countdown is None
+            else jnp.asarray(np.asarray(spec.initial_countdown, np.int32)))
 
     # ------------------------------------------------------------------ pieces
     def _interval(self, key):
@@ -195,14 +285,6 @@ class LaxSimulator:
         base = (jnp.full(key.shape[:-1] or (), lo, jnp.int32) if lo == hi
                 else jax.random.randint(key, (), lo, hi + 1, jnp.int32))
         return base
-
-    def _poison(self, key, params_like):
-        leaves, treedef = jax.tree.flatten(params_like)
-        keys = jax.random.split(key, len(leaves))
-        bad = [jax.random.normal(k, l.shape, l.dtype)
-               if jnp.issubdtype(l.dtype, jnp.floating) else l
-               for k, l in zip(keys, leaves)]
-        return jax.tree.unflatten(treedef, bad)
 
     # ------------------------------------------------------------- delivery
     def _deliver_dense(self, state, due, eval_data):
@@ -253,20 +335,25 @@ class LaxSimulator:
         return acc_sum, w_sum, buf_cnt, batch_min, batch_sender
 
     # --------------------------------------------------------------------- run
-    def run(self, params0):
-        """params0: pytree with leading N dim. Returns SimLaxResult."""
+    def run(self, params0=None):
+        """params0: pytree with leading N dim (defaults to the scenario's
+        stacked init). Returns SimLaxResult."""
+        if params0 is None:
+            if self.scenario is None:
+                raise TypeError(
+                    "run() needs params0 when constructed without a scenario")
+            params0 = self.scenario.init_params_stacked()
         cfg = self.cfg
         n = self.topology.num_nodes
         rep_impl = self.rep_impl
         alive = self._alive_j
         reach, delay = self._reach, self._delay
         malicious, straggler = self._malicious, self._straggler
+        attack_groups = self._attack_groups
         eval_data = self._eval_data
         train_data = self._train_data
-        if train_data is None:
-            train_v = jax.vmap(self._train_fn)
-        else:
-            train_v = jax.vmap(self._train_fn, in_axes=(0, 0, 0))
+        train_v = jax.vmap(self._train_fn,
+                           in_axes=(0, 0, None if train_data is None else 0))
         test_v = jax.vmap(self._test_fn)
         deliver = (self._deliver_sparse if cfg.delivery == "sparse"
                    else self._deliver_dense)
@@ -354,29 +441,32 @@ class LaxSimulator:
             trains = (next_train <= 0) & alive                # (N,)
 
             def do_train(operand):
-                params, sent = operand
+                committed, sent = operand
                 tkeys = jax.random.split(jax.random.fold_in(key_t, 0), n)
-                if train_data is None:
-                    trained = train_v(params, tkeys)
-                else:
-                    trained = train_v(params, tkeys, train_data)
+                trained = train_v(committed, tkeys, train_data)
+                # attackers never COMMIT local training; their honestly
+                # trained candidate is still handed to the attack below
                 params = jax.tree.map(
                     lambda new, old: jnp.where(
                         (trains & ~malicious).reshape(
                             (-1,) + (1,) * (new.ndim - 1)),
                         new, old),
-                    trained, params)
-                if bool(np.any(np.asarray(malicious))):
-                    pkeys = jax.random.split(jax.random.fold_in(key_t, 1), n)
-                    poison = jax.vmap(lambda k: self._poison(
-                        k, jax.tree.map(lambda x: x[0], params0)))(pkeys)
+                    trained, committed)
+                outgoing = trained
+                for gi, (attack, ids) in enumerate(attack_groups):
+                    # fold constants: 0 = train keys, 1 = group 0 (pinned
+                    # for legacy bit-parity), 2 = the interval draw below —
+                    # later groups start at 3 to keep every stream disjoint
+                    fold = 1 if gi == 0 else gi + 2
+                    akeys = jax.random.split(
+                        jax.random.fold_in(key_t, fold), n)[ids]
+                    bad = jax.vmap(
+                        lambda k, tr, cm, a=attack: a.apply(k, tr, cm, t)
+                    )(akeys, jax.tree.map(lambda x: x[ids], trained),
+                      jax.tree.map(lambda x: x[ids], committed))
                     outgoing = jax.tree.map(
-                        lambda p, bad: jnp.where(
-                            malicious.reshape((-1,) + (1,) * (p.ndim - 1)),
-                            bad, p),
-                        params, poison)
-                else:
-                    outgoing = params
+                        lambda o, b: o.at[ids].set(b.astype(o.dtype)),
+                        outgoing, bad)
                 sent = jax.tree.map(
                     lambda s, o: jnp.where(
                         trains.reshape((-1,) + (1,) * (s.ndim - 1)), o, s),

@@ -13,6 +13,33 @@ import jax
 _HAS_NEW_SHARD_MAP = hasattr(jax, "shard_map")
 
 
+def supports_partial_auto_shard_map() -> bool:
+    """Whether this jax can lower a shard_map that is manual over SOME mesh
+    axes while other, non-trivial (size > 1) axes stay auto. Old jaxlib's
+    SPMD partitioner aborts on that case deep inside compilation with an
+    opaque error; jax >= 0.6 (the ``jax.shard_map`` era) handles it."""
+    return _HAS_NEW_SHARD_MAP
+
+
+def check_partial_auto_shard_map(mesh, manual_axes) -> None:
+    """Fail fast — with an actionable message — where old jaxlib's SPMD
+    partitioner would abort opaquely: a partial-auto shard_map (manual over
+    ``manual_axes``) on a mesh whose remaining axes are non-trivial."""
+    if supports_partial_auto_shard_map():
+        return
+    auto = [a for a in mesh.axis_names
+            if a not in set(manual_axes) and mesh.shape[a] > 1]
+    if auto:
+        raise RuntimeError(
+            f"partial-auto shard_map is unsupported on jax {jax.__version__}: "
+            f"manual axes {sorted(manual_axes)} with non-trivial auto axes "
+            f"{auto} (mesh "
+            f"{'x'.join(str(mesh.shape[a]) for a in mesh.axis_names)}) abort "
+            "inside the old SPMD partitioner. Upgrade to jax >= 0.6, or use "
+            "a federation mesh whose non-federation axes are size 1 "
+            "(repro.launch.mesh.make_fed_mesh(F, 1, 1)).")
+
+
 def shard_map(fn, *, mesh=None, in_specs, out_specs, axis_names=None,
               check_vma=False):
     """``jax.shard_map`` on new jax; ``jax.experimental.shard_map`` fallback.

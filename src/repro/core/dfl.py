@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro import sharding as sh
 from repro.configs.base import ArchConfig, InputShape
 from repro.core import gossip as gossip_lib
@@ -134,6 +135,9 @@ def lower_gossip_round(cfg: ArchConfig, shape: InputShape, mesh, rules,
         raise ValueError("the DFL gossip round applies to training shapes")
     dfl = dfl or DFLConfig()
     fed_axis = fed_axis_for(mesh)
+    # old jaxlib aborts opaquely on partial-auto shard_map (e.g. the 16x16
+    # production mesh, manual only over the fed axis) — fail fast instead
+    compat.check_partial_auto_shard_map(mesh, {fed_axis})
     fed_size = mesh.shape[fed_axis]
     grules = gossip_rules(cfg, fed_axis)
     rep_impl = rep_lib.get(dfl.reputation)

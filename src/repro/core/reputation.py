@@ -38,8 +38,13 @@ class ReputationImpl:
         rep_row: (N,) my reputation for every known node id.
         sender_ids: (K,) int32 ids of this buffer's model senders.
         accuracies: (K,) measured accuracy of each received model (my data).
-        Returns the updated (N,) row. jnp-traceable.
+        Returns the updated (N,) row. jnp-traceable. An empty buffer
+        (K == 0 — a round that delivered nothing) is a no-op: nobody is
+        punished, the row passes through unchanged.
         """
+        accuracies = jnp.asarray(accuracies)
+        if accuracies.shape[0] == 0:
+            return jnp.asarray(rep_row)
         worst = jnp.min(accuracies)
         punished = (accuracies <= worst + _EPS).astype(jnp.float32)  # (K,)
         # scatter-add penalties onto the row (a sender may appear once)

@@ -145,46 +145,65 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     return record, lowered, compiled
 
 
+def _parse_attack_args(pairs):
+    """--attack-arg k=v pairs -> {k: int|float|str} for attacks.make."""
+    out = {}
+    for pair in pairs or ():
+        if "=" not in pair:
+            raise SystemExit(f"--attack-arg expects k=v, got {pair!r}")
+        k, v = pair.split("=", 1)
+        try:
+            out[k] = int(v)
+        except ValueError:
+            try:
+                out[k] = float(v)
+            except ValueError:
+                out[k] = v
+    return out
+
+
 def run_lax_federation(args):
-    """--engine lax: drive the vectorized tick simulator end-to-end (toy or
-    LeNet scenario) instead of lowering a mesh step — the quick sanity pass
-    for the §VI-D federation dynamics at a chosen scale/topology/engine."""
-    from repro.chain import scenarios, simlax
+    """--engine lax: drive the vectorized tick simulator end-to-end
+    (registered scenario x registered attack) instead of lowering a mesh
+    step — the quick sanity pass for the §VI-D federation dynamics at a
+    chosen scale/topology/adversary."""
+    from repro.chain import attacks, scenarios, simlax
     from repro.core import topology as topology_lib
     from repro.core.reputation import get as get_rep
 
     n, ticks = args.nodes, args.ticks
     ttl = max(1, args.ttl)
-    mal = tuple(range(max(1, n // 10)))   # 10% poisoned senders
-    if args.model == "lenet":
+    scenario_name = args.scenario or args.model
+    mal = tuple(range(max(1, n // 10)))   # 10% attackers
+    builder = scenarios.get(scenario_name)
+    if scenario_name == "lenet":
         # the paper recipe's data/optimizer constants (single source in
         # scenarios.py), at a CLI-friendly 4 steps per training action
-        sc = scenarios.lenet_scenario(
-            n, malicious=mal, train_steps=4, **scenarios.LENET_PAPER_HP)
-        train_data = sc.train_data()
+        sc = builder(n, malicious=mal, train_steps=4,
+                     **scenarios.LENET_PAPER_HP)
         interval = (6, 6)
     else:
-        sc = scenarios.toy_scenario(n, dim=16, malicious=mal)
-        train_data = None
+        sc = builder(n, dim=16, malicious=mal)
         interval = (8, 16)
+    attack = attacks.make(args.attack, **_parse_attack_args(args.attack_arg))
+    spec = attacks.FederationSpec.build(
+        n, malicious=mal, attack=attack,
+        initial_countdown=[1 + (5 * i) % interval[0] for i in range(n)])
     topo = topology_lib.make(args.topology, n, degree=args.topology_degree,
                              seed=1)
     cfg = simlax.SimLaxConfig(
         ticks=ticks, train_interval=interval, latency=1,
         ttl=ttl, record_every=max(1, ticks // 8), seed=0,
         delivery=args.delivery)
-    sim = simlax.LaxSimulator(
-        topology=topo, train_fn=sc.train_fn, eval_fn=sc.eval_fn,
-        test_fn=sc.test_fn, eval_data=sc.eval_data(),
-        rep_impl=get_rep("impl2"), cfg=cfg, malicious=mal,
-        train_data=train_data,
-        initial_countdown=[1 + (5 * i) % interval[0] for i in range(n)])
+    sim = simlax.LaxSimulator(sc, topo, spec, get_rep("impl2"), cfg)
     t0 = time.time()
-    res = sim.run(sc.init_params_stacked())
+    res = sim.run()
     wall = time.time() - t0
     honest = [i for i in range(n) if i not in mal]
     record = {
-        "engine": "lax", "model": args.model, "status": "ok",
+        "engine": "lax", "scenario": scenario_name, "model": scenario_name,
+        "status": "ok", "attack": attack.name,
+        "attack_params": _parse_attack_args(args.attack_arg),
         "delivery": args.delivery, "topology": args.topology,
         "ttl": ttl, "nodes": n, "ticks": ticks,
         "delivery_budget": res.stats["delivery_budget"],
@@ -196,10 +215,13 @@ def run_lax_federation(args):
             sum(res.mean_reputation(i) for i in mal) / len(mal)),
         "wall_s": round(wall, 1),
     }
-    print(f"[dryrun] lax {args.model} n={n} ticks={ticks} "
-          f"delivery={args.delivery} budget={record['delivery_budget']} "
+    print(f"[dryrun] lax {scenario_name} attack={attack.name} n={n} "
+          f"ticks={ticks} delivery={args.delivery} "
+          f"budget={record['delivery_budget']} "
           f"deliveries={record['deliveries']} "
-          f"honest_acc={record['honest_acc']:.3f} wall={wall:.1f}s")
+          f"honest_acc={record['honest_acc']:.3f} "
+          f"rep_attacker={record['malicious_reputation']:.2f} "
+          f"wall={wall:.1f}s")
     results = []
     if os.path.exists(args.out):
         with open(args.out) as f:
@@ -222,8 +244,19 @@ def main():
     ap.add_argument("--engine", default="mesh", choices=("mesh", "lax"),
                     help="mesh: lower+compile step cells (default); "
                     "lax: run the vectorized tick simulator end-to-end")
-    ap.add_argument("--model", default="toy", choices=("toy", "lenet"),
-                    help="federation scenario for --engine lax")
+    from repro.chain.attacks import names as attack_names
+    from repro.chain.scenarios import names as scenario_names
+    ap.add_argument("--scenario", default=None, choices=scenario_names(),
+                    help="registered federation scenario for --engine lax")
+    ap.add_argument("--model", default="toy", choices=scenario_names(),
+                    help="deprecated alias for --scenario")
+    ap.add_argument("--attack", default="gaussian", choices=attack_names(),
+                    help="registered attack for the poisoned senders "
+                    "(--engine lax)")
+    ap.add_argument("--attack-arg", action="append", default=[],
+                    metavar="K=V",
+                    help="attack parameter override, repeatable "
+                    "(e.g. --attack gaussian --attack-arg sigma=3.0)")
     ap.add_argument("--nodes", type=int, default=64,
                     help="federation size for --engine lax")
     ap.add_argument("--ticks", type=int, default=48,

@@ -1,0 +1,194 @@
+"""The attack registry (repro.chain.attacks): each shipped adversary's
+corruption semantics, jit/vmap traceability, parameterization via ``make``,
+and the FederationSpec role sheet both simulator engines are built from."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.chain import attacks
+from repro.chain.attacks import FederationSpec
+from repro.chain.node import DFLNode
+from repro.core.reputation import IMPL2
+
+P = {"a": jnp.arange(4, dtype=jnp.float32),
+     "b": {"w": jnp.ones((2, 3), jnp.float32),
+           "step": jnp.asarray(7, jnp.int32)}}
+COMMITTED = jax.tree.map(lambda x: x * 0 + 2 if x.dtype == jnp.float32 else x, P)
+KEY = jax.random.PRNGKey(0)
+
+
+def test_registry_get_make_names():
+    assert set(attacks.names()) == {"signflip", "gaussian", "scaled",
+                                    "freerider", "intermittent"}
+    assert attacks.get("signflip") is attacks.SIGNFLIP
+    strong = attacks.make("signflip", scale=3.0)
+    assert strong.scale == pytest.approx(3.0) and strong.name == "signflip"
+    assert attacks.make("gaussian") is attacks.GAUSSIAN   # no params: shared
+    with pytest.raises(KeyError, match="unknown attack"):
+        attacks.get("nope")
+    with pytest.raises(TypeError):
+        attacks.make("freerider", scale=2.0)   # unknown field
+
+
+def test_signflip_flips_float_leaves_only():
+    out = attacks.get("signflip").apply(KEY, P, COMMITTED, 0)
+    np.testing.assert_allclose(out["a"], -np.arange(4, dtype=np.float32))
+    np.testing.assert_allclose(out["b"]["w"], -np.ones((2, 3)))
+    assert int(out["b"]["step"]) == 7                  # int leaf untouched
+    boosted = attacks.make("signflip", scale=4.0).apply(KEY, P, COMMITTED, 0)
+    np.testing.assert_allclose(boosted["b"]["w"], -4.0 * np.ones((2, 3)))
+
+
+def test_gaussian_replaces_with_scaled_noise():
+    g1 = attacks.get("gaussian").apply(KEY, P, COMMITTED, 0)
+    g3 = attacks.make("gaussian", sigma=3.0).apply(KEY, P, COMMITTED, 0)
+    # noise ignores the honest candidate entirely, scales with sigma
+    np.testing.assert_allclose(np.asarray(g3["a"]), 3.0 * np.asarray(g1["a"]),
+                               rtol=1e-6)
+    assert not np.allclose(np.asarray(g1["b"]["w"]), np.asarray(P["b"]["w"]))
+    assert int(g1["b"]["step"]) == 7
+    # same key -> same noise (deterministic inside the scan)
+    g1b = attacks.get("gaussian").apply(KEY, P, COMMITTED, 0)
+    np.testing.assert_array_equal(np.asarray(g1["a"]), np.asarray(g1b["a"]))
+
+
+def test_scaled_boosts_the_local_update():
+    out = attacks.make("scaled", factor=10.0).apply(KEY, P, COMMITTED, 0)
+    want = np.asarray(COMMITTED["a"]) + 10.0 * (
+        np.asarray(P["a"]) - np.asarray(COMMITTED["a"]))
+    np.testing.assert_allclose(np.asarray(out["a"]), want, rtol=1e-6)
+    assert int(out["b"]["step"]) == 7
+
+
+def test_freerider_replays_committed_state():
+    out = attacks.get("freerider").apply(KEY, P, COMMITTED, 0)
+    jax.tree.map(lambda o, c: np.testing.assert_array_equal(
+        np.asarray(o), np.asarray(c)), out, COMMITTED)
+
+
+def test_intermittent_toggles_by_tick():
+    atk = attacks.make("intermittent", period=6, duty=2, inner="signflip")
+    on = atk.apply(KEY, P, COMMITTED, 1)       # 1 % 6 < 2 -> attacking
+    off = atk.apply(KEY, P, COMMITTED, 3)      # 3 % 6 >= 2 -> honest
+    np.testing.assert_allclose(np.asarray(on["a"]),
+                               -np.arange(4, dtype=np.float32))
+    np.testing.assert_array_equal(np.asarray(off["a"]), np.asarray(P["a"]))
+    # next window attacks again
+    np.testing.assert_allclose(np.asarray(atk.apply(KEY, P, COMMITTED, 6)["a"]),
+                               -np.arange(4, dtype=np.float32))
+
+
+@pytest.mark.parametrize("name", sorted(attacks.names()))
+def test_every_attack_is_jit_and_vmap_traceable(name):
+    """The contract the lax engine relies on: apply() vmaps over the
+    federation inside a jitted scan with a traced tick."""
+    atk = attacks.get(name)
+    n = 5
+    stacked = jax.tree.map(lambda x: jnp.stack([x] * n), P)
+    committed = jax.tree.map(lambda x: jnp.stack([x] * n), COMMITTED)
+    keys = jax.random.split(KEY, n)
+
+    @jax.jit
+    def go(keys, stacked, committed, tick):
+        return jax.vmap(lambda k, p, c: atk.apply(k, p, c, tick))(
+            keys, stacked, committed)
+
+    out = go(keys, stacked, committed, jnp.asarray(3, jnp.int32))
+    assert jax.tree.map(lambda a, b: a.shape == b.shape, out, stacked)
+    assert all(jax.tree.leaves(
+        jax.tree.map(lambda a, b: a.dtype == b.dtype, out, stacked)))
+
+
+def test_attacks_are_hashable_and_replaceable():
+    # frozen dataclasses: FederationSpec groups by instance equality
+    assert attacks.make("gaussian", sigma=2.0) == attacks.make(
+        "gaussian", sigma=2.0)
+    assert hash(attacks.get("signflip")) == hash(attacks.SignFlip())
+    assert dataclasses.replace(attacks.get("scaled"), factor=2.0).factor == 2.0
+
+
+# ================================================================ role sheet
+def test_federation_spec_build_and_accessors():
+    spec = FederationSpec.build(
+        8, malicious=(3, 1), attack="signflip", dead=(5,),
+        stragglers={2: 4}, initial_countdown=range(8))
+    assert spec.malicious == (1, 3)                  # sorted, deduped
+    assert spec.attack_for(1).name == "signflip"
+    assert spec.attack_for(0) is None
+    assert spec.straggler_map() == {2: 4}
+    assert spec.initial_countdown == tuple(range(8))
+    groups = spec.attack_groups()
+    assert len(groups) == 1
+    np.testing.assert_array_equal(
+        groups[0][1], [False, True, False, True] + [False] * 4)
+
+
+def test_federation_spec_heterogeneous_attackers_group_by_instance():
+    spec = FederationSpec.build(
+        6, malicious={0: "gaussian", 2: attacks.make("gaussian", sigma=2.0),
+                      4: "gaussian", 5: "signflip"})
+    groups = spec.attack_groups()
+    # three distinct instances: default gaussian {0,4}, sigma=2 {2}, signflip
+    assert len(groups) == 3
+    by_mask = {tuple(np.flatnonzero(m)): a.name for a, m in groups}
+    assert by_mask == {(0, 4): "gaussian", (2,): "gaussian", (5,): "signflip"}
+    # group order follows first appearance over ascending node ids
+    assert [tuple(np.flatnonzero(m)) for _, m in groups] \
+        == [(0, 4), (2,), (5,)]
+
+
+def test_federation_spec_dict_malicious_rejects_separate_attack():
+    # a heterogeneous dict already assigns attacks; a second attack=
+    # argument would be silently ignored otherwise
+    with pytest.raises(ValueError, match="drop the separate attack"):
+        FederationSpec.build(4, malicious={0: "signflip"}, attack="gaussian")
+
+
+def test_federation_spec_validation():
+    with pytest.raises(ValueError, match="attacker id"):
+        FederationSpec.build(4, malicious=(4,))
+    with pytest.raises(ValueError, match="dead id"):
+        FederationSpec.build(4, dead=(-1,))
+    with pytest.raises(ValueError, match="factor"):
+        FederationSpec.build(4, stragglers={0: 0})
+    with pytest.raises(ValueError, match="initial_countdown"):
+        FederationSpec.build(4, initial_countdown=(1, 2))
+    assert FederationSpec.honest(3).attackers == ()
+
+
+# ============================================================ heap-side node
+def _toy_node(attack=None, malicious=False):
+    params = {"w": jnp.full((4,), 2.0, jnp.float32)}
+    return DFLNode(
+        name="x", model_structure="toy", params=params,
+        train_fn=lambda p, k: (jax.tree.map(lambda x: x + 1.0, p), {}),
+        eval_fn=lambda p: 0.5, rep_impl=IMPL2, attack=attack,
+        malicious=malicious, rng=jax.random.PRNGKey(0))
+
+
+def test_node_attack_corrupts_broadcast_without_committing():
+    nd = _toy_node(attack="signflip")
+    out, _ = nd.train_local(0)
+    # broadcast = sign-flipped honestly-trained candidate (2 + 1 = 3)
+    np.testing.assert_allclose(np.asarray(out["w"]), -3.0 * np.ones(4))
+    # the node's persistent state never advanced
+    np.testing.assert_allclose(np.asarray(nd.params["w"]), 2.0 * np.ones(4))
+    assert nd.malicious
+
+
+def test_node_legacy_malicious_flag_maps_to_gaussian():
+    nd = _toy_node(malicious=True)
+    assert nd.attack is attacks.get("gaussian")
+    out, _ = nd.train_local(0)
+    assert not np.allclose(np.asarray(out["w"]), np.asarray(nd.params["w"]))
+
+
+def test_node_honest_by_default():
+    nd = _toy_node()
+    assert nd.attack is None and not nd.malicious
+    out, _ = nd.train_local(0)
+    np.testing.assert_allclose(np.asarray(out["w"]), 3.0 * np.ones(4))
+    np.testing.assert_allclose(np.asarray(nd.params["w"]), 3.0 * np.ones(4))

@@ -44,3 +44,49 @@ def test_reputation_never_increases_and_floors_at_zero():
 def test_custom_impl_pluggable():
     mine = register(ReputationImpl("custom-x", penalty=0.2, buffer_size=3))
     assert get("custom-x") is mine
+
+
+# ------------------------------- direct update_row coverage (edge semantics)
+def test_empty_buffer_round_is_noop():
+    """A FedAvg round that delivered nothing (K = 0) must punish nobody —
+    the row passes through unchanged (and jnp-typed)."""
+    row = jnp.asarray([1.0, 0.4, 0.0])
+    out = IMPL2.update_row(row, jnp.zeros((0,), jnp.int32),
+                           jnp.zeros((0,), jnp.float32))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(row))
+    # also under jit (static empty shape branches at trace time)
+    import jax
+    out_j = jax.jit(IMPL2.update_row)(row, jnp.zeros((0,), jnp.int32),
+                                      jnp.zeros((0,), jnp.float32))
+    np.testing.assert_array_equal(np.asarray(out_j), np.asarray(row))
+
+
+def test_all_tied_worst_senders_punished_and_floor_clamped():
+    """Three senders tied at the worst accuracy all lose penalty; a row
+    already at the floor clamps there instead of going negative."""
+    impl = ReputationImpl("clampy", penalty=0.4, buffer_size=3)
+    row = jnp.asarray([0.5, 0.3, 0.9, 1.0])
+    out = impl.update_row(row, jnp.asarray([0, 1, 2]),
+                          jnp.asarray([0.2, 0.2, 0.2]))
+    # all tied at worst: 0.5-0.4, 0.3-0.4 floored at 0, 0.9-0.4
+    np.testing.assert_allclose(np.asarray(out), [0.1, 0.0, 0.5, 1.0],
+                               atol=1e-6)
+    # a second identical round floors the first two at exactly 0
+    out2 = impl.update_row(out, jnp.asarray([0, 1, 2]),
+                           jnp.asarray([0.2, 0.2, 0.2]))
+    np.testing.assert_allclose(np.asarray(out2), [0.0, 0.0, 0.1, 1.0],
+                               atol=1e-6)
+
+
+def test_update_row_is_jit_traceable_inside_scan():
+    """The in-graph form the lax engine relies on: update_row under jit with
+    traced sender ids/accuracies."""
+    import jax
+
+    def body(row, _):
+        return IMPL1.update_row(row, jnp.asarray([1, 2]),
+                                jnp.asarray([0.1, 0.9])), None
+
+    row, _ = jax.lax.scan(body, jnp.ones((4,)), None, length=5)
+    np.testing.assert_allclose(np.asarray(row), [1.0, 0.95, 1.0, 1.0],
+                               atol=1e-6)

@@ -1,13 +1,75 @@
 """Direct coverage of the shared-scenario constructors (previously only
-exercised indirectly through full parity runs): heap-node construction,
-the Dirichlet data plumbing, and the vmappable LeNet callbacks."""
+exercised indirectly through full parity runs): the Scenario protocol +
+name registry, the generic heap binder, the Dirichlet data plumbing, and
+the vmappable LeNet callbacks."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.chain import scenarios
+from repro.chain import attacks, scenarios, simlax
+from repro.chain.attacks import FederationSpec
+from repro.core import topology as T
 from repro.core.reputation import IMPL2
+
+
+def test_scenario_registry():
+    assert scenarios.names() == ("lenet", "toy")
+    assert scenarios.get("toy") is scenarios.toy_scenario
+    assert scenarios.get("lenet") is scenarios.lenet_scenario
+    sc = scenarios.get("toy")(4, dim=3)
+    assert isinstance(sc, scenarios.ToyScenario) and sc.num_nodes == 4
+    with pytest.raises(KeyError, match="unknown scenario"):
+        scenarios.get("mnist-for-real")
+
+
+def test_scenarios_satisfy_protocol():
+    toy = scenarios.toy_scenario(3)
+    lenet = scenarios.lenet_scenario(2, pool=8, eval_size=4, test_size=8)
+    for sc in (toy, lenet):
+        assert isinstance(sc, scenarios.Scenario)
+        # one uniform signature set: train_fn(params, key, data)
+        stacked = sc.init_params_stacked()
+        p0 = jax.tree.map(lambda x: x[0], stacked)
+        d = sc.train_data()
+        d0 = None if d is None else jax.tree.map(lambda x: x[0], d)
+        out = sc.train_fn(p0, jax.random.PRNGKey(0), d0)
+        assert jax.tree.structure(out) == jax.tree.structure(p0)
+    assert toy.train_data() is None
+
+
+def test_generic_heap_binder_applies_spec_roles():
+    n = 5
+    sc = scenarios.toy_scenario(n)
+    spec = FederationSpec.build(
+        n, malicious={1: "signflip", 3: "gaussian"},
+        initial_countdown=[2] * n)
+    nodes = scenarios.make_heap_nodes(sc, rep_impl=IMPL2, ttl=2, spec=spec)
+    assert [nd.malicious for nd in nodes] == [False, True, False, True, False]
+    assert nodes[1].attack.name == "signflip"
+    assert nodes[3].attack is attacks.get("gaussian")
+    # spec must match the scenario size
+    with pytest.raises(ValueError, match="nodes"):
+        scenarios.make_heap_nodes(sc, rep_impl=IMPL2, ttl=2,
+                                  spec=FederationSpec.honest(n + 1))
+
+
+def test_make_heap_simulator_from_spec():
+    n = 6
+    sc = scenarios.toy_scenario(n, malicious=())
+    spec = FederationSpec.build(
+        n, malicious=(0,), attack="freerider", dead=(4,),
+        stragglers={2: 3}, initial_countdown=[1 + i for i in range(n)])
+    cfg = simlax.SimLaxConfig(ticks=30, train_interval=(5, 5), latency=1,
+                              ttl=2, record_every=10, seed=0)
+    sim = scenarios.make_heap_simulator(sc, T.full(n), spec, IMPL2, cfg)
+    assert sim.cfg.latency == (1, 1) and sim.cfg.ticks == 30
+    assert sim.next_train == {f"n{i}": 1 + i for i in range(n)}
+    assert sim.straggler_factor == {"n2": 3}
+    assert sim.dead == {"n4"}
+    assert sim.nodes["n0"].attack.name == "freerider"
+    sim.run()
+    assert sim.stats["tx_sent"] > 0
 
 
 def test_toy_heap_nodes_construction():

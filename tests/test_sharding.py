@@ -110,3 +110,27 @@ def test_smaller_alpha_more_imbalanced():
     even = dirichlet_class_probs(5, 10, 100.0, 0)
     skew = dirichlet_class_probs(5, 10, 0.1, 0)
     assert skew.max() > even.max()
+
+
+# ------------------------------------------- partial-auto shard_map fail-fast
+def test_partial_auto_shard_map_check_fails_fast_on_old_jax():
+    """dryrun --dfl on the 16x16 production mesh used to abort deep inside
+    old jaxlib's SPMD partitioner; repro.compat now detects the partial-auto
+    case up front and raises an actionable error instead."""
+    from types import SimpleNamespace
+
+    from repro import compat
+
+    prod = SimpleNamespace(axis_names=("data", "model"),
+                           shape={"data": 16, "model": 16})
+    fed = SimpleNamespace(axis_names=("fed", "data", "model"),
+                          shape={"fed": 4, "data": 1, "model": 1})
+    # federation meshes (trivial auto axes) pass on every jax version
+    compat.check_partial_auto_shard_map(fed, {"fed"})
+    # fully-manual is always fine too
+    compat.check_partial_auto_shard_map(prod, {"data", "model"})
+    if compat.supports_partial_auto_shard_map():
+        compat.check_partial_auto_shard_map(prod, {"data"})
+    else:
+        with pytest.raises(RuntimeError, match="jax >= 0.6"):
+            compat.check_partial_auto_shard_map(prod, {"data"})

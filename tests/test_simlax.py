@@ -1,11 +1,17 @@
 """Vectorized tick simulator vs the heap behavioral reference, the sparse
 (budgeted slot) receipt engine vs the dense N^2 oracle, plus
-scale/straggler/failure behaviour (paper §VI-D at large N)."""
+scale/straggler/failure behaviour (paper §VI-D at large N).
+
+Both engines are constructed from ONE ``FederationSpec`` role sheet
+(``LaxSimulator(sc, topo, spec, rep, cfg)`` vs
+``scenarios.make_heap_simulator(sc, topo, spec, rep, cfg)``), so the parity
+tests compare a single source of truth."""
 import numpy as np
 import pytest
 
-from repro.chain import scenarios, simlax
-from repro.chain.network import SimConfig, Simulator, mean_reputation
+from repro.chain import attacks, scenarios, simlax
+from repro.chain.attacks import FederationSpec
+from repro.chain.network import mean_reputation
 from repro.core import topology as T
 from repro.core.reputation import IMPL2
 
@@ -18,34 +24,27 @@ def _staggered(n, interval):
 
 def test_matches_heap_simulator_on_shared_scenario():
     """The acceptance scenario: same topology, schedule, and toy model on
-    both engines -> event counts identical, final mean accuracy/reputation
-    within tolerance."""
+    both engines, built from ONE FederationSpec -> event counts identical,
+    final mean accuracy/reputation within tolerance."""
     n, ticks, interval = 12, 160, 12
     sc = scenarios.toy_scenario(n, malicious=(0,))
     topo = T.full(n)
-    names = [f"n{i}" for i in range(n)]
-    stagger = _staggered(n, interval)
+    spec = FederationSpec.build(n, malicious=(0,),
+                                initial_countdown=_staggered(n, interval))
+    cfg = simlax.SimLaxConfig(ticks=ticks, train_interval=(interval, interval),
+                              latency=1, ttl=2, record_every=10, seed=0)
 
-    nodes = sc.make_heap_nodes(rep_impl=IMPL2, ttl=2)
-    heap = Simulator(nodes, topo.as_name_dict(names), sc.heap_test_fn(),
-                     SimConfig(ticks=ticks, seed=0,
-                               train_interval=(interval, interval),
-                               latency=(1, 1), record_every=10))
-    heap.next_train = {names[i]: stagger[i] for i in range(n)}
+    heap = scenarios.make_heap_simulator(sc, topo, spec, IMPL2, cfg)
     heap.run()
+    nodes = list(heap.nodes.values())
     honest = nodes[1:]
     heap_acc = np.mean([nd.accuracy_history[-1][1] for nd in honest])
     heap_mal = mean_reputation(honest, nodes[0].info.address)
     heap_hon = np.mean([mean_reputation([m for m in honest if m is not nd],
                                         nd.info.address) for nd in honest])
 
-    cfg = simlax.SimLaxConfig(ticks=ticks, train_interval=(interval, interval),
-                              latency=1, ttl=2, record_every=10, seed=0)
-    sim = simlax.LaxSimulator(
-        topology=topo, train_fn=sc.train_fn, eval_fn=sc.eval_fn,
-        test_fn=sc.test_fn, eval_data=sc.eval_data(), rep_impl=IMPL2,
-        cfg=cfg, malicious=(0,), initial_countdown=stagger)
-    res = sim.run(sc.init_params_stacked())
+    sim = simlax.LaxSimulator(sc, topo, spec, IMPL2, cfg)
+    res = sim.run()
     lax_acc = res.acc_history[-1][1:].mean()
     lax_mal = res.mean_reputation(0)
     lax_hon = np.mean([res.mean_reputation(i) for i in range(1, n)])
@@ -63,17 +62,127 @@ def test_matches_heap_simulator_on_shared_scenario():
     assert heap_mal < heap_hon - 0.3, (heap_mal, heap_hon)
 
 
+@pytest.mark.parametrize("attack", ["signflip", "freerider", "intermittent"])
+def test_attack_parity_heap_vs_lax(attack):
+    """Every attack is ONE definition driving both engines: identical event
+    streams (attacks corrupt payloads, never schedules) and matching
+    aggregate dynamics from the same FederationSpec."""
+    n, ticks, interval = 10, 120, 12
+    sc = scenarios.toy_scenario(n)
+    topo = T.full(n)
+    spec = FederationSpec.build(n, malicious=(0,), attack=attack,
+                                initial_countdown=_staggered(n, interval))
+    cfg = simlax.SimLaxConfig(ticks=ticks, train_interval=(interval, interval),
+                              latency=1, ttl=2, record_every=10, seed=0)
+
+    heap = scenarios.make_heap_simulator(sc, topo, spec, IMPL2, cfg)
+    heap.run()
+    nodes = list(heap.nodes.values())
+    honest = nodes[1:]
+    heap_acc = np.mean([nd.accuracy_history[-1][1] for nd in honest])
+    heap_mal = mean_reputation(honest, nodes[0].info.address)
+
+    sim = simlax.LaxSimulator(sc, topo, spec, IMPL2, cfg)
+    res = sim.run()
+    lax_acc = res.acc_history[-1][1:].mean()
+    lax_mal = res.mean_reputation(0)
+
+    # identical event streams across engines
+    assert res.stats["broadcasts"] == heap.stats["tx_sent"]
+    assert res.stats["deliveries"] == heap.stats["tx_delivered"]
+    assert abs(heap_acc - lax_acc) < 0.03, (attack, heap_acc, lax_acc)
+    assert abs(heap_mal - lax_mal) < 0.15, (attack, heap_mal, lax_mal)
+    if attack == "signflip":
+        # a constant garbage-model attacker must be crushed on both engines
+        assert lax_mal < 0.7 and heap_mal < 0.7, (lax_mal, heap_mal)
+
+
+def test_legacy_constructor_shim_equals_spec_path():
+    """The pre-spec keyword constructor is a thin shim over the new API:
+    same scenario + roles -> bit-identical run (the legacy ``malicious=``
+    ids map to the default gaussian attack)."""
+    n = 10
+    sc = scenarios.toy_scenario(n, dim=6, malicious=(1, 3))
+    topo = T.kregular(n, 2)
+    cfg = simlax.SimLaxConfig(ticks=80, train_interval=(6, 6), latency=1,
+                              ttl=2, record_every=20, seed=0)
+    cd = [1 + i % 6 for i in range(n)]
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        old = simlax.LaxSimulator(
+            topology=topo, train_fn=sc.train_fn, eval_fn=sc.eval_fn,
+            test_fn=sc.test_fn, eval_data=sc.eval_data(), rep_impl=IMPL2,
+            cfg=cfg, malicious=(1, 3), stragglers={2: 3}, dead=(5,),
+            initial_countdown=cd)
+    r_old = old.run(sc.init_params_stacked())
+
+    spec = FederationSpec.build(n, malicious=(1, 3), dead=(5,),
+                                stragglers={2: 3}, initial_countdown=cd)
+    new = simlax.LaxSimulator(sc, topo, spec, IMPL2, cfg)
+    r_new = new.run()
+
+    for k in ("broadcasts", "deliveries", "fedavg_rounds"):
+        assert r_old.stats[k] == r_new.stats[k], k
+    for k, v in r_old.final_state.items():
+        np.testing.assert_array_equal(v, r_new.final_state[k], err_msg=k)
+    np.testing.assert_array_equal(r_old.reputation, r_new.reputation)
+    np.testing.assert_array_equal(r_old.acc_history, r_new.acc_history)
+    np.testing.assert_array_equal(r_old.params["w"], r_new.params["w"])
+
+
+def test_mixing_spec_and_legacy_role_kwargs_rejected():
+    n = 6
+    sc = scenarios.toy_scenario(n)
+    topo = T.full(n)
+    cfg = simlax.SimLaxConfig(ticks=10, record_every=5)
+    spec = FederationSpec.build(n, malicious=(0,))
+    with pytest.raises(TypeError, match="not both"):
+        simlax.LaxSimulator(sc, topo, spec, IMPL2, cfg, malicious=(0,))
+    with pytest.raises(ValueError, match="nodes"):
+        simlax.LaxSimulator(sc, topo, FederationSpec.honest(n + 1), IMPL2, cfg)
+
+
+def test_two_arg_train_fn_with_train_data_rejected():
+    """A legacy (params, key) train_fn cannot consume per-node train_data;
+    silently dropping the data would corrupt results, so construction must
+    fail loudly."""
+    n = 4
+    sc = scenarios.toy_scenario(n)
+    with pytest.raises(TypeError, match="train_data"), \
+            pytest.warns(DeprecationWarning):
+        simlax.LaxSimulator(
+            topology=T.full(n), train_fn=lambda p, k: p,
+            eval_fn=sc.eval_fn, test_fn=sc.test_fn, eval_data=sc.eval_data(),
+            rep_impl=IMPL2, cfg=simlax.SimLaxConfig(ticks=10, record_every=5),
+            train_data={"x": np.zeros((n, 2))})
+
+
+def test_heterogeneous_attackers_run_with_disjoint_streams():
+    """Multiple distinct attacks in one spec: each group runs over its own
+    node ids inside the scan (smoke for the per-group gather/scatter and
+    the disjoint PRNG fold constants)."""
+    n = 8
+    sc = scenarios.toy_scenario(n)
+    spec = FederationSpec.build(
+        n, malicious={0: "signflip", 2: "gaussian", 5: "freerider"},
+        initial_countdown=[1 + i % 5 for i in range(n)])
+    cfg = simlax.SimLaxConfig(ticks=60, train_interval=(5, 9), latency=1,
+                              ttl=1, record_every=20, seed=0)
+    res = simlax.LaxSimulator(sc, T.full(n), spec, IMPL2, cfg).run()
+    assert res.stats["deliveries"] > 0
+    honest = [1, 3, 4, 6, 7]
+    assert res.acc_history[-1][honest].mean() > res.acc_history[0][honest].mean()
+
+
 def test_thousand_node_simulation_runs():
     """Acceptance: 1000 nodes x 200 ticks through the jitted engine."""
     n = 1000
     sc = scenarios.toy_scenario(n, dim=4, malicious=(0, 1, 2))
     cfg = simlax.SimLaxConfig(ticks=200, train_interval=(8, 16), latency=2,
                               ttl=2, record_every=20, seed=0)
-    sim = simlax.LaxSimulator(
-        topology=T.kregular(n, 3), train_fn=sc.train_fn, eval_fn=sc.eval_fn,
-        test_fn=sc.test_fn, eval_data=sc.eval_data(), rep_impl=IMPL2,
-        cfg=cfg, malicious=(0, 1, 2))
-    res = sim.run(sc.init_params_stacked())
+    sim = simlax.LaxSimulator(sc, T.kregular(n, 3),
+                              FederationSpec.build(n, malicious=(0, 1, 2)),
+                              IMPL2, cfg)
+    res = sim.run()
     assert res.acc_history.shape == (10, n)
     assert res.stats["broadcasts"] > n  # everyone broadcast repeatedly
     assert res.stats["deliveries"] > res.stats["broadcasts"]
@@ -88,10 +197,8 @@ def test_non_full_topologies_execute(kind):
     topo = T.make(kind, n, degree=2, p=0.25, seed=1)
     cfg = simlax.SimLaxConfig(ticks=80, train_interval=(6, 6), latency=1,
                               ttl=1, record_every=20, seed=0)
-    sim = simlax.LaxSimulator(
-        topology=topo, train_fn=sc.train_fn, eval_fn=sc.eval_fn,
-        test_fn=sc.test_fn, eval_data=sc.eval_data(), rep_impl=IMPL2, cfg=cfg)
-    res = sim.run(sc.init_params_stacked())
+    sim = simlax.LaxSimulator(sc, topo, FederationSpec.honest(n), IMPL2, cfg)
+    res = sim.run()
     # ttl=1 deterministic delivery: every broadcast reaches exactly deg(dst)
     per_node = res.stats["broadcasts_per_node"]
     expected = int(np.sum(topo.degrees() * per_node))
@@ -105,11 +212,10 @@ def test_straggler_broadcasts_less():
     sc = scenarios.toy_scenario(n)
     cfg = simlax.SimLaxConfig(ticks=150, train_interval=(8, 8), latency=1,
                               ttl=1, record_every=50, seed=0)
-    sim = simlax.LaxSimulator(
-        topology=T.full(n), train_fn=sc.train_fn, eval_fn=sc.eval_fn,
-        test_fn=sc.test_fn, eval_data=sc.eval_data(), rep_impl=IMPL2,
-        cfg=cfg, stragglers={0: 5})
-    res = sim.run(sc.init_params_stacked())
+    sim = simlax.LaxSimulator(sc, T.full(n),
+                              FederationSpec.build(n, stragglers={0: 5}),
+                              IMPL2, cfg)
+    res = sim.run()
     per_node = res.stats["broadcasts_per_node"]
     assert per_node[0] < per_node[1:].min()
 
@@ -119,11 +225,9 @@ def test_dead_node_is_silent_and_survivable():
     sc = scenarios.toy_scenario(n)
     cfg = simlax.SimLaxConfig(ticks=120, train_interval=(8, 8), latency=1,
                               ttl=2, record_every=40, seed=0)
-    sim = simlax.LaxSimulator(
-        topology=T.full(n), train_fn=sc.train_fn, eval_fn=sc.eval_fn,
-        test_fn=sc.test_fn, eval_data=sc.eval_data(), rep_impl=IMPL2,
-        cfg=cfg, dead=(3,))
-    res = sim.run(sc.init_params_stacked())
+    sim = simlax.LaxSimulator(sc, T.full(n),
+                              FederationSpec.build(n, dead=(3,)), IMPL2, cfg)
+    res = sim.run()
     per_node = res.stats["broadcasts_per_node"]
     assert per_node[3] == 0
     assert per_node[[i for i in range(n) if i != 3]].min() > 0
@@ -139,32 +243,25 @@ def test_reputation_crushes_malicious_only():
     sc = scenarios.toy_scenario(n, malicious=(4,))
     cfg = simlax.SimLaxConfig(ticks=300, train_interval=(10, 10), latency=1,
                               ttl=1, record_every=50, seed=0)
-    sim = simlax.LaxSimulator(
-        topology=T.full(n), train_fn=sc.train_fn, eval_fn=sc.eval_fn,
-        test_fn=sc.test_fn, eval_data=sc.eval_data(), rep_impl=IMPL2,
-        cfg=cfg, malicious=(4,),
-        initial_countdown=_staggered(n, 10))
-    res = sim.run(sc.init_params_stacked())
+    spec = FederationSpec.build(n, malicious=(4,),
+                                initial_countdown=_staggered(n, 10))
+    sim = simlax.LaxSimulator(sc, T.full(n), spec, IMPL2, cfg)
+    res = sim.run()
     mal = res.mean_reputation(4)
     hon = np.mean([res.mean_reputation(i) for i in range(n) if i != 4])
     assert mal < 0.2 < hon, (mal, hon)
 
 
 # ===================================================== sparse vs dense engines
-def _run_both_engines(sc, topo, *, ticks, interval, latency=1, ttl=2,
-                      seed=0, malicious=(), dead=(), stragglers=None,
-                      countdown=None, train_data=None):
+def _run_both_engines(sc, topo, spec, *, ticks, interval, latency=1, ttl=2,
+                      seed=0):
     out = {}
     for eng in ("sparse", "dense"):
         cfg = simlax.SimLaxConfig(
             ticks=ticks, train_interval=interval, latency=latency, ttl=ttl,
             record_every=max(1, ticks // 5), seed=seed, delivery=eng)
-        sim = simlax.LaxSimulator(
-            topology=topo, train_fn=sc.train_fn, eval_fn=sc.eval_fn,
-            test_fn=sc.test_fn, eval_data=sc.eval_data(), rep_impl=IMPL2,
-            cfg=cfg, malicious=malicious, dead=dead, stragglers=stragglers,
-            initial_countdown=countdown, train_data=train_data)
-        out[eng] = sim.run(sc.init_params_stacked())
+        sim = simlax.LaxSimulator(sc, topo, spec, IMPL2, cfg)
+        out[eng] = sim.run()
     return out["sparse"], out["dense"]
 
 
@@ -189,29 +286,33 @@ def _assert_engine_parity(s, d):
         rtol=1e-5, atol=1e-6), s.params, d.params)
 
 
-@pytest.mark.parametrize("kind,kw,ttl,latency,dead,stragglers,malicious", [
-    ("full", {}, 2, 1, (), None, (0,)),
-    ("ring", {}, 3, 2, (), None, ()),
-    ("kregular", {"degree": 3}, 2, 1, (5,), {1: 4}, (2,)),
-    ("erdos", {"p": 0.3}, 2, 2, (3,), None, (0, 1)),
-    ("smallworld", {"degree": 2, "beta": 0.3}, 1, 1, (), {0: 3}, (4,)),
-])
+@pytest.mark.parametrize(
+    "kind,kw,ttl,latency,dead,stragglers,malicious,attack", [
+        ("full", {}, 2, 1, (), None, (0,), "gaussian"),
+        ("ring", {}, 3, 2, (), None, (), "gaussian"),
+        ("kregular", {"degree": 3}, 2, 1, (5,), {1: 4}, (2,), "signflip"),
+        ("erdos", {"p": 0.3}, 2, 2, (3,), None, (0, 1), "intermittent"),
+        ("smallworld", {"degree": 2, "beta": 0.3}, 1, 1, (), {0: 3}, (4,),
+         "freerider"),
+    ])
 def test_sparse_matches_dense_engine(kind, kw, ttl, latency, dead,
-                                     stragglers, malicious):
+                                     stragglers, malicious, attack):
     n = 14
     sc = scenarios.toy_scenario(n, dim=8, malicious=malicious)
     topo = T.make(kind, n, seed=2, **kw)
     lo = ttl * latency + 1  # stay out of the re-broadcast-overwrite regime
-    s, d = _run_both_engines(
-        sc, topo, ticks=90, interval=(lo, lo + 4), latency=latency, ttl=ttl,
-        malicious=malicious, dead=dead, stragglers=stragglers,
-        countdown=[1 + (3 * i) % lo for i in range(n)])
+    spec = FederationSpec.build(
+        n, malicious=malicious, attack=attack, dead=dead,
+        stragglers=stragglers,
+        initial_countdown=[1 + (3 * i) % lo for i in range(n)])
+    s, d = _run_both_engines(sc, topo, spec, ticks=90, interval=(lo, lo + 4),
+                             latency=latency, ttl=ttl)
     assert s.stats["deliveries"] > 0
     _assert_engine_parity(s, d)
 
 
 def test_engine_parity_property():
-    """Hypothesis sweep: random topology/ttl/latency/dead/straggler/seed
+    """Hypothesis sweep: random topology/ttl/latency/dead/straggler/attack
     combinations never separate the engines."""
     hyp = pytest.importorskip("hypothesis")
     st = pytest.importorskip("hypothesis.strategies")
@@ -231,6 +332,8 @@ def test_engine_parity_property():
                          label="dead")
         malicious = data.draw(st.sets(st.integers(0, n - 1), max_size=2),
                               label="malicious")
+        attack = data.draw(st.sampled_from(sorted(attacks.names())),
+                           label="attack")
         strag = data.draw(st.dictionaries(
             st.integers(0, n - 1), st.integers(2, 4), max_size=2),
             label="stragglers")
@@ -238,11 +341,13 @@ def test_engine_parity_property():
         sc = scenarios.toy_scenario(n, dim=4, malicious=tuple(malicious),
                                     seed=seed)
         lo = ttl * latency + 1
-        s, d = _run_both_engines(
-            sc, topo, ticks=50, interval=(lo, lo + 3), latency=latency,
-            ttl=ttl, seed=seed, malicious=tuple(malicious),
-            dead=tuple(dead), stragglers=strag,
-            countdown=[1 + (3 * i) % (lo + 2) for i in range(n)])
+        spec = FederationSpec.build(
+            n, malicious=tuple(malicious), attack=attack, dead=tuple(dead),
+            stragglers=strag,
+            initial_countdown=[1 + (3 * i) % (lo + 2) for i in range(n)])
+        s, d = _run_both_engines(sc, topo, spec, ticks=50,
+                                 interval=(lo, lo + 3), latency=latency,
+                                 ttl=ttl, seed=seed)
         _assert_engine_parity(s, d)
 
     run()
@@ -258,10 +363,10 @@ def test_lenet_sparse_matches_dense_engine():
                                   pool=16, eval_size=8, test_size=16,
                                   train_steps=1, batch=4, lr=0.1)
     topo = T.kregular(n, 2)
-    s, d = _run_both_engines(
-        sc, topo, ticks=16, interval=(4, 4), latency=1, ttl=1,
-        malicious=mal, train_data=sc.train_data(),
-        countdown=[1 + (3 * i) % 4 for i in range(n)])
+    spec = FederationSpec.build(
+        n, malicious=mal, initial_countdown=[1 + (3 * i) % 4 for i in range(n)])
+    s, d = _run_both_engines(sc, topo, spec, ticks=16, interval=(4, 4),
+                             latency=1, ttl=1)
     assert s.stats["deliveries"] > 0
     _assert_engine_parity(s, d)
 
@@ -295,23 +400,15 @@ def test_rebroadcast_overwrite_warns_and_pins_heap_divergence():
     n, interval, latency, ttl, ticks = 8, 3, 2, 2, 60
     sc = scenarios.toy_scenario(n)
     topo = T.ring(n)
+    spec = FederationSpec.build(n, initial_countdown=[interval] * n)
     cfg = simlax.SimLaxConfig(ticks=ticks, train_interval=(interval, interval),
                               latency=latency, ttl=ttl, record_every=20,
                               seed=0)
     with pytest.warns(UserWarning, match="re-broadcast"):
-        sim = simlax.LaxSimulator(
-            topology=topo, train_fn=sc.train_fn, eval_fn=sc.eval_fn,
-            test_fn=sc.test_fn, eval_data=sc.eval_data(), rep_impl=IMPL2,
-            cfg=cfg, initial_countdown=[interval] * n)
-    res = sim.run(sc.init_params_stacked())
+        sim = simlax.LaxSimulator(sc, topo, spec, IMPL2, cfg)
+    res = sim.run()
 
-    names = [f"n{i}" for i in range(n)]
-    nodes = sc.make_heap_nodes(rep_impl=IMPL2, ttl=ttl)
-    heap = Simulator(nodes, topo.as_name_dict(names), sc.heap_test_fn(),
-                     SimConfig(ticks=ticks, seed=0,
-                               train_interval=(interval, interval),
-                               latency=(latency, latency), record_every=20))
-    heap.next_train = {nm: interval for nm in names}
+    heap = scenarios.make_heap_simulator(sc, topo, spec, IMPL2, cfg)
     heap.run()
 
     assert res.stats["broadcasts"] == heap.stats["tx_sent"]
@@ -322,23 +419,16 @@ def test_rebroadcast_overwrite_warns_and_pins_heap_divergence():
     # the boundary (interval == ttl*latency) is safe: same-tick deliveries
     # are processed before the re-broadcast -> no warning, exact heap parity
     safe_interval = ttl * latency
+    spec2 = FederationSpec.build(n, initial_countdown=[safe_interval] * n)
     cfg2 = simlax.SimLaxConfig(
         ticks=ticks, train_interval=(safe_interval, safe_interval),
         latency=latency, ttl=ttl, record_every=20, seed=0)
     import warnings as _warnings
     with _warnings.catch_warnings():
         _warnings.simplefilter("error")
-        sim2 = simlax.LaxSimulator(
-            topology=topo, train_fn=sc.train_fn, eval_fn=sc.eval_fn,
-            test_fn=sc.test_fn, eval_data=sc.eval_data(), rep_impl=IMPL2,
-            cfg=cfg2, initial_countdown=[safe_interval] * n)
-    res2 = sim2.run(sc.init_params_stacked())
-    nodes2 = sc.make_heap_nodes(rep_impl=IMPL2, ttl=ttl)
-    heap2 = Simulator(nodes2, topo.as_name_dict(names), sc.heap_test_fn(),
-                      SimConfig(ticks=ticks, seed=0,
-                                train_interval=(safe_interval, safe_interval),
-                                latency=(latency, latency), record_every=20))
-    heap2.next_train = {nm: safe_interval for nm in names}
+        sim2 = simlax.LaxSimulator(sc, topo, spec2, IMPL2, cfg2)
+    res2 = sim2.run()
+    heap2 = scenarios.make_heap_simulator(sc, topo, spec2, IMPL2, cfg2)
     heap2.run()
     assert res2.stats["deliveries"] == heap2.stats["tx_delivered"]
 
@@ -370,12 +460,10 @@ def test_lenet_smoke():
     cfg = simlax.SimLaxConfig(ticks=30, train_interval=(6, 6), latency=1,
                               ttl=2, record_every=10, seed=0,
                               delivery="sparse")
-    sim = simlax.LaxSimulator(
-        topology=topo, train_fn=sc.train_fn, eval_fn=sc.eval_fn,
-        test_fn=sc.test_fn, eval_data=sc.eval_data(), rep_impl=IMPL2,
-        cfg=cfg, malicious=mal, train_data=sc.train_data(),
-        initial_countdown=[1 + (5 * i) % 6 for i in range(n)])
-    res = sim.run(sc.init_params_stacked())
+    spec = FederationSpec.build(
+        n, malicious=mal, initial_countdown=[1 + (5 * i) % 6 for i in range(n)])
+    sim = simlax.LaxSimulator(sc, topo, spec, IMPL2, cfg)
+    res = sim.run()
     assert res.stats["delivery_budget"] == 7   # kregular(8,2) ttl=2 ball
     assert res.stats["deliveries"] > 0
     assert res.stats["broadcasts"] >= n
@@ -393,14 +481,11 @@ def test_lenet_poisoned_federation_reaches_paper_accuracy():
     nodes' (~7 min on 2 CPU cores; the sparse engine is what makes the
     receipt-eval bill payable at all)."""
     n = 10
-    sc, mal, topo, cfg, countdown = scenarios.lenet_paper_setup(n)
+    sc, spec, topo, cfg = scenarios.lenet_paper_setup(n)
+    mal = spec.malicious
     assert mal == (0, 1)    # 20% poisoned senders
-    sim = simlax.LaxSimulator(
-        topology=topo, train_fn=sc.train_fn, eval_fn=sc.eval_fn,
-        test_fn=sc.test_fn, eval_data=sc.eval_data(), rep_impl=IMPL2,
-        cfg=cfg, malicious=mal, train_data=sc.train_data(),
-        initial_countdown=countdown)
-    res = sim.run(sc.init_params_stacked())
+    sim = simlax.LaxSimulator(sc, topo, spec, IMPL2, cfg)
+    res = sim.run()
     honest = [i for i in range(n) if i not in mal]
     final_acc = res.acc_history[-1][honest].mean()
     rep_mal = np.mean([res.mean_reputation(i) for i in mal])
