@@ -49,7 +49,7 @@ single-source-of-truth comparison (tests/test_simlax.py).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -172,6 +172,29 @@ FREERIDER = register(FreeRider())
 INTERMITTENT = register(Intermittent())
 
 
+# ======================================================== shared PRNG streams
+def attack_fold(group_index: int) -> int:
+    """The fold constant keying attack group ``group_index``'s PRNG stream.
+
+    Single source for BOTH engines: the lax scan folds 0 for train keys,
+    1 for attack group 0 (pinned so a single-gaussian spec replays the
+    legacy hard-coded poison stream bit-for-bit) and 2 for the interval
+    draw, so later groups start at 3 to keep every stream disjoint.
+    """
+    return 1 if group_index == 0 else group_index + 2
+
+
+def attack_key_at(base_key, tick, fold: int, num_nodes: int, node: int):
+    """Node ``node``'s attack key at ``tick`` — EXACTLY the key the lax
+    scan hands that node's attack vmap (``split(fold_in(fold_in(key0, t),
+    fold), n)[node]``). The heap ``DFLNode`` draws from this same stream
+    (via ``FederationSpec.attack_key_fns``), which is what upgrades
+    randomized-attack parity between the engines from event-stream to
+    bitwise."""
+    key_t = jax.random.fold_in(base_key, tick)
+    return jax.random.split(jax.random.fold_in(key_t, fold), num_nodes)[node]
+
+
 # ================================================================= role sheet
 def _resolve(attack) -> object:
     return get(attack) if isinstance(attack, str) else attack
@@ -270,3 +293,19 @@ class FederationSpec:
                 groups.append((a, np.zeros((self.num_nodes,), np.bool_)))
             groups[index[a]][1][i] = True
         return groups
+
+    def attack_key_fns(self, seed: int) -> Dict[int, Callable]:
+        """Per-attacker ``tick -> key`` streams for the heap engine, drawn
+        from the SAME fold_in(tick) scheme the lax scan uses (group order
+        over ``attack_groups()``, fold constants from ``attack_fold``) —
+        with matching broadcast ticks the two engines poison with
+        bit-identical randomness."""
+        base = jax.random.PRNGKey(seed)
+        fns: Dict[int, Callable] = {}
+        for gi, (_, mask) in enumerate(self.attack_groups()):
+            for i in np.flatnonzero(mask):
+                def key_at(tick, _fold=attack_fold(gi), _i=int(i)):
+                    return attack_key_at(base, tick, _fold,
+                                         self.num_nodes, _i)
+                fns[int(i)] = key_at
+        return fns

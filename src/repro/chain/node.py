@@ -48,6 +48,7 @@ class DFLNode:
                  tx_per_block: int = 4, expire_after: float = 50.0,
                  malicious: bool = False, attack=None,
                  rng: Optional[jax.Array] = None,
+                 attack_key_fn: Optional[Callable] = None,
                  use_kernel: bool = False):
         self.name = name
         self.kp = crypto.generate_keypair()
@@ -67,6 +68,11 @@ class DFLNode:
         self.attack = attack
         self.malicious = attack is not None
         self.rng = rng if rng is not None else jax.random.PRNGKey(0)
+        # tick -> attack key, the lax scan's fold_in(tick) stream
+        # (attacks.attack_key_at via FederationSpec.attack_key_fns); None
+        # falls back to the legacy per-node rng split
+        self.attack_key_fn = attack_key_fn
+        self.last_broadcast = None      # most recent train_local output
         self.use_kernel = use_kernel
 
         self.reputation: Dict[str, float] = {}   # address -> [0,1], local only
@@ -84,10 +90,17 @@ class DFLNode:
             # model poisoning: corrupt the honestly trained candidate at
             # broadcast time WITHOUT committing it (mirrors the vectorized
             # engine: attackers' persistent params never advance)
-            k_train, k_attack = jax.random.split(sub)
+            if self.attack_key_fn is not None:
+                # the lax scan's stream — bitwise-identical poison draws
+                k_train, k_attack = sub, self.attack_key_fn(now)
+            else:
+                k_train, k_attack = jax.random.split(sub)
             trained, _ = self.train_fn(self.params, k_train)
-            return self.attack.apply(k_attack, trained, self.params, now), {}
+            out = self.attack.apply(k_attack, trained, self.params, now)
+            self.last_broadcast = out
+            return out, {}
         self.params, metrics = self.train_fn(self.params, sub)
+        self.last_broadcast = self.params
         return self.params, metrics
 
     # ---------------------------------------------------- transactions (Fig 1)

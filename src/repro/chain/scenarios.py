@@ -104,18 +104,23 @@ def names() -> tuple:
 # ===================================================== generic heap binding
 def make_heap_nodes(scenario: Scenario, *, rep_impl: ReputationImpl,
                     ttl: int, seed: int = 0,
-                    spec: Optional[FederationSpec] = None) -> List[DFLNode]:
+                    spec: Optional[FederationSpec] = None,
+                    sim_seed: Optional[int] = None) -> List[DFLNode]:
     """Bind ANY Scenario to heap-`Simulator` nodes: slice the stacked
     params/data per node and wrap the uniform jax callbacks into the node's
     (params, key) -> (params, metrics) / params -> float conventions.
     ``spec`` assigns attacker roles (falls back to the scenario's legacy
-    ``malicious`` ids with the default gaussian attack)."""
+    ``malicious`` ids with the default gaussian attack). ``sim_seed`` (the
+    lax engine's ``SimLaxConfig.seed``) wires each attacker to the scan's
+    fold_in(tick) poison stream so randomized attacks draw bit-identical
+    keys on both engines; None keeps the legacy per-node rng split."""
     n = scenario.num_nodes
     if spec is None:
         spec = FederationSpec.build(
             n, malicious=tuple(getattr(scenario, "malicious", ()) or ()))
     if spec.num_nodes != n:
         raise ValueError(f"spec is for {spec.num_nodes} nodes, scenario has {n}")
+    key_fns = {} if sim_seed is None else spec.attack_key_fns(sim_seed)
     stacked = scenario.init_params_stacked()
     tdata = scenario.train_data()
     edata = scenario.eval_data()
@@ -138,6 +143,7 @@ def make_heap_nodes(scenario: Scenario, *, rep_impl: ReputationImpl,
             name=f"n{i}", model_structure=type(scenario).__name__.lower(),
             params=params_i, train_fn=train_fn, eval_fn=eval_fn,
             rep_impl=rep_impl, ttl=ttl, attack=spec.attack_for(i),
+            attack_key_fn=key_fns.get(i),
             rng=jax.random.PRNGKey(seed * 1000 + i)))
     return nodes
 
@@ -161,7 +167,7 @@ def make_heap_simulator(scenario: Scenario, topology, spec: FederationSpec,
     The scalar per-hop latency becomes the heap's (lo, hi) = (l, l)."""
     from repro.chain.network import SimConfig, Simulator
     nodes = make_heap_nodes(scenario, rep_impl=rep_impl, ttl=cfg.ttl,
-                            seed=seed, spec=spec)
+                            seed=seed, spec=spec, sim_seed=cfg.seed)
     names_ = [nd.name for nd in nodes]
     sim = Simulator(
         nodes, topology.as_name_dict(names_), heap_test_fn(scenario),

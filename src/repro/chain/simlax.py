@@ -13,7 +13,9 @@ per-node action vectorized:
   ``src`` (INT32_MAX when none), set at broadcast time to
   ``t + hop_distance * latency`` for every node within ``ttl`` hops — with
   deterministic per-hop latency this is exactly the heap simulator's
-  first-arrival (duplicate-dropping) flood;
+  first-arrival (duplicate-dropping) flood, and (since the frontier
+  lowering) exactly the hop at which ``topology.gossip_schedule`` delivers
+  that pair in the production gossip round, on EVERY topology kind;
 * the FedAvg buffer is the streaming form of Eq. 3 (weighted sum + weight
   total + count) plus a running (min accuracy, argmin sender) pair for the
   reputation punishment, all (N,) / (N, N) arrays;
@@ -67,6 +69,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.chain import attacks as attacks_lib
 from repro.chain.attacks import FederationSpec
 from repro.core import topology as topology_lib
 from repro.core.reputation import ReputationImpl
@@ -117,6 +120,9 @@ class SimLaxResult:
     final_state: dict = dataclasses.field(default_factory=dict)
     # ^ raw end-of-run carry (arrive/w_sum/buf_cnt/min_acc/min_sender as
     #   numpy) — the engine-parity tests compare it across delivery engines
+    sent: object = None               # pytree (N, ...): each node's LAST
+    # broadcast payload (post-attack) — the heap `DFLNode.last_broadcast`
+    # counterpart the bitwise attack-parity tests compare against
 
     def mean_reputation(self, target: int) -> float:
         """target's reputation averaged over other nodes' local views
@@ -454,12 +460,14 @@ class LaxSimulator:
                     trained, committed)
                 outgoing = trained
                 for gi, (attack, ids) in enumerate(attack_groups):
-                    # fold constants: 0 = train keys, 1 = group 0 (pinned
-                    # for legacy bit-parity), 2 = the interval draw below —
-                    # later groups start at 3 to keep every stream disjoint
-                    fold = 1 if gi == 0 else gi + 2
+                    # fold constants: 0 = train keys, attacks.attack_fold(gi)
+                    # per group, 2 = the interval draw below; the heap
+                    # DFLNode draws from the SAME stream (FederationSpec
+                    # .attack_key_fns), making randomized-attack parity
+                    # bitwise
                     akeys = jax.random.split(
-                        jax.random.fold_in(key_t, fold), n)[ids]
+                        jax.random.fold_in(key_t, attacks_lib.attack_fold(gi)),
+                        n)[ids]
                     bad = jax.vmap(
                         lambda k, tr, cm, a=attack: a.apply(k, tr, cm, t)
                     )(akeys, jax.tree.map(lambda x: x[ids], trained),
@@ -521,4 +529,5 @@ class LaxSimulator:
                 for k in ("arrive", "w_sum", "buf_cnt",
                           "min_acc", "min_sender", "next_train")
             },
+            sent=jax.tree.map(np.asarray, final["sent"]),
         )

@@ -43,12 +43,48 @@ class DFLConfig:
     topology_p: float = 0.25      # erdos edge probability
     topology_beta: float = 0.2    # smallworld rewiring probability
     topology_seed: int = 0
+    schedule: str = "frontier"    # gossip lowering: frontier|chain
 
     def make_topology(self, fed_size: int) -> topology_lib.Topology:
         return topology_lib.make(
             self.topology, fed_size, degree=self.topology_degree,
             p=self.topology_p, beta=self.topology_beta,
             seed=self.topology_seed)
+
+
+def schedule_report(dfl: DFLConfig, fed_size: int, *, strict: bool = True,
+                    topo: Optional[topology_lib.Topology] = None) -> dict:
+    """Audit the gossip lowering this DFLConfig produces at ``fed_size``.
+
+    Returns coverage / collective-count facts for logging and the dryrun
+    record. With ``strict`` (the default for every --dfl lowering path), a
+    schedule that under-covers the ttl-ball raises instead of letting the
+    round silently run with partial delivery — only reachable via the
+    ``schedule="chain"`` regression oracle on irregular graphs. ``topo``
+    skips rebuilding an already-constructed topology.
+    """
+    if topo is None:
+        topo = dfl.make_topology(fed_size)
+    audit = topology_lib.audit_schedule(topo, dfl.ttl, schedule=dfl.schedule)
+    report = {
+        "topology": dfl.topology, "ttl": dfl.ttl, "schedule": dfl.schedule,
+        "fed_size": fed_size,
+        "coverage": round(audit.coverage, 4),
+        "missing_pairs": len(audit.missing),
+        "duplicate_pairs": len(audit.duplicates),
+        "wasted_steps": len(audit.wasted_steps),
+        "num_collectives": audit.num_collectives,
+    }
+    if strict and audit.missing:
+        raise RuntimeError(
+            f"gossip schedule under-covers the ttl-ball: "
+            f"{len(audit.missing)} of the in-ball (receiver, sender) pairs "
+            f"are never delivered (coverage {audit.coverage:.2f}) for "
+            f"topology={dfl.topology} ttl={dfl.ttl} "
+            f"schedule={dfl.schedule!r} at fed_size={fed_size}. Use the "
+            f"default schedule='frontier' for exact ttl-ball flooding; "
+            f"schedule='chain' is only a regression oracle.")
+    return report
 
 
 def fed_axis_for(mesh) -> str:
@@ -128,9 +164,12 @@ def init_federation(cfg: ArchConfig, fed_size: int, key, opt=None):
 
 
 def lower_gossip_round(cfg: ArchConfig, shape: InputShape, mesh, rules,
-                       dfl: Optional[DFLConfig] = None):
+                       dfl: Optional[DFLConfig] = None,
+                       schedule_checked: bool = False):
     """Dry-run entry: lower ONE gossip round (the paper's technique) for this
-    arch on this mesh. Called by dryrun.py --dfl."""
+    arch on this mesh. Called by dryrun.py --dfl. ``schedule_checked``
+    skips the under-coverage fail-fast when the caller already ran
+    ``schedule_report`` (dryrun audits up front for its log/record)."""
     if shape.kind != "train":
         raise ValueError("the DFL gossip round applies to training shapes")
     dfl = dfl or DFLConfig()
@@ -139,6 +178,11 @@ def lower_gossip_round(cfg: ArchConfig, shape: InputShape, mesh, rules,
     # production mesh, manual only over the fed axis) — fail fast instead
     compat.check_partial_auto_shard_map(mesh, {fed_axis})
     fed_size = mesh.shape[fed_axis]
+    topo = dfl.make_topology(fed_size)
+    if not schedule_checked:
+        # fail fast on a schedule that under-covers the ttl-ball (only the
+        # schedule="chain" oracle on irregular graphs can trip this)
+        schedule_report(dfl, fed_size, strict=True, topo=topo)
     grules = gossip_rules(cfg, fed_axis)
     rep_impl = rep_lib.get(dfl.reputation)
 
@@ -155,7 +199,7 @@ def lower_gossip_round(cfg: ArchConfig, shape: InputShape, mesh, rules,
     round_fn = gossip_lib.make_gossip_round(
         make_lm_eval_fn(cfg), fed_axis=fed_axis, fed_size=fed_size,
         ttl=dfl.ttl, rep_impl=rep_impl, compress=dfl.compress, mesh=mesh,
-        topology=dfl.make_topology(fed_size))
+        topology=topo, schedule=dfl.schedule)
 
     with sh.activation_sharding(mesh, grules):
         lowered = jax.jit(

@@ -7,8 +7,10 @@ feeds reputation-weighted FedAvg. Here the "network" is the federation axis
 of the mesh (pod axis multi-pod, or the data axis single-pod) and the gossip
 graph is a `repro.core.topology.Topology` baked into ONE jitted program: its
 ttl-bounded flood compiles to a static schedule of permutation steps
-(`topology.gossip_schedule` — exact ball for circulant graphs, deduplicated
-colour-class chains otherwise), one ``jax.lax.ppermute`` each:
+(`topology.gossip_schedule` — the per-hop BFS-frontier lowering, EXACT for
+every topology: each in-ball (receiver, sender) pair delivered exactly once,
+at its BFS hop; the legacy under-covering chain lowering stays behind
+``schedule="chain"`` as a regression oracle), one ``jax.lax.ppermute`` each:
 
     for each step (perm, parent):          (static unroll)
         payload <- ppermute(parent step's payload or my model, perm)
@@ -63,6 +65,7 @@ def make_gossip_round(
     compress: Optional[str] = None,
     mesh=None,
     topology: Optional[topology_lib.Topology] = None,
+    schedule: str = "frontier",
 ):
     """Build the jitted gossip round.
 
@@ -72,6 +75,9 @@ def make_gossip_round(
     ``topology`` is any `repro.core.topology.Topology` over ``fed_size`` nodes
     (default: the bidirectional ring, matching the seed lowering). The round
     costs ``gossip_schedule(topology, ttl).num_collectives`` permutes.
+    ``schedule`` picks the lowering: ``"frontier"`` (default, exact ttl-ball
+    on every topology) or ``"chain"`` (the legacy chain-walk oracle, which
+    under-covers the ball on irregular graphs at ttl >= 2).
 
     Inputs of the returned fn (all leading-dim fed-sharded):
         fed_params: pytree, leaves (F, ...)
@@ -86,7 +92,8 @@ def make_gossip_round(
     if topology.num_nodes != fed_size:
         raise ValueError(
             f"topology has {topology.num_nodes} nodes, fed_size={fed_size}")
-    schedule = topology_lib.gossip_schedule(topology, ttl)
+    schedule = topology_lib.gossip_schedule(topology, ttl,
+                                            schedule=schedule)
 
     def _send(tree):
         if compress == "int8":

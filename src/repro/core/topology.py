@@ -26,7 +26,7 @@ baked into the jitted round as static constants.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -285,6 +285,9 @@ def make(kind: str, n: int, *, degree: int = 2, p: float = 0.2,
 
 
 # ------------------------------------------------------------ gossip schedules
+SCHEDULES = ("frontier", "chain")
+
+
 @dataclasses.dataclass(frozen=True)
 class GossipSchedule:
     """Static lowering plan for one gossip round over a topology.
@@ -296,24 +299,40 @@ class GossipSchedule:
                 ``num_collectives == len(steps)``.
     ``senders`` (num_steps, N) int32: senders[s, i] is the node whose model
                 device i holds after step s, or -1 when nothing new arrives
-                there (broken chain, or a model this receiver already got at
-                an earlier step) — the receiver masks that contribution's
-                weight to zero, so every (receiver, sender) pair is counted
-                AT MOST ONCE per round.
+                there — the receiver masks that contribution's weight to
+                zero, so every (receiver, sender) pair is counted AT MOST
+                ONCE per round.
+    ``hops``    (num_steps,) int32: the flood hop each step belongs to. The
+                default ``frontier`` lowering delivers every pair (r, s) at
+                hop ``hop_distance(r, s)`` — the same timing the tick
+                simulators use (``arrive = t + dist * latency``).
 
-    Coverage: circulant graphs (ring/kregular) get the EXACT ttl-ball — one
-    offset permutation per in-ball distance, each in-ball sender delivered
-    exactly once. Irregular graphs flood along colour-class chains: hop 1
-    covers every direct neighbour exactly once; deeper hops cover the
-    chain-walk subset of the ttl-ball (deduplicated, never double-counted).
+    Coverage: the default ``frontier`` lowering is EXACT for every topology —
+    each pair within the ttl-ball is delivered exactly once, nothing outside
+    it ever is (``audit_schedule`` verifies this). The legacy ``chain``
+    lowering (kept as a pinned-regression oracle) floods irregular graphs
+    along colour-class chain walks, which silently under-covers the ball at
+    ttl >= 2; circulant graphs (ring/kregular/full) lower identically under
+    both (one offset permutation per in-ball distance).
     """
 
     steps: tuple       # ((perm, parent), ...)
     senders: np.ndarray
+    hops: Optional[np.ndarray] = None
 
     @property
     def num_collectives(self) -> int:
         return len(self.steps)
+
+    def delivery_counts(self) -> np.ndarray:
+        """(N, N) int: how many times the schedule delivers sender s's model
+        to receiver r (an exact schedule is the 0/1 ttl-ball indicator)."""
+        n = self.senders.shape[1]
+        got = np.zeros((n, n), int)
+        for row in self.senders:
+            for i in np.flatnonzero(row >= 0):
+                got[i, row[i]] += 1
+        return got
 
 
 def _circulant_ball_schedule(n: int, k: int, ttl: int):
@@ -325,34 +344,109 @@ def _circulant_ball_schedule(n: int, k: int, ttl: int):
     every in-ball sender exactly once — for k=1 this is the seed ring
     lowering's 2*ttl permutes.
     """
-    steps, senders = [], []
+    steps, senders, hops = [], [], []
     idx = np.arange(n)
     radius = min(k * ttl, (n - 1) // 2)
     for o in range(1, radius + 1):
+        hop = -(-o // k)                     # circulant dist of offset o
         steps.append((tuple((i, (i + o) % n) for i in range(n)), -1))
         senders.append((idx - o) % n)
+        hops.append(hop)
         steps.append((tuple((i, (i - o) % n) for i in range(n)), -1))
         senders.append((idx + o) % n)
+        hops.append(hop)
     if n % 2 == 0 and k * ttl >= n // 2:
         o = n // 2
         steps.append((tuple((i, (i + o) % n) for i in range(n)), -1))
         senders.append((idx + o) % n)
-    return steps, np.asarray(senders, np.int32)
+        hops.append(-(-o // k))
+    return steps, np.asarray(senders, np.int32), np.asarray(hops, np.int32)
 
 
-def gossip_schedule(topo: Topology, ttl: int) -> GossipSchedule:
-    if ttl < 1:
-        raise ValueError("ttl must be >= 1")
+def _frontier_schedule(topo: Topology, ttl: int):
+    """Exact per-hop BFS-frontier lowering for arbitrary graphs.
+
+    Hop 1 is the colour-class decomposition of the adjacency (every direct
+    neighbour delivered once, own payloads, ``parent == -1``). Hop h >= 2
+    delivers every pair at BFS distance exactly h by forwarding along fresh
+    frontier edges: each pair (r, s) picks a parent p — a neighbour of r one
+    hop closer to s — which received s's payload at a known hop-(h-1) step.
+    A ppermute step forwards ONE earlier step's payload, so hop-h tasks are
+    grouped by that parent step and each group is greedily edge-coloured
+    into partial permutations. Every step delivers at least one new pair;
+    every in-ball pair is delivered exactly once, at its BFS hop.
+    """
     n = topo.num_nodes
-    offsets = _circulant_offsets(topo.adj)
-    if offsets is not None:
-        steps, senders = _circulant_ball_schedule(n, len(offsets), ttl)
-        return GossipSchedule(steps=tuple(steps), senders=senders)
+    dist = topo.hop_distance()
+    steps, senders, hops = [], [], []
+    deliv_step = np.full((n, n), -1, np.int64)   # [receiver, sender] -> step
 
-    # irregular graph: forward along each colour-class chain for ttl hops,
-    # masking out (receiver, sender) pairs already delivered earlier
+    for cls in topo.perm_schedule():             # hop 1: own payloads
+        row = np.full((n,), -1, np.int32)
+        for (u, v) in cls:
+            row[v] = u
+            deliv_step[v, u] = len(steps)
+        steps.append((tuple(cls), -1))
+        senders.append(row)
+        hops.append(1)
+
+    for h in range(2, ttl + 1):
+        pairs = [(r, s) for r in range(n) for s in range(n)
+                 if dist[r, s] == h]
+        if not pairs:
+            break                                # ball saturated early
+        # parent choice balances per-(step, node) load so the greedy
+        # colouring below needs fewer permutes; ties break deterministically
+        groups: Dict[int, list] = {}             # parent step -> [(p, r, s)]
+        load_src: Dict[tuple, int] = {}
+        load_dst: Dict[tuple, int] = {}
+        for r, s in pairs:
+            best = None
+            for p in np.flatnonzero(topo.adj[r]):
+                p = int(p)
+                if dist[p, s] != h - 1:
+                    continue
+                sigma = int(deliv_step[p, s])    # p got s here at hop h-1
+                cost = max(load_src.get((sigma, p), 0),
+                           load_dst.get((sigma, r), 0))
+                if best is None or (cost, sigma, p) < best[0]:
+                    best = ((cost, sigma, p), p, sigma)
+            _, p, sigma = best                   # BFS guarantees a parent
+            groups.setdefault(sigma, []).append((p, r, s))
+            load_src[(sigma, p)] = load_src.get((sigma, p), 0) + 1
+            load_dst[(sigma, r)] = load_dst.get((sigma, r), 0) + 1
+        for sigma in sorted(groups):
+            colours = []                         # [(srcs, dsts, perm, row)]
+            for p, r, s in groups[sigma]:
+                for c in colours:
+                    if p not in c[0] and r not in c[1]:
+                        break
+                else:
+                    c = (set(), set(), [], np.full((n,), -1, np.int32))
+                    colours.append(c)
+                c[0].add(p)
+                c[1].add(r)
+                c[2].append((p, r))
+                c[3][r] = s
+            for _, _, perm, row in colours:
+                for i in np.flatnonzero(row >= 0):
+                    deliv_step[i, row[i]] = len(steps)
+                steps.append((tuple(perm), sigma))
+                senders.append(row)
+                hops.append(h)
+    return steps, np.asarray(senders, np.int32), np.asarray(hops, np.int32)
+
+
+def _chain_schedule(topo: Topology, ttl: int):
+    """The legacy chain-walk lowering (pinned-regression oracle): forward
+    along each colour-class chain for ttl hops, masking out pairs already
+    delivered. At ttl >= 2 the chain walks cover only a SUBSET of the
+    ttl-ball on irregular graphs — the exact-flooding bug the frontier
+    scheduler fixes; kept behind ``schedule="chain"`` so the under-coverage
+    stays measurable (audit_schedule, bench_gossip frontier_vs_chain)."""
+    n = topo.num_nodes
     perms = topo.perm_schedule()
-    steps, senders = [], []
+    steps, senders, hops = [], [], []
     delivered = np.zeros((n, n), bool)   # [receiver, sender]
     for perm in perms:
         recv_from = np.full((n,), -1, np.int64)
@@ -369,6 +463,7 @@ def gossip_schedule(topo: Topology, ttl: int) -> GossipSchedule:
                     delivered[i, s] = True
             steps.append((tuple(perm), parent))
             senders.append(row)
+            hops.append(h + 1)
             parent = len(steps) - 1
             ok = cur >= 0
             nxt = np.full((n,), -1, np.int64)
@@ -384,7 +479,7 @@ def gossip_schedule(topo: Topology, ttl: int) -> GossipSchedule:
             while p >= 0 and not keep[p]:
                 keep[p] = True
                 p = steps[p][1]
-    remap, kept_steps, kept_senders = {}, [], []
+    remap, kept_steps, kept_senders, kept_hops = {}, [], [], []
     for s, (step, row) in enumerate(zip(steps, senders)):
         if not keep[s]:
             continue
@@ -392,5 +487,106 @@ def gossip_schedule(topo: Topology, ttl: int) -> GossipSchedule:
         remap[s] = len(kept_steps)
         kept_steps.append((perm, remap[parent] if parent >= 0 else -1))
         kept_senders.append(row)
-    return GossipSchedule(steps=tuple(kept_steps),
-                          senders=np.asarray(kept_senders, np.int32))
+        kept_hops.append(hops[s])
+    return (kept_steps, np.asarray(kept_senders, np.int32),
+            np.asarray(kept_hops, np.int32))
+
+
+def gossip_schedule(topo: Topology, ttl: int, *,
+                    schedule: str = "frontier") -> GossipSchedule:
+    """Lower one ttl-bounded gossip round to a static ppermute plan.
+
+    ``schedule="frontier"`` (default) is exact on every topology; circulant
+    graphs (ring/kregular/full) take the closed-form offset lowering either
+    way, so their collective count is identical under both modes.
+    ``schedule="chain"`` replays the legacy chain-walk lowering, which
+    under-covers the ttl-ball on irregular graphs at ttl >= 2.
+    """
+    if ttl < 1:
+        raise ValueError("ttl must be >= 1")
+    if schedule not in SCHEDULES:
+        raise ValueError(
+            f"unknown schedule {schedule!r}; choose from {SCHEDULES}")
+    n = topo.num_nodes
+    offsets = _circulant_offsets(topo.adj)
+    if offsets is not None:
+        steps, senders, hops = _circulant_ball_schedule(n, len(offsets), ttl)
+    elif schedule == "frontier":
+        steps, senders, hops = _frontier_schedule(topo, ttl)
+    else:
+        steps, senders, hops = _chain_schedule(topo, ttl)
+    return GossipSchedule(steps=tuple(steps), senders=senders, hops=hops)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleAudit:
+    """``audit_schedule``'s verdict on one GossipSchedule vs the BFS ball.
+
+    ``missing``      in-ball (receiver, sender) pairs the schedule never
+                     delivers — the chain lowering's under-coverage bug
+    ``duplicates``   pairs delivered more than once (double-counted weights)
+    ``out_of_ball``  delivered pairs with hop distance > ttl (or self/
+                     unreachable)
+    ``mistimed``     pairs delivered at a step whose hop != their BFS
+                     distance (breaks hop-distance delivery-timing parity
+                     with the tick simulators)
+    ``wasted_steps`` step indices that neither deliver a new pair nor feed
+                     (transitively) a delivering step — pure collective cost
+    ``coverage``     delivered_pairs / ball_pairs
+    """
+    ttl: int
+    missing: tuple
+    duplicates: tuple
+    out_of_ball: tuple
+    mistimed: tuple
+    wasted_steps: tuple
+    ball_pairs: int
+    delivered_pairs: int
+    coverage: float
+    num_collectives: int
+
+    @property
+    def ok(self) -> bool:
+        return not (self.missing or self.duplicates or self.out_of_ball
+                    or self.mistimed or self.wasted_steps)
+
+
+def audit_schedule(topo: Topology, ttl: int,
+                   sched: Optional[GossipSchedule] = None, *,
+                   schedule: str = "frontier") -> ScheduleAudit:
+    """Check a GossipSchedule against the exact BFS ttl-ball: every in-ball
+    (receiver, sender) pair delivered exactly once, nothing else delivered,
+    no step wasted. ``sched`` defaults to ``gossip_schedule(topo, ttl,
+    schedule=schedule)``."""
+    if sched is None:
+        sched = gossip_schedule(topo, ttl, schedule=schedule)
+    n = topo.num_nodes
+    dist = topo.hop_distance()
+    ball = (dist >= 1) & (dist <= ttl)
+    counts = sched.delivery_counts()
+    missing = tuple(map(tuple, np.argwhere(ball & (counts == 0))))
+    duplicates = tuple(map(tuple, np.argwhere(counts > 1)))
+    out_of_ball = tuple(map(tuple, np.argwhere(~ball & (counts > 0))))
+    mistimed = []
+    if sched.hops is not None:
+        for step, row in enumerate(sched.senders):
+            for r in np.flatnonzero(row >= 0):
+                if dist[r, row[r]] != sched.hops[step]:
+                    mistimed.append((int(r), int(row[r])))
+    # a step is useful iff it delivers, or a useful step forwards through it
+    useful = [bool((row >= 0).any()) for row in sched.senders]
+    for s in range(len(sched.steps)):
+        if useful[s]:
+            p = sched.steps[s][1]
+            while p >= 0 and not useful[p]:
+                useful[p] = True
+                p = sched.steps[p][1]
+    wasted = tuple(s for s, u in enumerate(useful) if not u)
+    total = int(ball.sum())
+    delivered = int((ball & (counts > 0)).sum())
+    return ScheduleAudit(
+        ttl=ttl, missing=missing, duplicates=duplicates,
+        out_of_ball=out_of_ball, mistimed=tuple(mistimed),
+        wasted_steps=wasted, ball_pairs=total, delivered_pairs=delivered,
+        coverage=(delivered / total) if total else 1.0,
+        num_collectives=sched.num_collectives)

@@ -62,11 +62,25 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         rules.update(extra_rules)
     t0 = time.time()
 
+    sched_info = None
+    if dfl:
+        # audit the gossip lowering up front: log ttl-ball coverage and the
+        # collective count, and fail fast on an under-covering schedule
+        # rather than silently lowering a round with partial delivery
+        from repro.core import dfl as dfl_lib
+        dfl_cfg = dfl_cfg or dfl_lib.DFLConfig()
+        fed_size = mesh.shape[dfl_lib.fed_axis_for(mesh)]
+        sched_info = dfl_lib.schedule_report(dfl_cfg, fed_size, strict=True)
+        print(f"[dryrun] gossip schedule: topology={sched_info['topology']} "
+              f"ttl={sched_info['ttl']} schedule={sched_info['schedule']} "
+              f"coverage={sched_info['coverage']:.3f} "
+              f"num_collectives={sched_info['num_collectives']}")
+
     with mesh, sh.activation_sharding(mesh, rules):
         if dfl:
-            from repro.core import dfl as dfl_lib
             lowered = dfl_lib.lower_gossip_round(cfg, shape, mesh, rules,
-                                                 dfl=dfl_cfg)
+                                                 dfl=dfl_cfg,
+                                                 schedule_checked=True)
         elif shape.kind == "train":
             state, axes = step_lib.abstract_train_state(cfg)
             batch = step_lib.input_specs(cfg, shape)
@@ -129,6 +143,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         "dfl": dfl,
         "topology": (dfl_cfg.topology if (dfl and dfl_cfg is not None)
                      else ("ring" if dfl else None)),
+        "gossip_schedule": sched_info,
         "step_kind": "gossip" if dfl else shape.kind,
         "params": int(total_params),
         "bytes_per_device": {
@@ -273,6 +288,12 @@ def main():
     ap.add_argument("--ttl", type=int, default=1,
                     help="gossip flood radius in hops (--dfl and "
                     "--engine lax)")
+    from repro.core.topology import SCHEDULES
+    ap.add_argument("--gossip-schedule", default="frontier",
+                    choices=SCHEDULES,
+                    help="--dfl lowering: frontier (exact ttl-ball, default)"
+                    " or chain (legacy under-covering oracle; fails fast on"
+                    " irregular graphs at ttl >= 2)")
     ap.add_argument("--out", default="experiments/dryrun.json")
     ap.add_argument("--print-hlo", action="store_true")
     args = ap.parse_args()
@@ -294,7 +315,8 @@ def main():
     if args.dfl:
         from repro.core.dfl import DFLConfig
         dfl_cfg = DFLConfig(ttl=args.ttl, topology=args.topology,
-                            topology_degree=args.topology_degree)
+                            topology_degree=args.topology_degree,
+                            schedule=args.gossip_schedule)
 
     results = []
     if os.path.exists(args.out):

@@ -154,7 +154,40 @@ np.testing.assert_array_equal(
     np.asarray(m["models_received"]),
     ((dist >= 1) & (dist <= ttl)).sum(1).astype(np.float32))
 
-# 4) degree-1 node never punishes its only neighbor (reputation freeze guard)
+# 4) IRREGULAR graphs at ttl=2: the frontier schedule floods the EXACT
+# BFS ball through the jitted round (the chain lowering used to miss a
+# subset of it) — every in-ball sender weighted exactly once, matching the
+# host oracle, with the permute count the schedule promised
+for topo in (T.erdos_renyi(F, 0.4, 1), T.small_world(F, 2, 0.3, 0)):
+    ttl = 2
+    fn = gossip_lib.make_gossip_round(
+        eval_fn, fed_axis="fed", fed_size=F, ttl=ttl, rep_impl=IMPL2,
+        mesh=mesh, topology=topo)
+    sched = T.gossip_schedule(topo, ttl)
+    assert T.audit_schedule(topo, ttl, sched).ok, topo.kind
+    assert permute_count(fn) == sched.num_collectives, topo.kind
+    with mesh:
+        new, _, m = jax.jit(fn)(models, rep, vb)
+    dist = topo.hop_distance()
+    expect = np.zeros((F, D))
+    for i in range(F):
+        ball = [j for j in range(F) if 1 <= dist[i, j] <= ttl]
+        w = np.array([acc_of(j) for j in ball])
+        expect[i] = 0.5 * ((w / w.sum()) @ mn[ball] + mn[i])
+    np.testing.assert_allclose(np.asarray(new), expect, rtol=1e-5)
+    np.testing.assert_array_equal(
+        np.asarray(m["models_received"]),
+        ((dist >= 1) & (dist <= ttl)).sum(1).astype(np.float32))
+    # the chain oracle still lowers but under-covers the same ball
+    chain_fn = gossip_lib.make_gossip_round(
+        eval_fn, fed_axis="fed", fed_size=F, ttl=ttl, rep_impl=IMPL2,
+        mesh=mesh, topology=topo, schedule="chain")
+    with mesh:
+        _, _, mc = jax.jit(chain_fn)(models, rep, vb)
+    assert (np.asarray(mc["models_received"]).sum()
+            < np.asarray(m["models_received"]).sum()), topo.kind
+
+# 5) degree-1 node never punishes its only neighbor (reputation freeze guard)
 adj = np.zeros((F, F), bool)
 for a, b in [(0, 1), (1, 2), (2, 0), (2, 3)] + [(i, (i + 1) % 4) for i in range(4, F - 1)]:
     adj[a, b] = adj[b, a] = True

@@ -62,11 +62,18 @@ def test_matches_heap_simulator_on_shared_scenario():
     assert heap_mal < heap_hon - 0.3, (heap_mal, heap_hon)
 
 
-@pytest.mark.parametrize("attack", ["signflip", "freerider", "intermittent"])
+@pytest.mark.parametrize("attack",
+                         ["gaussian", "signflip", "freerider", "intermittent"])
 def test_attack_parity_heap_vs_lax(attack):
     """Every attack is ONE definition driving both engines: identical event
-    streams (attacks corrupt payloads, never schedules) and matching
-    aggregate dynamics from the same FederationSpec."""
+    streams (attacks corrupt payloads, never schedules), matching aggregate
+    dynamics from the same FederationSpec, and — since the heap node draws
+    attack keys from the lax scan's fold_in(tick) stream — the attacker's
+    broadcast payloads agree across engines: BITWISE for the randomized
+    gaussian poison (it depends only on the shared key stream), and to
+    float epsilon for trained/committed-dependent attacks (the committed
+    params drift at epsilon scale through the engines' differing FedAvg
+    buffer-window order)."""
     n, ticks, interval = 10, 120, 12
     sc = scenarios.toy_scenario(n)
     topo = T.full(n)
@@ -90,11 +97,89 @@ def test_attack_parity_heap_vs_lax(attack):
     # identical event streams across engines
     assert res.stats["broadcasts"] == heap.stats["tx_sent"]
     assert res.stats["deliveries"] == heap.stats["tx_delivered"]
+    # the attacker's final broadcast payload across engines
+    heap_payload = np.asarray(nodes[0].last_broadcast["w"])
+    lax_payload = res.sent["w"][0]
+    if attack == "gaussian":
+        np.testing.assert_array_equal(heap_payload, lax_payload)
+    else:
+        np.testing.assert_allclose(heap_payload, lax_payload, atol=5e-3)
     assert abs(heap_acc - lax_acc) < 0.03, (attack, heap_acc, lax_acc)
     assert abs(heap_mal - lax_mal) < 0.15, (attack, heap_mal, lax_mal)
     if attack == "signflip":
         # a constant garbage-model attacker must be crushed on both engines
         assert lax_mal < 0.7 and heap_mal < 0.7, (lax_mal, heap_mal)
+
+
+@pytest.mark.parametrize("attack", sorted(attacks.names()))
+def test_attack_stream_bitwise_parity(attack):
+    """The PRNG-stream pin behind the parity upgrade: with FedAvg disabled
+    (so committed params cannot drift between the engines' buffer-window
+    semantics) every attacker broadcast is reproduced across engines from
+    the SHARED fold_in(tick) key stream — bit-for-bit, except `scaled`,
+    where XLA fuses ``cm + factor * (tr - cm)`` differently under
+    vmap-in-scan vs a single jit (float-epsilon, keys still identical)."""
+    import dataclasses
+    rep = dataclasses.replace(IMPL2, buffer_size=10 ** 6)  # FedAvg never fires
+    n, ticks, interval = 8, 60, 8
+    mal = (0, 3)
+    sc = scenarios.toy_scenario(n)
+    topo = T.full(n)
+    spec = FederationSpec.build(
+        n, malicious=mal, attack=attack,
+        initial_countdown=[1 + (3 * i) % interval for i in range(n)])
+    cfg = simlax.SimLaxConfig(ticks=ticks, train_interval=(interval, interval),
+                              latency=1, ttl=2, record_every=10, seed=0)
+    heap = scenarios.make_heap_simulator(sc, topo, spec, rep, cfg)
+    heap.run()
+    res = simlax.LaxSimulator(sc, topo, spec, rep, cfg).run()
+    nodes = list(heap.nodes.values())
+    for i in mal:
+        heap_payload = np.asarray(nodes[i].last_broadcast["w"])
+        lax_payload = res.sent["w"][i]
+        if attack == "scaled":
+            np.testing.assert_allclose(heap_payload, lax_payload, atol=1e-5)
+        else:
+            np.testing.assert_array_equal(heap_payload, lax_payload)
+
+
+@pytest.mark.parametrize("kind,kw,ttl", [
+    ("erdos", {"p": 0.3}, 2),
+    ("erdos", {"p": 0.25}, 3),
+    ("smallworld", {"degree": 2, "beta": 0.3}, 2),
+    ("smallworld", {"degree": 2, "beta": 0.4}, 3),
+])
+def test_heap_lax_parity_irregular_graphs(kind, kw, ttl):
+    """Heap <-> lax event-stream parity on IRREGULAR graphs at ttl >= 2 —
+    the regime where the production gossip schedule used to under-cover the
+    ttl-ball. Both tick engines flood the exact BFS ball, and the frontier
+    schedule now delivers that same set of pairs, at the same hops, in the
+    jitted round (test_topology.py::test_audit_schedule_frontier_clean_*)."""
+    n, interval = 12, 8
+    lo = ttl * 1 + 1
+    sc = scenarios.toy_scenario(n, malicious=(0,))
+    topo = T.make(kind, n, seed=3, **kw)
+    spec = FederationSpec.build(
+        n, malicious=(0,),
+        initial_countdown=[1 + (3 * i) % interval for i in range(n)])
+    cfg = simlax.SimLaxConfig(ticks=96, train_interval=(interval, interval),
+                              latency=1, ttl=ttl, record_every=12, seed=0)
+    assert interval >= lo  # stay out of the re-broadcast-overwrite regime
+    heap = scenarios.make_heap_simulator(sc, topo, spec, IMPL2, cfg)
+    heap.run()
+    res = simlax.LaxSimulator(sc, topo, spec, IMPL2, cfg).run()
+    assert res.stats["broadcasts"] == heap.stats["tx_sent"]
+    assert res.stats["deliveries"] == heap.stats["tx_delivered"]
+    assert res.stats["deliveries"] > 0
+    # the delivered-pairs-per-broadcast rate is the ttl-ball, not the
+    # chain-walk subset: mean deliveries == sum over nodes of ball size
+    # weighted by per-node broadcasts, minus the in-flight tail
+    dist = topo.hop_distance()
+    ball = ((dist >= 1) & (dist <= ttl)).sum(axis=1)
+    per_node = res.stats["broadcasts_per_node"]
+    expected = int((ball * per_node).sum())
+    tail = int(ball.max()) * n
+    assert 0 <= expected - res.stats["deliveries"] <= tail
 
 
 def test_legacy_constructor_shim_equals_spec_path():
@@ -385,6 +470,50 @@ def test_delivery_budget_bounds_due_pairs():
     full = T.full(n)
     assert T.delivery_budget(full.adj, 1) == n - 1
     assert T.delivery_budget(full.adj, 3) == n - 1   # ball saturates
+
+
+@pytest.mark.parametrize("kind,kw", [
+    ("ring", {}), ("kregular", {"degree": 2}), ("erdos", {"p": 0.35}),
+    ("smallworld", {"degree": 2, "beta": 0.3}), ("full", {}),
+])
+@pytest.mark.parametrize("ttl", [1, 2, 3])
+def test_delivery_budget_consistent_with_frontier_schedule(kind, kw, ttl):
+    """The sparse engine's static budget vs the production schedule: the
+    frontier lowering delivers each receiver exactly its ttl-ball, so the
+    per-receiver schedule delivery counts must equal ``ttl_ball_sizes`` and
+    never exceed ``delivery_budget`` — including on a dead-node-masked
+    adjacency (the budget the lax engine actually allocates), where the
+    masked ball can only shrink."""
+    n = 12
+    topo = T.make(kind, n, seed=4, **kw)
+    sched = T.gossip_schedule(topo, ttl)
+    per_receiver = sched.delivery_counts().sum(axis=1)
+    balls = T.ttl_ball_sizes(topo.adj, ttl)
+    np.testing.assert_array_equal(per_receiver, balls)
+    assert per_receiver.max() <= T.delivery_budget(topo.adj, ttl)
+
+    # dead-masked adjacency: flooding routes only through alive nodes —
+    # exactly what LaxSimulator passes to delivery_budget
+    dead = (1, 7)
+    alive = np.ones((n,), bool)
+    alive[list(dead)] = False
+    masked = topo.adj & alive[None, :] & alive[:, None]
+    masked_balls = T.ttl_ball_sizes(masked, ttl)
+    assert (masked_balls <= balls).all()
+    assert (masked_balls[list(dead)] == 0).all()
+    assert T.delivery_budget(masked, ttl) <= T.delivery_budget(topo.adj, ttl)
+    # the schedule over the alive-induced subgraph stays within the masked
+    # budget (when that subgraph is still a valid connected gossip graph)
+    sub = masked[np.ix_(alive, alive)]
+    try:
+        sub_topo = T.Topology("masked", sub)
+    except ValueError:
+        return  # masking isolated a node; nothing further to check
+    if not sub_topo.is_connected():
+        return
+    sub_sched = T.gossip_schedule(sub_topo, ttl)
+    sub_max = int(sub_sched.delivery_counts().sum(axis=1).max())
+    assert sub_max <= T.delivery_budget(masked, ttl)
 
 
 # ============================================== re-broadcast overwrite caveat

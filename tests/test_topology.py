@@ -95,31 +95,34 @@ def test_circulant_ttl_ball_exact_no_duplicates(n, k, ttl):
     np.testing.assert_array_equal(_delivery_counts(gs, n), ball)
 
 
-def test_irregular_schedule_prunes_useless_steps():
-    """Steps that deliver to nobody (2-cycle colour classes bounce payloads
-    home at even hops) cost a full-model ppermute each — they must be pruned
-    unless a delivering step forwards through them."""
+def test_chain_schedule_prunes_useless_steps():
+    """Legacy chain oracle: steps that deliver to nobody (2-cycle colour
+    classes bounce payloads home at even hops) cost a full-model ppermute
+    each — they must be pruned unless a delivering step forwards through
+    them. The frontier lowering never emits a non-delivering step at all."""
     for seed in range(5):
         topo = T.erdos_renyi(12, 0.3, seed=seed)
         for ttl in (2, 3):
-            gs = T.gossip_schedule(topo, ttl)
+            gs = T.gossip_schedule(topo, ttl, schedule="chain")
             parents = {p for (_, p) in gs.steps if p >= 0}
             for s, (_, _p) in enumerate(gs.steps):
                 delivers = bool((gs.senders[s] >= 0).any())
                 assert delivers or s in parents, (seed, ttl, s)
+            fs = T.gossip_schedule(topo, ttl)
+            assert all((row >= 0).any() for row in fs.senders), (seed, ttl)
 
 
-def test_irregular_multittl_never_double_delivers():
+def test_irregular_frontier_delivers_exact_ball():
+    """The frontier lowering on an irregular graph: the FULL ttl-ball,
+    every pair exactly once, nothing outside it (the chain walk used to
+    silently miss a large subset of the ball)."""
     topo = T.erdos_renyi(12, 0.35, seed=1)
-    gs = T.gossip_schedule(topo, 2)
-    counts = _delivery_counts(gs, 12)
-    assert counts.max() <= 1
-    # hop-1 coverage (direct neighbours) is always complete
-    assert ((counts - topo.adj.astype(int)) >= 0)[topo.adj].all()
-    # chains only walk within the ttl-ball
     dist = topo.hop_distance()
-    assert (counts[dist > 2] == 0).all()
-    assert np.diagonal(counts).sum() == 0
+    for ttl in (2, 3):
+        gs = T.gossip_schedule(topo, ttl)
+        counts = _delivery_counts(gs, 12)
+        ball = ((dist >= 1) & (dist <= ttl)).astype(int)
+        np.testing.assert_array_equal(counts, ball)
 
 
 def test_hop_distance_ring():
@@ -168,3 +171,115 @@ def test_even_n_full_graph_half_offset_not_double_covered():
         for s, d in cls:
             cover[s, d] += 1
     np.testing.assert_array_equal(cover, topo.adj.astype(int))
+
+
+# ============================================= schedule audit (frontier/chain)
+@pytest.mark.parametrize("kind,mk", ALL_KINDS)
+@pytest.mark.parametrize("ttl", [1, 2, 3])
+def test_audit_schedule_frontier_clean_all_kinds(kind, mk, ttl):
+    """The acceptance bar of the frontier lowering: for EVERY topology kind
+    and ttl, the schedule delivers the exact BFS ttl-ball — no missing
+    pairs, no duplicates, nothing out of ball, no wasted collectives, and
+    every delivery lands at its BFS hop (the tick simulators' timing)."""
+    topo = mk(13)
+    audit = T.audit_schedule(topo, ttl)
+    assert audit.ok, (kind, ttl, audit)
+    assert audit.missing == ()
+    assert audit.duplicates == ()
+    assert audit.out_of_ball == ()
+    assert audit.wasted_steps == ()
+    assert audit.mistimed == ()
+    assert audit.coverage == 1.0
+
+
+@pytest.mark.parametrize("kind,mk", ALL_KINDS)
+@pytest.mark.parametrize("ttl", [1, 2, 3])
+def test_audit_chain_oracle_regression_record(kind, mk, ttl):
+    """Pinned-regression record of the OLD chain lowering: exact at ttl=1
+    everywhere and at any ttl on circulant graphs, but silently
+    under-covering the ttl-ball on irregular graphs at ttl >= 2 (never
+    duplicating or leaving the ball, though). If this 'xfail' half ever
+    starts passing, the oracle stopped reproducing the historical bug."""
+    topo = mk(13)
+    audit = T.audit_schedule(topo, ttl, schedule="chain")
+    assert audit.duplicates == ()
+    assert audit.out_of_ball == ()
+    if ttl == 1 or kind in ("ring", "kregular", "full"):
+        assert audit.ok and audit.coverage == 1.0, (kind, ttl, audit)
+    else:
+        # the bug this PR fixed, preserved behind schedule="chain"
+        assert audit.missing, (kind, ttl)
+        assert audit.coverage < 1.0, (kind, ttl, audit.coverage)
+
+
+# the circulant lowering's known collective counts at n=12 (2*radius
+# one-hop offset permutes, +1 for the even-n half offset when in ball) —
+# hardcoded so a cost regression in EITHER mode fails, not just a
+# frontier/chain divergence (both modes share the circulant code path)
+_CIRCULANT_COLLECTIVES_N12 = {
+    ("ring", 1): 2, ("ring", 2): 4, ("ring", 3): 6,
+    ("kregular", 1): 4, ("kregular", 2): 8, ("kregular", 3): 11,
+    ("full", 1): 11, ("full", 2): 11, ("full", 3): 11,
+}
+
+
+@pytest.mark.parametrize("kind", ["ring", "kregular", "full"])
+@pytest.mark.parametrize("ttl", [1, 2, 3])
+def test_circulant_collective_count_unchanged_by_frontier(kind, ttl):
+    """No cost regression where the old lowering was already exact: on
+    circulant graphs both modes emit the identical closed-form offset
+    schedule (same permutes, same senders), at the pre-frontier pinned
+    collective count."""
+    topo = {"ring": T.ring(12), "kregular": T.kregular(12, 2),
+            "full": T.full(12)}[kind]
+    fr = T.gossip_schedule(topo, ttl)
+    ch = T.gossip_schedule(topo, ttl, schedule="chain")
+    assert fr.num_collectives == _CIRCULANT_COLLECTIVES_N12[(kind, ttl)]
+    assert ch.num_collectives == fr.num_collectives
+    assert fr.steps == ch.steps
+    np.testing.assert_array_equal(fr.senders, ch.senders)
+
+
+def test_gossip_schedule_rejects_unknown_mode():
+    with pytest.raises(ValueError, match="schedule"):
+        T.gossip_schedule(T.ring(6), 1, schedule="bogus")
+
+
+def test_dfl_schedule_report_fails_fast_on_under_coverage():
+    """The --dfl path's guard: an under-covering schedule (only reachable
+    via the schedule='chain' oracle on an irregular graph) raises instead
+    of silently lowering a round with partial delivery; the default
+    frontier lowering reports full coverage."""
+    from repro.core.dfl import DFLConfig, schedule_report
+    ok = schedule_report(DFLConfig(ttl=2, topology="erdos"), 12)
+    assert ok["coverage"] == 1.0 and ok["missing_pairs"] == 0
+    assert ok["num_collectives"] > 0
+    bad = schedule_report(
+        DFLConfig(ttl=2, topology="erdos", schedule="chain"), 12,
+        strict=False)
+    assert bad["coverage"] < 1.0 and bad["missing_pairs"] > 0
+    with pytest.raises(RuntimeError, match="under-covers"):
+        schedule_report(
+            DFLConfig(ttl=2, topology="erdos", schedule="chain"), 12)
+
+
+def test_frontier_parent_steps_hold_the_forwarded_payload():
+    """Structural invariant the jitted round relies on: a step with parent
+    sigma forwards payloads received at step sigma — so each of its (src ->
+    dst) pairs must have src RECEIVING some payload at step sigma, and the
+    delivered sender must be that very payload's origin."""
+    for kind, mk in ALL_KINDS:
+        topo = mk(11)
+        for ttl in (2, 3):
+            gs = T.gossip_schedule(topo, ttl)
+            for s, (perm, parent) in enumerate(gs.steps):
+                row = gs.senders[s]
+                if parent < 0:
+                    for (src, dst) in perm:
+                        if row[dst] >= 0:
+                            assert row[dst] == src, (kind, ttl, s)
+                    continue
+                prow = gs.senders[parent]
+                for (src, dst) in perm:
+                    if row[dst] >= 0:
+                        assert prow[src] == row[dst], (kind, ttl, s)
