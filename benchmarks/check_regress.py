@@ -1,0 +1,271 @@
+"""CI perf-regression gate: the bench-smoke JSON vs committed baselines.
+
+Compares the `gossip` bench output (experiments/bench_gossip.json, uploaded
+per PR by the bench-smoke job) against the committed snapshot under
+benchmarks/baselines/ and FAILS the build on:
+
+* any `gossip,frontier_vs_chain` collective-count growth (schedule cost is
+  deterministic, so ANY growth is a lowering regression — likewise coverage
+  drops and new missing pairs);
+* an engine speedup ratio (`simulator`, `sparse_vs_dense`,
+  `compact_vs_sparse`) falling more than --tolerance (default 30%) below
+  its baseline;
+* a per-tick wall time rising more than --tolerance above its baseline.
+
+Baseline-refresh workflow (a legitimate perf change or a runner-class
+change makes wall baselines stale):
+
+    PYTHONPATH=src python -m benchmarks.bench_gossip --quick
+    PYTHONPATH=src python -m benchmarks.check_regress --update
+    git add benchmarks/baselines/ && git commit
+
+— i.e. regenerate the bench JSON in the SAME mode CI runs it (--quick),
+rewrite the trimmed baseline from it, and commit the diff so the refresh is
+reviewable (wall baselines are hardware-relative: refresh from the CI
+artifact — uploaded even on gate failure — when the runner class changes).
+Rows whose scale knobs (nodes / measurement tick windows) differ from the
+baseline's are skipped with a `regress,...,skip` line rather than
+mis-compared; rows that VANISH from the current run fail, so a deleted
+bench line cannot silently un-gate itself. Speedup bands are capped below
+by the documented acceptance floors (`ACCEPTANCE_FLOORS`): wall-clock
+ratios are noisy run-to-run, so the gate never demands more than the
+contract the bench exists to enforce.
+
+`--self-test` proves the gate actually bites: it seeds a slowdown (2x
+per-tick times, +1 collective, halved speedups) into a synthetic current
+run and asserts every category is flagged — CI runs it before the real
+gate so a silently-toothless checker fails the build too.
+"""
+from __future__ import annotations
+
+import argparse
+import copy
+import json
+import os
+import sys
+
+BASELINE_DIR = os.path.join(os.path.dirname(__file__), "baselines")
+BASELINE_PATH = os.path.join(BASELINE_DIR, "bench_gossip.json")
+CURRENT_PATH = os.path.join("experiments", "bench_gossip.json")
+
+# (section, key) pairs gated as wall-clock per-tick times (lower is better)
+TIME_KEYS = (
+    ("simulator", "lax_s_per_tick"),
+    ("sparse_vs_dense", "sparse_s_per_tick"),
+    ("sparse_vs_dense", "dense_s_per_tick"),
+    ("compact_vs_sparse", "compact_s_per_tick"),
+    ("compact_vs_sparse", "sparse_s_per_tick"),
+)
+# sections gated as speedup ratios (higher is better). The documented
+# acceptance contracts CAP the relative band from below: wall-clock ratios
+# are noisy run-to-run, so the gate never demands more than the contract —
+# falling below `baseline * (1 - tol)` AND the contract is what fails.
+SPEEDUP_KEYS = ("simulator", "sparse_vs_dense", "compact_vs_sparse")
+ACCEPTANCE_FLOORS = {"simulator": 10.0,       # >=10x heap at >=256 nodes
+                     "sparse_vs_dense": 3.0,  # >=3x dense at N=512 toy
+                     "compact_vs_sparse": 2.0}  # >=2x sparse at N=2048
+
+
+def _scale_key(row: dict):
+    """The knobs that make two runs comparable: same N and the same
+    measurement windows (quick vs full runs differ in one or both)."""
+    return [row.get("nodes"),
+            row.get("ticks_pair") or [row.get("heap_ticks"),
+                                      row.get("lax_ticks")]]
+
+
+def extract(data: dict) -> dict:
+    """Trim a bench_gossip JSON down to the gated metrics — the committed
+    baseline stays small, deterministic-first, and reviewable."""
+    out = {"schedule": {}, "speedups": {}, "times": {}, "scale": {}}
+    for row in data.get("frontier_vs_chain", []):
+        key = f"{row['kind']},n={row['nodes']},ttl={row['ttl']}," \
+              f"{row['schedule']}"
+        out["schedule"][key] = {
+            "num_collectives": row["num_collectives"],
+            "coverage": row["coverage"],
+            "missing_pairs": row["missing_pairs"],
+        }
+    for sec in SPEEDUP_KEYS:
+        row = data.get(sec)
+        if row:
+            out["speedups"][sec] = row["speedup"]
+            out["scale"][sec] = _scale_key(row)
+    for sec, key in TIME_KEYS:
+        row = data.get(sec)
+        if row and key in row:
+            out["times"][f"{sec}.{key}"] = row[key]
+    return out
+
+
+def compare(current: dict, baseline: dict, tolerance: float) -> list:
+    """Returns a list of failure strings; prints one `regress,...` CSV line
+    per gated metric (ok / FAIL / skip)."""
+    fails = []
+
+    def line(check, status, detail):
+        print(f"regress,{check},{status},{detail}")
+        if status == "FAIL":
+            fails.append(f"{check}: {detail}")
+
+    for key, base in baseline.get("schedule", {}).items():
+        cur = current.get("schedule", {}).get(key)
+        if cur is None:
+            # a vanished row means the gate silently lost coverage of the
+            # exact metric it protects: fail until the baseline is
+            # refreshed (--update) to make the removal deliberate
+            line(f"schedule({key})", "FAIL",
+                 "baseline row missing from current run — removed a bench "
+                 "line? refresh baselines (--update) if intentional")
+            continue
+        if cur["num_collectives"] > base["num_collectives"]:
+            line(f"schedule({key})", "FAIL",
+                 f"collectives {base['num_collectives']}"
+                 f"->{cur['num_collectives']}")
+        elif cur["coverage"] < base["coverage"]:
+            line(f"schedule({key})", "FAIL",
+                 f"coverage {base['coverage']}->{cur['coverage']}")
+        elif cur["missing_pairs"] > base["missing_pairs"]:
+            line(f"schedule({key})", "FAIL",
+                 f"missing_pairs {base['missing_pairs']}"
+                 f"->{cur['missing_pairs']}")
+        else:
+            line(f"schedule({key})", "ok",
+                 f"collectives={cur['num_collectives']}")
+
+    def scale_mismatch(sec):
+        return current.get("scale", {}).get(sec) != \
+            baseline.get("scale", {}).get(sec)
+
+    for sec, base in baseline.get("speedups", {}).items():
+        cur = current.get("speedups", {}).get(sec)
+        if cur is None:
+            line(f"speedup({sec})", "FAIL",
+                 "baseline row missing from current run — removed a bench "
+                 "line? refresh baselines (--update) if intentional")
+            continue
+        if scale_mismatch(sec):
+            line(f"speedup({sec})", "skip",
+                 f"scale {baseline.get('scale', {}).get(sec)}"
+                 f"->{current.get('scale', {}).get(sec)} (mode mismatch; "
+                 "refresh the baseline in the mode CI runs)")
+            continue
+        floor = base * (1.0 - tolerance)
+        if sec in ACCEPTANCE_FLOORS:
+            floor = min(floor, ACCEPTANCE_FLOORS[sec])
+        status = "FAIL" if cur < floor else "ok"
+        line(f"speedup({sec})", status,
+             f"{cur}x vs baseline {base}x (floor {floor:.2f}x)")
+
+    for key, base in baseline.get("times", {}).items():
+        cur = current.get("times", {}).get(key)
+        if cur is None:
+            line(f"per_tick({key})", "FAIL",
+                 "baseline row missing from current run — removed a bench "
+                 "line? refresh baselines (--update) if intentional")
+            continue
+        sec = key.split(".", 1)[0]
+        if scale_mismatch(sec):
+            line(f"per_tick({key})", "skip",
+                 "scale mismatch (mode mismatch; refresh the baseline in "
+                 "the mode CI runs)")
+            continue
+        if base <= 1e-4:
+            # the harness floors per-tick at 0.1ms (compile-variance
+            # guard): a floored baseline carries no slowdown signal and a
+            # 30% band around it is pure flake
+            line(f"per_tick({key})", "skip",
+                 f"baseline {base}s at the measurement floor")
+            continue
+        ceil = base * (1.0 + tolerance)
+        status = "FAIL" if cur > ceil else "ok"
+        line(f"per_tick({key})", status,
+             f"{cur}s vs baseline {base}s (ceiling {ceil:.4f}s)")
+    return fails
+
+
+def self_test(tolerance: float) -> int:
+    """Seed a slowdown into a synthetic run and assert the gate flags every
+    category (and passes the clean run)."""
+    baseline = {
+        "schedule": {"erdos,n=12,ttl=2,frontier": {
+            "num_collectives": 20, "coverage": 1.0, "missing_pairs": 0}},
+        "speedups": {"compact_vs_sparse": 3.0},
+        "scale": {"compact_vs_sparse": [2048, [24, 240]]},
+        "times": {"compact_vs_sparse.compact_s_per_tick": 0.01},
+    }
+    clean = copy.deepcopy(baseline)
+    assert compare(clean, baseline, tolerance) == [], \
+        "self-test: clean run must pass"
+    seeded = copy.deepcopy(baseline)
+    seeded["schedule"]["erdos,n=12,ttl=2,frontier"]["num_collectives"] += 1
+    seeded["speedups"]["compact_vs_sparse"] = \
+        baseline["speedups"]["compact_vs_sparse"] * 0.5
+    seeded["times"]["compact_vs_sparse.compact_s_per_tick"] = \
+        baseline["times"]["compact_vs_sparse.compact_s_per_tick"] * 2.0
+    fails = compare(seeded, baseline, tolerance)
+    missing = [cat for cat in ("schedule", "speedup", "per_tick")
+               if not any(f.startswith(cat) for f in fails)]
+    if missing:
+        print(f"regress,self_test,FAIL,undetected categories: {missing}")
+        return 1
+    print(f"regress,self_test,ok,seeded slowdown flagged "
+          f"{len(fails)} failures across all categories")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--current", default=CURRENT_PATH,
+                    help="bench_gossip JSON from the run under test")
+    ap.add_argument("--baseline", default=BASELINE_PATH,
+                    help="committed baseline (benchmarks/baselines/)")
+    ap.add_argument("--tolerance", type=float,
+                    default=float(os.environ.get("CHECK_REGRESS_TOL", 0.30)),
+                    help="allowed wall-clock/speedup drift fraction "
+                    "(default 0.30; env CHECK_REGRESS_TOL)")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from --current "
+                    "(the documented refresh workflow) instead of gating")
+    ap.add_argument("--self-test", action="store_true",
+                    help="verify the gate detects a seeded slowdown")
+    args = ap.parse_args(argv)
+
+    if args.self_test:
+        return self_test(args.tolerance)
+
+    try:
+        with open(args.current) as f:
+            current = extract(json.load(f))
+    except FileNotFoundError:
+        print(f"regress,setup,FAIL,no bench JSON at {args.current} — run "
+              "`python -m benchmarks.bench_gossip --quick` first")
+        return 2
+
+    if args.update:
+        os.makedirs(os.path.dirname(args.baseline), exist_ok=True)
+        with open(args.baseline, "w") as f:
+            json.dump(current, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"regress,update,ok,baseline rewritten -> {args.baseline}")
+        return 0
+
+    try:
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+    except FileNotFoundError:
+        print(f"regress,setup,FAIL,no baseline at {args.baseline} — "
+              "bootstrap with --update and commit benchmarks/baselines/")
+        return 2
+
+    fails = compare(current, baseline, args.tolerance)
+    if fails:
+        print(f"regress,SUMMARY,FAIL,{len(fails)} regression(s): "
+              + "; ".join(fails))
+        return 1
+    print("regress,SUMMARY,ok,all gated metrics within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -182,13 +182,26 @@ def build_federation(*, num_nodes: int, rep_impl: ReputationImpl,
 
 def engine_pertick_speedup(n: int = 512, dim: int = 128, *,
                            quick: bool = False, ttl: int = 2,
-                           degree: int = 2):
-    """Sparse vs dense receipt-delivery engines on one toy scenario:
-    steady-state seconds/tick each and the ratio (acceptance: >=3x at
-    N=512). Per-tick is measured as (wall(T2)-wall(T1))/(T2-T1), min of 2
-    runs each, cancelling trace+compile; dim=128 makes the receipt eval
-    visible against the O(N^2) int bookkeeping both engines share (a real
-    receipt model is far heavier still — see the LeNet scenario)."""
+                           degree: int = 2,
+                           engines: tuple = ("sparse", "dense"),
+                           train_interval: tuple = (12, 12),
+                           countdown_mod: int = 12,
+                           compact_budget: int | None = None,
+                           ticks_pair: tuple | None = None,
+                           reps: int = 2):
+    """Receipt-delivery engines head-to-head on one toy scenario:
+    steady-state seconds/tick each and the ratio slower/faster —
+    ``engines[0]`` is the engine under test, ``engines[-1]`` the baseline
+    (``("sparse", "dense")`` -> the >=3x-at-N=512 sparse acceptance line;
+    ``("compact", "sparse")`` -> the >=2x-at-N=2048 compact line, run with
+    a mostly-idle ``train_interval`` so receivers sit idle between
+    broadcast waves). Per-tick is measured as (wall(T2)-wall(T1))/(T2-T1),
+    min of 2 runs each, cancelling trace+compile; dim makes the receipt
+    eval visible against the O(N^2) int bookkeeping all engines share (a
+    real receipt model is far heavier still — see the LeNet scenario).
+    ``compact_budget`` forwards the SimLaxConfig override (overflow still
+    fails fast, so an overly tight bench budget crashes rather than
+    under-measures)."""
     import time as _time
 
     from repro.chain import attacks, scenarios, simlax
@@ -199,30 +212,39 @@ def engine_pertick_speedup(n: int = 512, dim: int = 128, *,
     mal = tuple(range(max(1, n // 32)))
     sc = scenarios.toy_scenario(n, dim=dim, malicious=mal)
     spec = attacks.FederationSpec.build(
-        n, malicious=mal, initial_countdown=[1 + i % 12 for i in range(n)])
-    t1, t2 = (12, 96) if quick else (24, 192)
+        n, malicious=mal,
+        initial_countdown=[1 + (7 * i) % countdown_mod for i in range(n)])
+    if ticks_pair is None:
+        ticks_pair = (12, 96) if quick else (24, 192)
+    t1, t2 = ticks_pair
     out = {"nodes": n, "dim": dim, "topology": f"kregular{degree}",
-           "ttl": ttl}
-    for eng in ("sparse", "dense"):
+           "ttl": ttl, "train_interval": list(train_interval),
+           "ticks_pair": list(ticks_pair)}
+    for eng in engines:
         walls = {}
         for ticks in (t1, t2):
             cfg = simlax.SimLaxConfig(
-                ticks=ticks, train_interval=(12, 12), latency=1, ttl=ttl,
-                record_every=10 ** 9, seed=0, delivery=eng)
+                ticks=ticks, train_interval=train_interval, latency=1,
+                ttl=ttl, record_every=10 ** 9, seed=0, delivery=eng,
+                compact_budget=(compact_budget if eng == "compact"
+                                else None))
             sim = simlax.LaxSimulator(sc, topo, spec, get_rep("impl2"), cfg)
             best = float("inf")
-            for _ in range(2):
+            for _ in range(reps):
                 t0 = _time.perf_counter()
                 sim.run()
                 best = min(best, _time.perf_counter() - t0)
             walls[ticks] = best
         # floor at 0.1ms/tick: compile-time variance between the two runs
-        # can otherwise swallow the whole sparse measurement
+        # can otherwise swallow the whole fast-engine measurement
         out[f"{eng}_s_per_tick"] = round(
             max((walls[t2] - walls[t1]) / (t2 - t1), 1e-4), 6)
         out["delivery_budget"] = sim.delivery_budget
+        if eng == "compact":
+            out["compact_budget"] = sim.compact_budget
     out["speedup"] = round(
-        out["dense_s_per_tick"] / out["sparse_s_per_tick"], 2)
+        out[f"{engines[-1]}_s_per_tick"] / out[f"{engines[0]}_s_per_tick"],
+        2)
     return out
 
 

@@ -359,7 +359,7 @@ LENET_PAPER_HP = dict(alpha=1.0, pool=384, eval_size=16, test_size=256,
 
 
 def lenet_paper_setup(n: int = 10, *, ticks: int = 108, train_steps: int = 8,
-                      seed: int = 0, delivery: str = "sparse"):
+                      seed: int = 0, delivery: str = "compact"):
     """The calibrated §VI-D acceptance recipe, shared by
     tests/test_simlax.py::test_lenet_poisoned_federation_reaches_paper_accuracy
     and benchmarks/bench_malicious.py so they cannot drift apart: 20%

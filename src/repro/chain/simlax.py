@@ -10,7 +10,9 @@ per-node action vectorized:
   per-node training data too — real-model scenarios shard a dataset);
 * message delivery is a masked gather/scatter over the topology's adjacency:
   ``arrive[dst, src]`` holds the delivery tick of the in-flight model from
-  ``src`` (INT32_MAX when none), set at broadcast time to
+  ``src`` (INT32_MAX when none; the default ``compact`` engine carries the
+  same information in ``(N, budget)`` receiver slots), set at broadcast
+  time to
   ``t + hop_distance * latency`` for every node within ``ttl`` hops — with
   deterministic per-hop latency this is exactly the heap simulator's
   first-arrival (duplicate-dropping) flood, and (since the frontier
@@ -22,23 +24,41 @@ per-node action vectorized:
 * latency, train countdowns and straggler factors are integer tick counters
   carried in arrays.
 
-Receipt evaluation has two interchangeable engines (``SimLaxConfig.delivery``):
+Receipt evaluation has three interchangeable engines
+(``SimLaxConfig.delivery``):
 
-``sparse`` (default)
-    Per tick the due ``(dst, src)`` pairs are compacted into a fixed-size
-    slot buffer of width ``budget = max_dst |ball(dst, ttl)|``
-    (`repro.core.topology.delivery_budget` — no receiver can have more
-    in-flight models than its ttl-ball holds senders, so the buffer never
-    overflows). ``eval_fn`` runs once per SLOT via one nested vmap and the
-    weights / running-min are scattered back: per-tick receipt cost is
-    O(N * budget * eval) ≈ O(deliveries * eval) instead of O(N² * eval).
-    This is what makes real receipt models (LeNet, LMs) feasible: the model
-    forward pass dominates and only actually-delivered pairs pay it.
+``compact`` (default)
+    Segment compaction, two layers deep. (1) State layout: the in-flight
+    arrival state is per-receiver SLOTS — ``arrive[dst, k]`` is the
+    delivery tick of dst's k-th in-ball sender, an ``(N, budget)`` array —
+    instead of the oracles' ``(N, N)`` matrix, and broadcasts scatter
+    through a static inverse map (sender -> its (dst, slot) landing
+    sites), so the per-tick arrival bookkeeping is O(N * budget), not
+    O(N²). (2) Work compaction: the tick's due ``(receiver, slot)`` pairs
+    are gathered into ONE static work buffer of width
+    ``W = topology.compaction_budget(adj, ttl, train_interval)`` — the
+    exact per-tick activity bound from broadcast intervals and ring sizes
+    (each sender's in-flight broadcast lands at most one hop-distance ring
+    per tick). ``eval_fn`` runs once per WORK ITEM via one flat vmap and
+    the weights / running-min are segment-scattered back per receiver:
+    per-tick receipt cost is O(W * eval), scaling with deliveries that can
+    actually be due rather than ``N * budget``. ``SimLaxConfig
+    .compact_budget`` overrides W (e.g. staggered broadcast phases make
+    the worst-case bound pessimistic); an overflowing tick then fails fast
+    (RuntimeError from ``run()``) instead of silently dropping receipts.
+
+``sparse``
+    The budgeted per-receiver slot buffer: ``eval_fn`` on all
+    ``N * budget`` slots (``budget = max_dst |ball(dst, ttl)|``,
+    `repro.core.topology.delivery_budget`) on any tick with >= 1 delivery,
+    masked by dueness. O(N * budget * eval) per active tick — every
+    mostly-idle receiver still pays its full ball. Kept as the first-level
+    parity oracle for ``compact``.
 
 ``dense``
-    The original oracle: ``eval_fn`` on all N² ``(dst, src)`` pairs every
-    tick, masked by dueness. Kept as the behavioral reference — the two
-    engines are parity-tested to produce identical event streams and
+    The original all-pairs oracle: ``eval_fn`` on all N² ``(dst, src)``
+    pairs every tick, masked by dueness. The behavioral reference — all
+    three engines are parity-tested to produce identical event streams and
     matching state (tests/test_simlax.py).
 
 Scope: train/broadcast/receipt/FedAvg/reputation dynamics — the metrics the
@@ -77,7 +97,7 @@ from repro.core.reputation import ReputationImpl
 _NEVER = np.iinfo(np.int32).max
 _EPS = 1e-12
 
-DELIVERY_ENGINES = ("sparse", "dense")
+DELIVERY_ENGINES = ("compact", "sparse", "dense")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,7 +108,12 @@ class SimLaxConfig:
     ttl: int = 2                      # flood radius (hops)
     record_every: int = 10
     seed: int = 0
-    delivery: str = "sparse"          # receipt engine: "sparse" | "dense"
+    delivery: str = "compact"         # receipt engine: see DELIVERY_ENGINES
+    compact_budget: Optional[int] = None
+    # ^ overrides the compact engine's work-buffer width (default: the
+    #   exact topology.compaction_budget bound). A smaller buffer cuts the
+    #   per-tick eval bill when broadcasts are known to be staggered; a
+    #   tick whose due deliveries exceed it makes run() raise.
 
 
 def _normalize_train_fn(train_fn: Callable, *, has_train_data: bool) -> Callable:
@@ -259,6 +284,47 @@ class LaxSimulator:
         slot_src = np.argsort(~reach, axis=1, kind="stable")
         self._slot_src = jnp.asarray(
             slot_src[:, :self.delivery_budget].astype(np.int32))
+        # compact engine: one flat work buffer over ALL receivers, sized by
+        # the exact per-tick activity bound (every sender's heaviest
+        # feasible ring combination landing on one tick) — never larger
+        # than the sparse engine's n * budget slots, usually far smaller.
+        # cfg.compact_budget overrides it; runtime overflow then fails fast.
+        exact = max(1, topology_lib.compaction_budget(
+            adj, cfg.ttl, cfg.train_interval, latency=cfg.latency,
+            dist=dist))
+        if cfg.compact_budget is not None and cfg.compact_budget < 1:
+            raise ValueError(
+                f"compact_budget must be >= 1, got {cfg.compact_budget}")
+        self.compact_budget = min(
+            exact if cfg.compact_budget is None else int(cfg.compact_budget),
+            n * self.delivery_budget)
+        # compact state layout: arrive is (N, budget) receiver slots, and
+        # broadcasting scatters through the static INVERSE slot map — for
+        # each sender, the (dst, slot, delay) triples it lands in (out-ball
+        # == ball on a symmetric adjacency, so budget rows suffice; padding
+        # rows point at the dropped index n). This keeps the per-tick
+        # arrival bookkeeping O(N * budget); the oracles keep the (N, N)
+        # matrix the parity tests compare against — and skip building the
+        # map (an O(N^2) temp + a python loop over senders) entirely.
+        self._inv_dst = self._inv_slot = self._inv_delay = None
+        if cfg.delivery == "compact":
+            budget = self.delivery_budget
+            slot_of = np.full((n, n), -1, np.int64)
+            rows = np.arange(n)[:, None]
+            slot_of[rows, slot_src[:, :budget]] = \
+                np.arange(budget)[None, :]
+            slot_of[~reach] = -1  # padding columns map to non-reach senders
+            inv_dst = np.full((n, budget), n, np.int32)
+            inv_slot = np.zeros((n, budget), np.int32)
+            inv_delay = np.zeros((n, budget), np.int32)
+            for s in range(n):
+                dsts = np.flatnonzero(reach[:, s])
+                inv_dst[s, :len(dsts)] = dsts
+                inv_slot[s, :len(dsts)] = slot_of[dsts, s]
+                inv_delay[s, :len(dsts)] = delay[dsts, s]
+            self._inv_dst = jnp.asarray(inv_dst)
+            self._inv_slot = jnp.asarray(inv_slot)
+            self._inv_delay = jnp.asarray(inv_delay)
 
         # one gathered vmap per distinct attack instance over that group's
         # (static) node ids only; group order keys the per-group PRNG folds
@@ -340,6 +406,47 @@ class LaxSimulator:
             slot_src, arg_slot[:, None], axis=1)[:, 0]
         return acc_sum, w_sum, buf_cnt, batch_min, batch_sender
 
+    def _deliver_compact(self, state, slot_ok, eval_data):
+        """Segment-compacted: gather the tick's due (receiver, slot) pairs
+        into a static (W,) work buffer, eval only those items via ONE flat
+        vmap, segment-scatter weights / running-min back per receiver.
+        ``slot_ok`` is the (N, budget) slot-layout dueness (the compact
+        arrive state IS slot-indexed, so no per-tick re-mapping)."""
+        n, budget = slot_ok.shape[0], self.delivery_budget
+        slot_src = self._slot_src                        # (dst, slot)
+        flat_ok = slot_ok.ravel()                        # (n * budget,)
+        # due (receiver, slot) indices compacted to the buffer front; the
+        # fill value marks unused items (gathers clamp, scatters drop).
+        # Ascending index order keeps receivers' items grouped (segments)
+        # and slots in ascending-src order inside each segment.
+        flat_idx = jnp.nonzero(flat_ok, size=self.compact_budget,
+                               fill_value=n * budget)[0]
+        valid = flat_idx < n * budget
+        rcv = jnp.minimum(flat_idx // budget, n - 1)     # clamped for gathers
+        src = slot_src[rcv, flat_idx % budget]           # (W,)
+        models = jax.tree.map(lambda s: s[src], state["sent"])   # (W, ...)
+        ed = jax.tree.map(lambda e: e[rcv], eval_data)
+        accs = jax.vmap(self._eval_fn)(models, ed)       # (W,)
+        w_item = jnp.where(valid, state["rep"][rcv, src] * accs, 0.0)
+        scat = jnp.where(valid, rcv, n)                  # n == dropped row
+        acc_sum = jax.tree.map(
+            lambda a, m: a.at[scat].add(
+                w_item.reshape((-1,) + (1,) * (a.ndim - 1))
+                * m.astype(jnp.float32), mode="drop"),
+            state["acc_sum"], models)
+        w_sum = state["w_sum"].at[scat].add(w_item, mode="drop")
+        buf_cnt = state["buf_cnt"].at[scat].add(1, mode="drop")
+        masked = jnp.where(valid, accs, jnp.inf)
+        batch_min = jnp.full((n,), jnp.inf, jnp.float32).at[scat].min(
+            masked, mode="drop")
+        # lowest-src tie-break, matching the dense argmin: among the items
+        # hitting the receiver's min, scatter-min the sender index
+        tie = valid & (accs == batch_min[rcv])
+        batch_sender = jnp.full((n,), n, jnp.int32).at[scat].min(
+            jnp.where(tie, src, n), mode="drop")
+        batch_sender = jnp.where(batch_sender == n, 0, batch_sender)
+        return acc_sum, w_sum, buf_cnt, batch_min, batch_sender
+
     # --------------------------------------------------------------------- run
     def run(self, params0=None):
         """params0: pytree with leading N dim (defaults to the scenario's
@@ -361,17 +468,26 @@ class LaxSimulator:
         train_v = jax.vmap(self._train_fn,
                            in_axes=(0, 0, None if train_data is None else 0))
         test_v = jax.vmap(self._test_fn)
-        deliver = (self._deliver_sparse if cfg.delivery == "sparse"
-                   else self._deliver_dense)
+        deliver = {"compact": self._deliver_compact,
+                   "sparse": self._deliver_sparse,
+                   "dense": self._deliver_dense}[cfg.delivery]
 
         key0 = jax.random.PRNGKey(cfg.seed)
         zeros_like_params = jax.tree.map(
             lambda x: jnp.zeros(x.shape, jnp.float32), params0)
 
+        # compact keeps the in-flight state in (N, budget) receiver slots
+        # (broadcast scatters through the static inverse map); the oracles
+        # carry the full (N, N) matrix
+        compact = cfg.delivery == "compact"
+        inv_dst, inv_slot = self._inv_dst, self._inv_slot
+        inv_delay = self._inv_delay
+        arrive_shape = (n, self.delivery_budget) if compact else (n, n)
+
         init = dict(
             params=params0,
             sent=jax.tree.map(jnp.zeros_like, params0),
-            arrive=jnp.full((n, n), _NEVER, jnp.int32),
+            arrive=jnp.full(arrive_shape, _NEVER, jnp.int32),
             rep=jnp.full((n, n), rep_impl.initial, jnp.float32),
             acc_sum=zeros_like_params,
             w_sum=jnp.zeros((n,), jnp.float32),
@@ -386,6 +502,7 @@ class LaxSimulator:
                                 jax.random.fold_in(key0, 12345), n))),
             broadcasts=jnp.zeros((n,), jnp.int32),
             deliveries=jnp.zeros((), jnp.int32),
+            max_due=jnp.zeros((), jnp.int32),
             fedavg_rounds=jnp.zeros((), jnp.int32),
         )
 
@@ -396,7 +513,8 @@ class LaxSimulator:
             # On a no-delivery tick every update below is a no-op, so the
             # (model-forward-pass-heavy) eval work is skipped entirely via
             # cond — most ticks between broadcast waves cost nothing.
-            due = (state["arrive"] == t) & alive[:, None]    # (dst, src)
+            # due is (dst, src) for the oracles, (dst, slot) for compact.
+            due = (state["arrive"] == t) & alive[:, None]
             acc_sum, w_sum, buf_cnt, batch_min, batch_sender = jax.lax.cond(
                 due.any(),
                 lambda s: deliver(s, due, eval_data),
@@ -424,12 +542,19 @@ class LaxSimulator:
                     p.dtype)
 
             params = jax.tree.map(leaf, acc_sum, state["params"])
-            # punish the worst sender of each fired buffer (§IV-D1)
-            pen = jnp.zeros((n, n), jnp.float32).at[
-                jnp.arange(n), min_sender].add(
-                jnp.where(fire & (min_acc < jnp.inf), rep_impl.penalty, 0.0))
-            rep = jnp.clip(state["rep"] - pen, rep_impl.floor,
-                           rep_impl.initial)
+            # punish the worst sender of each fired buffer (§IV-D1): only
+            # the (receiver, worst-sender) entries can move — all others
+            # already sit inside [floor, initial] — so update those O(N)
+            # entries in place instead of building an (N, N) penalty
+            # matrix and re-clipping the whole reputation state every tick
+            rows_n = jnp.arange(n)
+            hit = fire & (min_acc < jnp.inf)
+            cur = state["rep"][rows_n, min_sender]
+            rep = state["rep"].at[rows_n, min_sender].set(
+                jnp.where(hit,
+                          jnp.clip(cur - rep_impl.penalty, rep_impl.floor,
+                                   rep_impl.initial),
+                          cur))
             # reset consumed buffers
             keep1 = ~fire
             acc_sum = jax.tree.map(
@@ -484,8 +609,15 @@ class LaxSimulator:
             params, sent = jax.lax.cond(
                 trains.any(), do_train, lambda operand: operand,
                 (params, state["sent"]))
-            sched = trains[None, :] & reach                   # (dst, src)
-            arrive = jnp.where(sched, t + delay, arrive)
+            if compact:
+                # scatter each training sender's (dst, slot) landing sites;
+                # non-training senders target the dropped row n
+                tgt = jnp.where(trains[:, None], inv_dst, n)
+                arrive = arrive.at[tgt.ravel(), inv_slot.ravel()].set(
+                    (t + inv_delay).ravel(), mode="drop")
+            else:
+                sched = trains[None, :] & reach               # (dst, src)
+                arrive = jnp.where(sched, t + delay, arrive)
             ikeys = jax.random.split(jax.random.fold_in(key_t, 2), n)
             fresh = jax.vmap(self._interval)(ikeys) * straggler
             next_train = jnp.where(trains, fresh, next_train)
@@ -497,6 +629,7 @@ class LaxSimulator:
                 next_train=next_train,
                 broadcasts=state["broadcasts"] + trains.astype(jnp.int32),
                 deliveries=state["deliveries"] + due.sum(),
+                max_due=jnp.maximum(state["max_due"], due.sum()),
                 fedavg_rounds=state["fedavg_rounds"] + apply.sum(),
             )
             # the global test eval can dominate at scale: only run it on
@@ -511,6 +644,25 @@ class LaxSimulator:
         final, acc_by_tick = jax.lax.scan(
             body, init, jnp.arange(cfg.ticks, dtype=jnp.int32))
         rec = np.arange(0, cfg.ticks, cfg.record_every)
+        max_due = int(final["max_due"])
+        if cfg.delivery == "compact" and max_due > self.compact_budget:
+            # only reachable with a cfg.compact_budget override below the
+            # exact topology.compaction_budget bound: fail fast rather than
+            # return results whose overflowing ticks dropped receipts
+            raise RuntimeError(
+                f"compact delivery overflow: a tick had {max_due} due "
+                f"deliveries but the work buffer holds "
+                f"{self.compact_budget} (SimLaxConfig.compact_budget "
+                f"override; the exact topology.compaction_budget bound "
+                "for this topology/ttl/interval cannot overflow)")
+        final_arrive = np.asarray(final["arrive"])
+        if compact:
+            # expand the (N, budget) slot state back to the (N, N) matrix
+            # the oracles carry, so final-state parity is one comparison
+            dense_arrive = np.full((n, n), _NEVER, np.int32)
+            dense_arrive[np.arange(n)[:, None],
+                         np.asarray(self._slot_src)] = final_arrive
+            final_arrive = dense_arrive
         return SimLaxResult(
             params=jax.tree.map(np.asarray, final["params"]),
             reputation=np.asarray(final["rep"]),
@@ -523,11 +675,14 @@ class LaxSimulator:
                 "fedavg_rounds": int(final["fedavg_rounds"]),
                 "delivery": cfg.delivery,
                 "delivery_budget": self.delivery_budget,
+                "compact_budget": self.compact_budget,
+                "max_tick_deliveries": max_due,
             },
             final_state={
-                k: np.asarray(final[k])
-                for k in ("arrive", "w_sum", "buf_cnt",
-                          "min_acc", "min_sender", "next_train")
+                "arrive": final_arrive,
+                **{k: np.asarray(final[k])
+                   for k in ("w_sum", "buf_cnt",
+                             "min_acc", "min_sender", "next_train")},
             },
             sent=jax.tree.map(np.asarray, final["sent"]),
         )

@@ -171,6 +171,69 @@ def delivery_budget(adj: np.ndarray, ttl: int, *,
     return int(ttl_ball_sizes(adj, ttl, dist=dist).max())
 
 
+def ring_sizes(adj: np.ndarray, ttl: int, *,
+               dist: np.ndarray | None = None) -> np.ndarray:
+    """(N, ttl) int32: ``ring_sizes[s, d-1]`` = how many nodes lie at hop
+    distance exactly ``d`` from ``s``. Rows sum to ``ttl_ball_sizes`` — the
+    ball is the disjoint union of its rings. Works on raw (possibly
+    dead-node-masked) adjacencies like ``hop_distance_from_adj``."""
+    if ttl < 1:
+        raise ValueError("ttl must be >= 1")
+    if dist is None:
+        dist = hop_distance_from_adj(adj)
+    n = adj.shape[0]
+    out = np.zeros((n, ttl), np.int32)
+    for d in range(1, ttl + 1):
+        out[:, d - 1] = (dist == d).sum(axis=1)
+    return out
+
+
+def compaction_budget(adj: np.ndarray, ttl: int, intervals, *,
+                      latency: int = 1,
+                      dist: np.ndarray | None = None) -> int:
+    """Static bound on deliveries due on any ONE tick across the whole
+    federation — the compact delivery engine's work-buffer width.
+
+    A broadcast from ``src`` at tick ``t_b`` schedules its ttl-ball
+    arrivals at ``t_b + d * latency``: one hop-distance *ring* of receivers
+    per future tick. Two rings of the SAME sender can be due on the same
+    tick only when they stem from two broadcasts spaced exactly
+    ``(d2 - d1) * latency`` ticks apart, and a node trains at most once
+    every ``lo = intervals[0]`` ticks — so co-due distances must be at
+    least ``g = ceil(lo / latency)`` apart. Each sender therefore
+    contributes at most its max-weight subset of ``{1..ttl}`` with pairwise
+    gaps ``>= g``, weighted by its ring sizes, and the per-tick total is
+    that summed over senders (exact: nothing stops every sender from timing
+    its heaviest feasible ring combination onto one tick).
+
+    In the recommended operating regime ``lo >= ttl * latency`` (outside
+    it ``LaxSimulator`` warns: re-broadcast overwrites in-flight snapshots,
+    which ALSO forbids multi-ring co-dueness, so the bound stays safe there
+    too — just no longer tight) the gap exceeds ``ttl - 1``, feasible sets
+    are singletons, and the bound collapses to
+    ``sum_src max_d |ring(src, d)|``. Always ``<= N * delivery_budget``
+    (the sparse engine's total slot count): the compact buffer is never
+    larger than the sparse one.
+    """
+    lo = int(intervals[0]) if np.ndim(intervals) else int(intervals)
+    if lo < 1:
+        raise ValueError(f"min train interval must be >= 1, got {lo}")
+    if latency < 1:
+        raise ValueError(f"latency must be >= 1, got {latency}")
+    rings = ring_sizes(adj, ttl, dist=dist)          # (N, ttl)
+    g = max(1, -(-lo // latency))                    # ceil(lo / latency)
+    # per-sender max-weight subset of distances with pairwise gaps >= g:
+    # f[d] = ring[d] + best over earlier picks at distance <= d - g
+    n = rings.shape[0]
+    f = np.zeros((n, ttl + 1), np.int64)             # f[:, d], d = 1..ttl
+    best_prefix = np.zeros((n, ttl + 1), np.int64)   # max f[:, 1..d]
+    for d in range(1, ttl + 1):
+        prev = best_prefix[:, d - g] if d - g >= 1 else 0
+        f[:, d] = rings[:, d - 1] + prev
+        best_prefix[:, d] = np.maximum(best_prefix[:, d - 1], f[:, d])
+    return int(best_prefix[:, ttl].sum())
+
+
 def validate_adjacency(adj: np.ndarray) -> None:
     if adj.ndim != 2 or adj.shape[0] != adj.shape[1]:
         raise ValueError(f"adjacency must be square, got {adj.shape}")

@@ -222,6 +222,8 @@ def run_lax_federation(args):
         "delivery": args.delivery, "topology": args.topology,
         "ttl": ttl, "nodes": n, "ticks": ticks,
         "delivery_budget": res.stats["delivery_budget"],
+        "compact_budget": res.stats["compact_budget"],
+        "max_tick_deliveries": res.stats["max_tick_deliveries"],
         "broadcasts": res.stats["broadcasts"],
         "deliveries": res.stats["deliveries"],
         "fedavg_rounds": res.stats["fedavg_rounds"],
@@ -276,9 +278,11 @@ def main():
                     help="federation size for --engine lax")
     ap.add_argument("--ticks", type=int, default=48,
                     help="simulated ticks for --engine lax")
-    ap.add_argument("--delivery", default="sparse",
-                    choices=("sparse", "dense"),
-                    help="receipt engine for --engine lax")
+    ap.add_argument("--delivery", default="compact",
+                    choices=("compact", "sparse", "dense"),
+                    help="receipt engine for --engine lax: compact "
+                    "(segment-compacted work buffer, default), sparse "
+                    "(per-receiver slot buffer), dense (N^2 oracle)")
     from repro.core.topology import KINDS  # numpy-only module: safe pre-mesh
     ap.add_argument("--topology", default="ring", choices=KINDS,
                     help="gossip graph over the federation axis "

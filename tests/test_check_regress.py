@@ -1,0 +1,143 @@
+"""The CI perf-regression gate (benchmarks/check_regress.py): extraction,
+pass/fail verdicts, the baseline-refresh (--update) workflow, and the
+seeded-slowdown self-test CI runs before trusting the gate."""
+import copy
+import json
+import os
+import sys
+
+import pytest
+
+# benchmarks/ is a top-level namespace package next to tests/
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+from benchmarks import check_regress as cr  # noqa: E402
+
+
+def _bench_json():
+    """A minimal but structurally faithful bench_gossip.json."""
+    return {
+        "frontier_vs_chain": [
+            {"kind": "erdos", "nodes": 12, "ttl": 2, "schedule": "frontier",
+             "coverage": 1.0, "missing_pairs": 0, "num_collectives": 21,
+             "collectives_per_delivered_pair": 0.3},
+            {"kind": "erdos", "nodes": 12, "ttl": 2, "schedule": "chain",
+             "coverage": 0.45, "missing_pairs": 38, "num_collectives": 16,
+             "collectives_per_delivered_pair": 0.5},
+        ],
+        "simulator": {"nodes": 256, "heap_ticks": 4, "lax_ticks": 50,
+                      "speedup": 20.0, "lax_s_per_tick": 0.002},
+        "sparse_vs_dense": {"nodes": 256, "ticks_pair": [12, 96],
+                            "speedup": 4.0,
+                            "sparse_s_per_tick": 0.001,
+                            "dense_s_per_tick": 0.004},
+        "compact_vs_sparse": {"nodes": 2048, "ticks_pair": [24, 240],
+                              "speedup": 2.5,
+                              "compact_s_per_tick": 0.01,
+                              "sparse_s_per_tick": 0.025},
+    }
+
+
+def _write(tmp_path, name, data):
+    p = tmp_path / name
+    p.write_text(json.dumps(data))
+    return str(p)
+
+
+def test_extract_trims_to_gated_metrics():
+    out = cr.extract(_bench_json())
+    assert out["schedule"]["erdos,n=12,ttl=2,frontier"] == {
+        "num_collectives": 21, "coverage": 1.0, "missing_pairs": 0}
+    assert out["speedups"] == {"simulator": 20.0, "sparse_vs_dense": 4.0,
+                               "compact_vs_sparse": 2.5}
+    assert out["times"]["compact_vs_sparse.compact_s_per_tick"] == 0.01
+    assert out["scale"]["compact_vs_sparse"] == [2048, [24, 240]]
+
+
+def test_gate_passes_identical_run_and_update_bootstraps(tmp_path):
+    cur = _write(tmp_path, "current.json", _bench_json())
+    base = str(tmp_path / "baselines" / "bench_gossip.json")
+    # no baseline yet -> setup failure telling the operator to --update
+    assert cr.main(["--current", cur, "--baseline", base]) == 2
+    assert cr.main(["--current", cur, "--baseline", base, "--update"]) == 0
+    assert cr.main(["--current", cur, "--baseline", base]) == 0
+
+
+@pytest.mark.parametrize("doctor,category", [
+    (lambda d: d["frontier_vs_chain"][0].update(num_collectives=22),
+     "schedule"),
+    (lambda d: d["frontier_vs_chain"][0].update(coverage=0.9,
+                                                missing_pairs=3),
+     "schedule"),
+    (lambda d: d["compact_vs_sparse"].update(speedup=1.0), "speedup"),
+    (lambda d: d.pop("compact_vs_sparse"), "speedup"),  # vanished line
+    (lambda d: d["compact_vs_sparse"].update(compact_s_per_tick=0.05),
+     "per_tick"),
+])
+def test_gate_fails_on_seeded_slowdown(tmp_path, doctor, category, capsys):
+    base_data = _bench_json()
+    seeded = copy.deepcopy(base_data)
+    doctor(seeded)
+    cur = _write(tmp_path, "current.json", seeded)
+    base = _write(tmp_path, "baseline.json", cr.extract(base_data))
+    assert cr.main(["--current", cur, "--baseline", base]) == 1
+    out = capsys.readouterr().out
+    assert f"regress,{category}" in out and "FAIL" in out
+
+
+def test_gate_tolerates_within_threshold_drift(tmp_path):
+    base_data = _bench_json()
+    drifted = copy.deepcopy(base_data)
+    # 20% slower: inside the default 30% tolerance; the speedup drop stays
+    # above the compact acceptance floor (2.0), which caps the band
+    drifted["compact_vs_sparse"]["compact_s_per_tick"] *= 1.2
+    drifted["compact_vs_sparse"]["speedup"] = 2.1
+    cur = _write(tmp_path, "current.json", drifted)
+    base = _write(tmp_path, "baseline.json", cr.extract(base_data))
+    assert cr.main(["--current", cur, "--baseline", base]) == 0
+    # a tighter --tolerance turns the same wall drift into a failure
+    assert cr.main(["--current", cur, "--baseline", base,
+                    "--tolerance", "0.1"]) == 1
+
+
+def test_speedup_band_capped_by_acceptance_floor(tmp_path):
+    """Wall-ratio noise above the documented contract must not flake the
+    gate: a lucky 4.0x compact baseline would put the 30% band at 2.8x,
+    above the >=2x acceptance contract — the cap (min(band, floor)) lets a
+    noisy-but-conforming 2.2x pass, while below-contract still fails."""
+    base_data = _bench_json()
+    base_data["compact_vs_sparse"]["speedup"] = 4.0    # lucky run
+    base = _write(tmp_path, "baseline.json", cr.extract(base_data))
+    noisy = copy.deepcopy(base_data)
+    noisy["compact_vs_sparse"]["speedup"] = 2.2   # < band 2.8, > floor 2.0
+    cur = _write(tmp_path, "current.json", noisy)
+    assert cr.main(["--current", cur, "--baseline", base]) == 0
+    below = copy.deepcopy(base_data)
+    below["compact_vs_sparse"]["speedup"] = 1.9   # < band AND < floor
+    cur2 = _write(tmp_path, "current2.json", below)
+    assert cr.main(["--current", cur2, "--baseline", base]) == 1
+
+
+def test_gate_skips_mode_mismatched_rows(tmp_path, capsys):
+    """quick vs full runs use different N / tick windows for some lines:
+    those rows must be skipped (with a visible line), not mis-compared."""
+    base_data = _bench_json()
+    other_mode = copy.deepcopy(base_data)
+    other_mode["sparse_vs_dense"].update(nodes=512, speedup=1.0)
+    other_mode["compact_vs_sparse"].update(ticks_pair=[48, 480],
+                                           compact_s_per_tick=9.9)
+    cur = _write(tmp_path, "current.json", other_mode)
+    base = _write(tmp_path, "baseline.json", cr.extract(base_data))
+    assert cr.main(["--current", cur, "--baseline", base]) == 0
+    out = capsys.readouterr().out
+    assert "regress,speedup(sparse_vs_dense),skip" in out
+    assert "regress,per_tick(compact_vs_sparse.compact_s_per_tick),skip" \
+        in out
+
+
+def test_self_test_detects_all_categories():
+    assert cr.self_test(0.30) == 0
+
+
+def test_missing_current_is_actionable(tmp_path, capsys):
+    assert cr.main(["--current", str(tmp_path / "nope.json")]) == 2
+    assert "bench_gossip" in capsys.readouterr().out

@@ -1,5 +1,6 @@
-"""Vectorized tick simulator vs the heap behavioral reference, the sparse
-(budgeted slot) receipt engine vs the dense N^2 oracle, plus
+"""Vectorized tick simulator vs the heap behavioral reference, the
+receipt-delivery engine chain (compact segment-compacted == sparse
+budgeted-slot == dense N^2 oracle) incl. compaction edge cases, plus
 scale/straggler/failure behaviour (paper §VI-D at large N).
 
 Both engines are constructed from ONE ``FederationSpec`` role sheet
@@ -337,23 +338,25 @@ def test_reputation_crushes_malicious_only():
     assert mal < 0.2 < hon, (mal, hon)
 
 
-# ===================================================== sparse vs dense engines
-def _run_both_engines(sc, topo, spec, *, ticks, interval, latency=1, ttl=2,
-                      seed=0):
+# ============================================ compact vs sparse vs dense
+def _run_engines(sc, topo, spec, *, ticks, interval, latency=1, ttl=2,
+                 seed=0, engines=simlax.DELIVERY_ENGINES, compact_budget=None):
     out = {}
-    for eng in ("sparse", "dense"):
+    for eng in engines:
         cfg = simlax.SimLaxConfig(
             ticks=ticks, train_interval=interval, latency=latency, ttl=ttl,
-            record_every=max(1, ticks // 5), seed=seed, delivery=eng)
+            record_every=max(1, ticks // 5), seed=seed, delivery=eng,
+            compact_budget=compact_budget if eng == "compact" else None)
         sim = simlax.LaxSimulator(sc, topo, spec, IMPL2, cfg)
         out[eng] = sim.run()
-    return out["sparse"], out["dense"]
+    return out
 
 
 def _assert_engine_parity(s, d):
-    """The two delivery engines must replay the SAME event stream: integer
+    """Two delivery engines must replay the SAME event stream: integer
     state identical, float state identical up to summation order."""
-    for k in ("broadcasts", "deliveries", "fedavg_rounds"):
+    for k in ("broadcasts", "deliveries", "fedavg_rounds",
+              "max_tick_deliveries"):
         assert s.stats[k] == d.stats[k], (k, s.stats[k], d.stats[k])
     np.testing.assert_array_equal(s.stats["broadcasts_per_node"],
                                   d.stats["broadcasts_per_node"])
@@ -380,8 +383,11 @@ def _assert_engine_parity(s, d):
         ("smallworld", {"degree": 2, "beta": 0.3}, 1, 1, (), {0: 3}, (4,),
          "freerider"),
     ])
-def test_sparse_matches_dense_engine(kind, kw, ttl, latency, dead,
-                                     stragglers, malicious, attack):
+def test_delivery_engines_parity(kind, kw, ttl, latency, dead,
+                                 stragglers, malicious, attack):
+    """compact == sparse == dense on the same (scenario, topology, spec):
+    the compact engine's slot-state layout and work-buffer compaction must
+    replay the oracles' event stream bit-for-bit."""
     n = 14
     sc = scenarios.toy_scenario(n, dim=8, malicious=malicious)
     topo = T.make(kind, n, seed=2, **kw)
@@ -390,15 +396,16 @@ def test_sparse_matches_dense_engine(kind, kw, ttl, latency, dead,
         n, malicious=malicious, attack=attack, dead=dead,
         stragglers=stragglers,
         initial_countdown=[1 + (3 * i) % lo for i in range(n)])
-    s, d = _run_both_engines(sc, topo, spec, ticks=90, interval=(lo, lo + 4),
-                             latency=latency, ttl=ttl)
-    assert s.stats["deliveries"] > 0
-    _assert_engine_parity(s, d)
+    out = _run_engines(sc, topo, spec, ticks=90, interval=(lo, lo + 4),
+                       latency=latency, ttl=ttl)
+    assert out["compact"].stats["deliveries"] > 0
+    _assert_engine_parity(out["compact"], out["sparse"])
+    _assert_engine_parity(out["sparse"], out["dense"])
 
 
 def test_engine_parity_property():
     """Hypothesis sweep: random topology/ttl/latency/dead/straggler/attack
-    combinations never separate the engines."""
+    combinations never separate compact, sparse and dense."""
     hyp = pytest.importorskip("hypothesis")
     st = pytest.importorskip("hypothesis.strategies")
 
@@ -430,18 +437,20 @@ def test_engine_parity_property():
             n, malicious=tuple(malicious), attack=attack, dead=tuple(dead),
             stragglers=strag,
             initial_countdown=[1 + (3 * i) % (lo + 2) for i in range(n)])
-        s, d = _run_both_engines(sc, topo, spec, ticks=50,
-                                 interval=(lo, lo + 3), latency=latency,
-                                 ttl=ttl, seed=seed)
-        _assert_engine_parity(s, d)
+        out = _run_engines(sc, topo, spec, ticks=50,
+                           interval=(lo, lo + 3), latency=latency,
+                           ttl=ttl, seed=seed)
+        _assert_engine_parity(out["compact"], out["sparse"])
+        _assert_engine_parity(out["sparse"], out["dense"])
 
     run()
 
 
-def test_lenet_sparse_matches_dense_engine():
-    """The real-model scenario through both engines at toy size: identical
-    event stream, matching reputations/accuracy (receipt evals are actual
-    LeNet forward passes, so any slot-buffer indexing slip shows up here)."""
+def test_lenet_delivery_engines_parity():
+    """The real-model scenario through all three engines at toy size:
+    identical event stream, matching reputations/accuracy (receipt evals
+    are actual LeNet forward passes, so any slot-buffer or work-buffer
+    indexing slip shows up here)."""
     n = 6
     mal = (0,)
     sc = scenarios.lenet_scenario(n, alpha=1.0, malicious=mal, seed=0,
@@ -450,10 +459,11 @@ def test_lenet_sparse_matches_dense_engine():
     topo = T.kregular(n, 2)
     spec = FederationSpec.build(
         n, malicious=mal, initial_countdown=[1 + (3 * i) % 4 for i in range(n)])
-    s, d = _run_both_engines(sc, topo, spec, ticks=16, interval=(4, 4),
-                             latency=1, ttl=1)
-    assert s.stats["deliveries"] > 0
-    _assert_engine_parity(s, d)
+    out = _run_engines(sc, topo, spec, ticks=16, interval=(4, 4),
+                       latency=1, ttl=1)
+    assert out["compact"].stats["deliveries"] > 0
+    _assert_engine_parity(out["compact"], out["sparse"])
+    _assert_engine_parity(out["sparse"], out["dense"])
 
 
 def test_delivery_budget_bounds_due_pairs():
@@ -514,6 +524,103 @@ def test_delivery_budget_consistent_with_frontier_schedule(kind, kw, ttl):
     sub_sched = T.gossip_schedule(sub_topo, ttl)
     sub_max = int(sub_sched.delivery_counts().sum(axis=1).max())
     assert sub_max <= T.delivery_budget(masked, ttl)
+
+
+# ================================================ compaction edge cases
+def test_compact_zero_delivery_ticks():
+    """A run whose every tick is delivery-free (latency beyond the
+    horizon): the compact work buffer never fills, no NaNs leak out of the
+    dropped-item paths, and training still progresses."""
+    n = 8
+    sc = scenarios.toy_scenario(n)
+    spec = FederationSpec.build(n, initial_countdown=[2] * n)
+    cfg = simlax.SimLaxConfig(ticks=4, train_interval=(12, 12), latency=10,
+                              ttl=1, record_every=2, seed=0,
+                              delivery="compact")
+    res = simlax.LaxSimulator(sc, T.full(n), spec, IMPL2, cfg).run()
+    assert res.stats["deliveries"] == 0
+    assert res.stats["max_tick_deliveries"] == 0
+    assert res.stats["broadcasts"] == n          # everyone trained at t=2
+    assert np.isfinite(res.acc_history).all()
+    assert (res.final_state["w_sum"] == 0).all()
+    assert (res.final_state["buf_cnt"] == 0).all()
+
+
+def test_compact_all_receivers_dead():
+    """Every node dead: no broadcasts, no deliveries, a degenerate (empty)
+    masked adjacency — the compact budget floors at 1 and the run is a
+    clean no-op."""
+    n = 6
+    sc = scenarios.toy_scenario(n)
+    spec = FederationSpec.build(n, dead=tuple(range(n)))
+    cfg = simlax.SimLaxConfig(ticks=30, train_interval=(4, 4), latency=1,
+                              ttl=2, record_every=10, seed=0,
+                              delivery="compact")
+    sim = simlax.LaxSimulator(sc, T.full(n), spec, IMPL2, cfg)
+    assert sim.compact_budget == 1
+    res = sim.run()
+    assert res.stats["broadcasts"] == 0
+    assert res.stats["deliveries"] == 0
+    np.testing.assert_allclose(res.params["w"], sc.init_params_stacked()["w"])
+
+
+def test_compact_buffer_exactly_full():
+    """Synchronized countdowns on a full graph land every (dst, src) pair
+    on one tick: the due count hits the exact compaction_budget bound
+    (n*(n-1)) and the run still matches the oracles — the boundary where
+    off-by-one slot arithmetic would silently drop receipts."""
+    n = 8
+    sc = scenarios.toy_scenario(n)
+    spec = FederationSpec.build(n, initial_countdown=[3] * n)
+    out = _run_engines(sc, T.full(n), spec, ticks=40, interval=(5, 5),
+                       latency=1, ttl=1)
+    res = out["compact"]
+    assert res.stats["compact_budget"] == n * (n - 1)
+    assert res.stats["max_tick_deliveries"] == n * (n - 1)  # exactly full
+    _assert_engine_parity(res, out["sparse"])
+    _assert_engine_parity(out["sparse"], out["dense"])
+
+
+def test_compact_overflow_fails_fast():
+    """A cfg.compact_budget override below the tick's actual due count must
+    raise from run() — never silently drop receipts."""
+    n = 8
+    sc = scenarios.toy_scenario(n)
+    spec = FederationSpec.build(n, initial_countdown=[3] * n)
+    cfg = simlax.SimLaxConfig(ticks=20, train_interval=(5, 5), latency=1,
+                              ttl=1, record_every=5, seed=0,
+                              delivery="compact", compact_budget=5)
+    sim = simlax.LaxSimulator(sc, T.full(n), spec, IMPL2, cfg)
+    assert sim.compact_budget == 5               # override honored
+    with pytest.raises(RuntimeError, match="compact delivery overflow"):
+        sim.run()
+    with pytest.raises(ValueError, match="compact_budget"):
+        simlax.LaxSimulator(sc, T.full(n), spec, IMPL2,
+                            simlax.SimLaxConfig(delivery="compact",
+                                                compact_budget=0))
+
+
+def test_compact_budget_override_with_headroom_matches_oracles():
+    """A tight-but-sufficient override (staggered phases) is the bench's
+    operating point: parity must hold and the recorded max tick activity
+    must stay under the override."""
+    n, interval = 16, 8
+    sc = scenarios.toy_scenario(n)
+    topo = T.kregular(n, 2)
+    spec = FederationSpec.build(
+        n, initial_countdown=[1 + (3 * i) % interval for i in range(n)])
+    default_w = simlax.LaxSimulator(
+        sc, topo, spec, IMPL2,
+        simlax.SimLaxConfig(ticks=1, train_interval=(interval, interval),
+                            latency=1, ttl=2, delivery="compact")
+    ).compact_budget
+    out = _run_engines(sc, topo, spec, ticks=64,
+                       interval=(interval, interval), latency=1, ttl=2,
+                       compact_budget=default_w // 2)
+    res = out["compact"]
+    assert res.stats["compact_budget"] == default_w // 2
+    assert res.stats["max_tick_deliveries"] <= default_w // 2
+    _assert_engine_parity(res, out["sparse"])
 
 
 # ============================================== re-broadcast overwrite caveat

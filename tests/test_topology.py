@@ -132,6 +132,66 @@ def test_hop_distance_ring():
         assert dist[0, j] == min(j, n - j)
 
 
+# ------------------------------------------------- compaction budget math
+def test_ring_sizes_partition_the_ball():
+    for kind, kw in (("ring", {}), ("kregular", {"degree": 2}),
+                     ("erdos", {"p": 0.3}), ("full", {})):
+        topo = T.make(kind, 14, seed=5, **kw)
+        for ttl in (1, 2, 3):
+            rings = T.ring_sizes(topo.adj, ttl)
+            assert rings.shape == (14, ttl)
+            np.testing.assert_array_equal(rings.sum(axis=1),
+                                          T.ttl_ball_sizes(topo.adj, ttl))
+    with pytest.raises(ValueError, match="ttl"):
+        T.ring_sizes(T.ring(6).adj, 0)
+
+
+def test_compaction_budget_closed_forms():
+    """Circulant graphs have every ring of size 2k (until wrap), so each
+    regime of the interval-gap DP has a hand-computable answer."""
+    n, k = 16, 1
+    adj = T.kregular(n, k).adj
+    # recommended regime (lo >= ttl * latency): one ring per sender
+    assert T.compaction_budget(adj, 3, (3, 3), latency=1) == n * 2
+    assert T.compaction_budget(adj, 3, (9, 12), latency=3) == n * 2
+    # overwrite regime: gap g = ceil(lo/latency) admits multi-ring sets
+    assert T.compaction_budget(adj, 3, (1, 1), latency=1) == n * 6  # all
+    assert T.compaction_budget(adj, 3, (2, 2), latency=1) == n * 4  # {1,3}
+    # full graph, ttl >= 1: everyone's ring-1 is everyone else
+    assert T.compaction_budget(T.full(8).adj, 2, (8, 8)) == 8 * 7
+    # scalar interval accepted (treated as lo)
+    assert T.compaction_budget(adj, 2, 4) == n * 2
+
+
+def test_compaction_budget_never_exceeds_sparse_slots():
+    for kind, kw in (("kregular", {"degree": 3}), ("erdos", {"p": 0.35}),
+                     ("smallworld", {"degree": 2, "beta": 0.3})):
+        topo = T.make(kind, 12, seed=7, **kw)
+        for ttl in (1, 2, 3):
+            for lo in (1, 2, ttl, 4 * ttl):
+                bound = T.compaction_budget(topo.adj, ttl, (lo, lo + 4))
+                assert bound <= 12 * T.delivery_budget(topo.adj, ttl), \
+                    (kind, ttl, lo)
+                # a bound below the max ball would drop same-tick arrivals
+                assert bound >= T.ttl_ball_sizes(topo.adj, ttl).max()
+
+
+def test_compaction_budget_dead_masked_and_validation():
+    n = 12
+    topo = T.make("erdos", n, p=0.35, seed=3)
+    alive = np.ones((n,), bool)
+    alive[[2, 9]] = False
+    masked = topo.adj & alive[None, :] & alive[:, None]
+    assert T.compaction_budget(masked, 2, (4, 8)) <= \
+        T.compaction_budget(topo.adj, 2, (4, 8))
+    # fully-dead adjacency: no rings, zero bound (callers floor at 1)
+    assert T.compaction_budget(np.zeros((4, 4), bool), 2, (4, 8)) == 0
+    with pytest.raises(ValueError, match="interval"):
+        T.compaction_budget(topo.adj, 2, (0, 4))
+    with pytest.raises(ValueError, match="latency"):
+        T.compaction_budget(topo.adj, 2, (4, 8), latency=0)
+
+
 def test_as_name_dict_matches_heap_helpers():
     from repro.chain import network
     names = [f"n{i}" for i in range(6)]
