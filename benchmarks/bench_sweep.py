@@ -1,0 +1,132 @@
+"""Batched-sweep benchmark: the multi-federation dispatch acceptance lines.
+
+Two sections, persisted to experiments/bench_sweep.json and merged into the
+CI perf-regression gate (benchmarks/check_regress.py) alongside the gossip
+bench:
+
+* `sweep,batched_vs_loop` — ONE vmapped `LaxSimulator.run()` over a
+  32-federation `BatchedFederationSpec` (heterogeneous attacker sheets +
+  per-federation seeds, toy scenario, N=256) vs a Python loop of the same
+  32 single runs. The acceptance contract is >=5x aggregate
+  federations/sec at batch >= 8, AND bitwise-identical results member by
+  member — the loop's outputs double as the oracle, so the throughput
+  number can never come from a simulation that diverged.
+* `sweep,smoke` — a 2x2 grid (attack x seed) at N=16 through the full
+  `repro.chain.sweeps` orchestrator (grid -> batch planning -> frontier
+  tables), so CI exercises and archives the sweep artifact end-to-end.
+
+The batch scale stays at B=32/N=256 even under --quick (quick is already
+CI's mode; the acceptance number must be in the CI JSON), mirroring
+bench_gossip.compact_vs_sparse.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from repro.chain import attacks, scenarios, simlax, sweeps
+from repro.core import topology as topology_lib
+from repro.core.reputation import get as get_rep
+
+
+def _assert_bitwise(batched_res, single_res, b: int):
+    """The batched member must equal its single-run twin bit for bit."""
+    import jax
+
+    for name, a, c in (("reputation", batched_res.reputation,
+                        single_res.reputation),
+                       ("acc_history", batched_res.acc_history,
+                        single_res.acc_history)):
+        if not np.array_equal(a, c):
+            raise AssertionError(
+                f"sweep,batched_vs_loop: federation {b} diverged in {name}")
+    for a, c in zip(jax.tree.leaves(batched_res.params),
+                    jax.tree.leaves(single_res.params)):
+        if not np.array_equal(a, c):
+            raise AssertionError(
+                f"sweep,batched_vs_loop: federation {b} diverged in params")
+
+
+def batched_vs_loop(n: int = 256, batch: int = 32, ticks: int = 120,
+                    quick: bool = False):
+    """One batched dispatch vs a sequential loop of identical single runs:
+    wall clock each way, aggregate federations/sec, the speedup ratio, and
+    a member-by-member bitwise equality check against the loop's results."""
+    topo = topology_lib.kregular(n, 2)
+    sc = scenarios.toy_scenario(n, dim=16)
+    specs = [attacks.FederationSpec.build(
+        n, malicious=tuple(range(b % 4)),
+        initial_countdown=[1 + (i + b) % 12 for i in range(n)])
+        for b in range(batch)]
+    seeds = list(range(batch))
+    mk_cfg = lambda seed: simlax.SimLaxConfig(
+        ticks=ticks, train_interval=(12, 12), latency=1, ttl=2,
+        record_every=20, seed=seed)
+    bsim = simlax.LaxSimulator(
+        sc, topo, attacks.BatchedFederationSpec.build(specs, seeds),
+        get_rep("impl2"), mk_cfg(0))
+    ssims = [simlax.LaxSimulator(sc, topo, s, get_rep("impl2"), mk_cfg(sd))
+             for s, sd in zip(specs, seeds)]
+    # warm both paths (trace+compile) so the timed pass is steady-state
+    bsim.run()
+    ssims[0].run()
+    t0 = time.perf_counter()
+    singles = [s.run() for s in ssims]
+    loop_wall = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    batched = bsim.run()
+    batched_wall = time.perf_counter() - t0
+    for b, (br, sr) in enumerate(zip(batched, singles)):
+        _assert_bitwise(br, sr, b)
+    out = {
+        "nodes": n, "batch": batch, "ticks": ticks,
+        "loop_wall_s": round(loop_wall, 3),
+        "batched_wall_s": round(batched_wall, 3),
+        "loop_feds_per_s": round(batch / loop_wall, 3),
+        "batched_feds_per_s": round(batch / batched_wall, 3),
+        "batched_s_per_fed": round(batched_wall / batch, 5),
+        "speedup": round(loop_wall / batched_wall, 2),
+        "bitwise_equal": True,
+    }
+    print(f"sweep,batched_vs_loop,{n}nodes,batch={batch},{out['speedup']}x,"
+          f"loop={out['loop_feds_per_s']}feds/s,"
+          f"batched={out['batched_feds_per_s']}feds/s,bitwise=ok")
+    return out
+
+
+def smoke_frontier(quick: bool = False):
+    """2x2 grid (honest/gaussian x 2 seeds) at N=16 through the sweep
+    orchestrator — the CI artifact proving grid -> batches -> frontier
+    tables stays wired end to end."""
+    cells = sweeps.expand_grid(sizes=[16], attacks=[None, "gaussian"],
+                               seeds=[0, 1])
+    cfg = simlax.SimLaxConfig(ticks=40, train_interval=(6, 10), ttl=2,
+                              record_every=8)
+    t0 = time.perf_counter()
+    outcomes = sweeps.run_sweep(cells, cfg=cfg, target_acc=0.5)
+    wall = time.perf_counter() - t0
+    tables = sweeps.frontier_tables(outcomes, target_acc=0.5)
+    out = {"cells": len(cells), "nodes": 16, "wall_s": round(wall, 2),
+           "outcomes": [o.row() for o in outcomes], "frontier": tables}
+    for row in tables["accuracy_under_attack"]:
+        print(f"sweep,smoke,attack={row['attack']},n={row['size']},"
+              f"acc={row['mean_final_honest_acc']},"
+              f"rep_attacker={row['mean_attacker_reputation']}")
+    return out
+
+
+def main(quick: bool = False) -> dict:
+    return {
+        "sweep_batched_vs_loop": batched_vs_loop(quick=quick),
+        "smoke": smoke_frontier(quick=quick),
+    }
+
+
+if __name__ == "__main__":
+    import os
+    import sys
+    os.makedirs("experiments", exist_ok=True)
+    json.dump(main(quick="--quick" in sys.argv),
+              open("experiments/bench_sweep.json", "w"), indent=1)

@@ -1,21 +1,24 @@
 """CI perf-regression gate: the bench-smoke JSON vs committed baselines.
 
 Compares the `gossip` bench output (experiments/bench_gossip.json, uploaded
-per PR by the bench-smoke job) against the committed snapshot under
+per PR by the bench-smoke job) merged with the batched-sweep bench output
+(experiments/bench_sweep.json, same job — the `sweep,batched_vs_loop`
+acceptance line) against the committed snapshot under
 benchmarks/baselines/ and FAILS the build on:
 
 * any `gossip,frontier_vs_chain` collective-count growth (schedule cost is
   deterministic, so ANY growth is a lowering regression — likewise coverage
   drops and new missing pairs);
 * an engine speedup ratio (`simulator`, `sparse_vs_dense`,
-  `compact_vs_sparse`) falling more than --tolerance (default 30%) below
-  its baseline;
+  `compact_vs_sparse`, `sweep_batched_vs_loop`) falling more than
+  --tolerance (default 30%) below its baseline;
 * a per-tick wall time rising more than --tolerance above its baseline.
 
 Baseline-refresh workflow (a legitimate perf change or a runner-class
 change makes wall baselines stale):
 
     PYTHONPATH=src python -m benchmarks.bench_gossip --quick
+    PYTHONPATH=src python -m benchmarks.bench_sweep --quick
     PYTHONPATH=src python -m benchmarks.check_regress --update
     git add benchmarks/baselines/ && git commit
 
@@ -47,6 +50,7 @@ import sys
 BASELINE_DIR = os.path.join(os.path.dirname(__file__), "baselines")
 BASELINE_PATH = os.path.join(BASELINE_DIR, "bench_gossip.json")
 CURRENT_PATH = os.path.join("experiments", "bench_gossip.json")
+SWEEP_CURRENT_PATH = os.path.join("experiments", "bench_sweep.json")
 
 # (section, key) pairs gated as wall-clock per-tick times (lower is better)
 TIME_KEYS = (
@@ -55,20 +59,28 @@ TIME_KEYS = (
     ("sparse_vs_dense", "dense_s_per_tick"),
     ("compact_vs_sparse", "compact_s_per_tick"),
     ("compact_vs_sparse", "sparse_s_per_tick"),
+    ("sweep_batched_vs_loop", "batched_s_per_fed"),
 )
 # sections gated as speedup ratios (higher is better). The documented
 # acceptance contracts CAP the relative band from below: wall-clock ratios
 # are noisy run-to-run, so the gate never demands more than the contract —
 # falling below `baseline * (1 - tol)` AND the contract is what fails.
-SPEEDUP_KEYS = ("simulator", "sparse_vs_dense", "compact_vs_sparse")
+SPEEDUP_KEYS = ("simulator", "sparse_vs_dense", "compact_vs_sparse",
+                "sweep_batched_vs_loop")
 ACCEPTANCE_FLOORS = {"simulator": 10.0,       # >=10x heap at >=256 nodes
                      "sparse_vs_dense": 3.0,  # >=3x dense at N=512 toy
-                     "compact_vs_sparse": 2.0}  # >=2x sparse at N=2048
+                     "compact_vs_sparse": 2.0,  # >=2x sparse at N=2048
+                     # >=5x federations/sec, one vmapped dispatch vs a
+                     # Python loop of single runs (batch=32, N=256 toy)
+                     "sweep_batched_vs_loop": 5.0}
 
 
 def _scale_key(row: dict):
     """The knobs that make two runs comparable: same N and the same
-    measurement windows (quick vs full runs differ in one or both)."""
+    measurement windows (quick vs full runs differ in one or both; the
+    sweep line's window is its batch size x tick count)."""
+    if "batch" in row:
+        return [row.get("nodes"), [row.get("batch"), row.get("ticks")]]
     return [row.get("nodes"),
             row.get("ticks_pair") or [row.get("heap_ticks"),
                                       row.get("lax_ticks")]]
@@ -190,8 +202,10 @@ def self_test(tolerance: float) -> int:
     baseline = {
         "schedule": {"erdos,n=12,ttl=2,frontier": {
             "num_collectives": 20, "coverage": 1.0, "missing_pairs": 0}},
-        "speedups": {"compact_vs_sparse": 3.0},
-        "scale": {"compact_vs_sparse": [2048, [24, 240]]},
+        "speedups": {"compact_vs_sparse": 3.0,
+                     "sweep_batched_vs_loop": 7.0},
+        "scale": {"compact_vs_sparse": [2048, [24, 240]],
+                  "sweep_batched_vs_loop": [256, [32, 120]]},
         "times": {"compact_vs_sparse.compact_s_per_tick": 0.01},
     }
     clean = copy.deepcopy(baseline)
@@ -201,11 +215,17 @@ def self_test(tolerance: float) -> int:
     seeded["schedule"]["erdos,n=12,ttl=2,frontier"]["num_collectives"] += 1
     seeded["speedups"]["compact_vs_sparse"] = \
         baseline["speedups"]["compact_vs_sparse"] * 0.5
+    # 3.5x sits below both the relative band and the 5x acceptance
+    # contract — the sweep throughput line must be flagged by name
+    seeded["speedups"]["sweep_batched_vs_loop"] = 3.5
     seeded["times"]["compact_vs_sparse.compact_s_per_tick"] = \
         baseline["times"]["compact_vs_sparse.compact_s_per_tick"] * 2.0
     fails = compare(seeded, baseline, tolerance)
     missing = [cat for cat in ("schedule", "speedup", "per_tick")
                if not any(f.startswith(cat) for f in fails)]
+    if not any(f.startswith("speedup(sweep_batched_vs_loop)")
+               for f in fails):
+        missing.append("speedup(sweep_batched_vs_loop)")
     if missing:
         print(f"regress,self_test,FAIL,undetected categories: {missing}")
         return 1
@@ -218,6 +238,10 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--current", default=CURRENT_PATH,
                     help="bench_gossip JSON from the run under test")
+    ap.add_argument("--current-sweep", default=SWEEP_CURRENT_PATH,
+                    help="bench_sweep JSON from the run under test (merged "
+                    "into the same gate; absent file = no sweep rows, which "
+                    "FAILS once the baseline carries them)")
     ap.add_argument("--baseline", default=BASELINE_PATH,
                     help="committed baseline (benchmarks/baselines/)")
     ap.add_argument("--tolerance", type=float,
@@ -236,11 +260,20 @@ def main(argv=None) -> int:
 
     try:
         with open(args.current) as f:
-            current = extract(json.load(f))
+            data = json.load(f)
     except FileNotFoundError:
         print(f"regress,setup,FAIL,no bench JSON at {args.current} — run "
               "`python -m benchmarks.bench_gossip --quick` first")
         return 2
+    # the sweep bench persists separately; merge its top-level sections so
+    # one gate (and one committed baseline) covers both JSONs. A missing
+    # sweep file just contributes no rows — the vanished-row check then
+    # fails against a baseline that has them, so the sweep bench cannot be
+    # silently dropped from CI.
+    if os.path.exists(args.current_sweep):
+        with open(args.current_sweep) as f:
+            data.update(json.load(f))
+    current = extract(data)
 
     if args.update:
         os.makedirs(os.path.dirname(args.baseline), exist_ok=True)

@@ -45,6 +45,22 @@ constructed from: per-node attacker assignment (name or instance), dead
 nodes, straggler factors, and the initial train countdown. Building the heap
 and lax simulators from ONE spec is what makes their parity tests a
 single-source-of-truth comparison (tests/test_simlax.py).
+
+``BatchedFederationSpec`` stacks several same-N role sheets (plus one PRNG
+seed each) into a single batch the vectorized engine vmaps end-to-end: per-
+spec role arrays gain a leading batch axis, and the distinct attack
+instances across the whole batch form a union (``attack_union``) of
+``(attack, (B, N) mask, (B,) fold)`` triples — each batch member keeps its
+OWN per-spec fold constants (``attack_fold`` over its own group order), so a
+batched run replays every member's single-run key stream bit-for-bit. See
+docs/SWEEPS.md.
+
+PRNG key-stream contract (shared by both engines; fold constants must stay
+disjoint): with ``key_t = fold_in(PRNGKey(seed), tick)``, fold 0 keys the
+tick's train steps, ``attack_fold(gi)`` keys attack group ``gi`` (1 for
+group 0 — pinned to the legacy hard-coded poison stream — then 3, 4, ...),
+fold 2 keys the train-interval redraw, and fold 12345 of the BASE key (not
+``key_t``) draws the initial countdowns.
 """
 from __future__ import annotations
 
@@ -294,6 +310,16 @@ class FederationSpec:
             groups[index[a]][1][i] = True
         return groups
 
+    def attack_fold_of(self, attack) -> Optional[int]:
+        """The fold constant THIS spec assigns ``attack`` (its position in
+        ``attack_groups()`` order through ``attack_fold``), or None if the
+        spec has no node running it. Batched runs use this to give every
+        batch member its own single-run key stream."""
+        for gi, (a, _) in enumerate(self.attack_groups()):
+            if a == attack:
+                return attack_fold(gi)
+        return None
+
     def attack_key_fns(self, seed: int) -> Dict[int, Callable]:
         """Per-attacker ``tick -> key`` streams for the heap engine, drawn
         from the SAME fold_in(tick) scheme the lax scan uses (group order
@@ -309,3 +335,85 @@ class FederationSpec:
                                          self.num_nodes, _i)
                 fns[int(i)] = key_at
         return fns
+
+
+# ============================================================== batched sheet
+@dataclasses.dataclass(frozen=True)
+class BatchedFederationSpec:
+    """A stack of same-N ``FederationSpec`` role sheets, one PRNG seed each
+    — the unit the vectorized engine vmaps over (docs/SWEEPS.md).
+
+    All members must agree on ``num_nodes`` (the static shape vmap
+    requires); topology, scenario and ``SimLaxConfig`` are shared at the
+    simulator level. Everything else — attacker sheets, dead sets,
+    stragglers, countdowns, seeds — may differ per member and becomes a
+    leading-axis array inside the scan.
+
+    specs: (B,) FederationSpec members
+    seeds: (B,) per-member engine seeds (member b's run is bitwise the
+        single run of ``specs[b]`` under ``SimLaxConfig(seed=seeds[b])``),
+        or None to run every member at the config's seed
+    """
+    specs: Tuple[FederationSpec, ...]
+    seeds: Optional[Tuple[int, ...]] = None
+
+    def __post_init__(self):
+        if not self.specs:
+            raise ValueError("BatchedFederationSpec needs >= 1 spec")
+        n = self.specs[0].num_nodes
+        for b, s in enumerate(self.specs):
+            if s.num_nodes != n:
+                raise ValueError(
+                    f"batch members must share num_nodes: member {b} has "
+                    f"{s.num_nodes}, member 0 has {n}")
+        if self.seeds is not None and len(self.seeds) != len(self.specs):
+            raise ValueError(
+                f"{len(self.seeds)} seeds for {len(self.specs)} specs")
+
+    @classmethod
+    def build(cls, specs: Sequence[FederationSpec],
+              seeds: Optional[Sequence[int]] = None
+              ) -> "BatchedFederationSpec":
+        return cls(specs=tuple(specs),
+                   seeds=None if seeds is None
+                   else tuple(int(s) for s in seeds))
+
+    # ------------------------------------------------------------- accessors
+    @property
+    def batch_size(self) -> int:
+        return len(self.specs)
+
+    @property
+    def num_nodes(self) -> int:
+        return self.specs[0].num_nodes
+
+    def resolved_seeds(self, default_seed: int) -> Tuple[int, ...]:
+        return (self.seeds if self.seeds is not None
+                else (int(default_seed),) * len(self.specs))
+
+    def dead_sets(self) -> Tuple[Tuple[int, ...], ...]:
+        """(B,) dead-node tuples, the ``topology.batch_budgets`` input."""
+        return tuple(s.dead for s in self.specs)
+
+    def attack_union(self) -> List[Tuple[object, np.ndarray, np.ndarray]]:
+        """Distinct attack instances across the batch, in first-appearance
+        order (member-major), as ``(attack, (B, N) bool mask, (B,) int32
+        folds)`` triples. ``mask[b]`` marks member b's nodes running the
+        attack; ``folds[b]`` is the fold constant member b's OWN
+        ``attack_groups()`` order assigns it (``attack_fold``), so the
+        batched scan replays each member's single-run poison stream
+        bit-for-bit. Members without the attack get an all-False mask (the
+        fold entry is unused — the masked select discards the output)."""
+        b_n = (len(self.specs), self.num_nodes)
+        union: List[Tuple[object, np.ndarray, np.ndarray]] = []
+        index: Dict[object, int] = {}
+        for b, s in enumerate(self.specs):
+            for gi, (a, mask) in enumerate(s.attack_groups()):
+                if a not in index:
+                    index[a] = len(union)
+                    union.append((a, np.zeros(b_n, np.bool_),
+                                  np.zeros((b_n[0],), np.int32)))
+                _, masks, folds = union[index[a]]
+                masks[b] = mask
+                folds[b] = attack_fold(gi)
+        return union

@@ -35,8 +35,21 @@ training, receipt accuracy measured on the receiver's own held-out shard
 (§IV-B3). Feasible in `simlax` only with the sparse delivery engine
 (receipt evals cost a real forward pass).
 
+State layout / batching contract: every stacked property carries node id
+as the LEADING axis (leaves ``(N, ...)``), which is what lets the engine
+vmap ``train_fn`` over nodes — and, one level up, vmap whole federations
+(`repro.chain.attacks.BatchedFederationSpec`): a batched run closes over
+ONE scenario instance shared by all members (same data, same
+``init_params_stacked()``), so per-federation divergence comes only from
+roles and seeds. Scenarios hold no PRNG state of their own: ``train_fn``
+receives its key from the engine's per-tick ``fold_in`` stream (the
+key-stream contract in `repro.chain.simlax`), which is why two engines —
+or a batched member and its single-run twin — walk identical
+trajectories.
+
 Used by tests/test_simlax.py (heap-vs-lax and sparse-vs-dense parity),
-benchmarks/bench_gossip.py / bench_malicious.py, and
+tests/test_batched.py, benchmarks/bench_gossip.py / bench_malicious.py /
+bench_sweep.py, `repro.chain.sweeps`, and
 `repro.launch.dryrun --engine lax`.
 """
 from __future__ import annotations

@@ -61,6 +61,25 @@ Receipt evaluation has three interchangeable engines
     three engines are parity-tested to produce identical event streams and
     matching state (tests/test_simlax.py).
 
+Batched runs: constructing with a ``repro.chain.attacks
+.BatchedFederationSpec`` (B same-N role sheets + per-member seeds; one
+shared scenario/topology/config) vmaps the ENTIRE scan over the batch —
+per-member role arrays, slot maps and attack masks gain a leading batch
+axis, the slot width and compaction budget take the max over members
+(`repro.core.topology.batch_budgets`), and ``run()`` returns a list of B
+``SimLaxResult``s, each bitwise identical to that member's single run
+(tests/test_batched.py pins this). One compiled dispatch amortizes the
+per-op overhead that dominates small-N single runs — the whole-grid sweep
+throughput lever (`repro.chain.sweeps`, docs/SWEEPS.md).
+
+PRNG key-stream contract (single source: ``repro.chain.attacks``): with
+``key_t = fold_in(PRNGKey(cfg.seed), t)``, fold 0 of ``key_t`` keys the
+tick's train steps, ``attacks.attack_fold(gi)`` keys attack group ``gi``,
+fold 2 keys the train-interval redraw, and fold 12345 of the BASE key
+draws initial countdowns. The heap ``DFLNode`` draws attack keys from the
+same stream (``FederationSpec.attack_key_fns``), which is what makes
+randomized-attack parity between the engines bitwise.
+
 Scope: train/broadcast/receipt/FedAvg/reputation dynamics — the metrics the
 paper's figures plot. Block assembly, signatures and ledger bookkeeping stay
 in the heap simulator, which remains the behavioral reference; `simlax` is
@@ -90,7 +109,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.chain import attacks as attacks_lib
-from repro.chain.attacks import FederationSpec
+from repro.chain.attacks import BatchedFederationSpec, FederationSpec
 from repro.core import topology as topology_lib
 from repro.core.reputation import ReputationImpl
 
@@ -233,15 +252,21 @@ class LaxSimulator:
                 "pass node roles EITHER via FederationSpec OR via the "
                 "legacy malicious/dead/stragglers/initial_countdown "
                 "kwargs, not both")
-        if spec.num_nodes != n:
-            raise ValueError(
-                f"spec is for {spec.num_nodes} nodes, topology has {n}")
+        batched = isinstance(spec, BatchedFederationSpec)
+        specs = spec.specs if batched else (spec,)
+        for b, s in enumerate(specs):
+            if s.num_nodes != n:
+                raise ValueError(
+                    (f"batch member {b}'s spec" if batched else "spec")
+                    + f" is for {s.num_nodes} nodes, topology has {n}")
 
         self.scenario = scenario
         self.spec = spec
         self.topology = topology
         self.cfg = cfg
         self.rep_impl = rep_impl
+        self._batched = batched
+        self.batch_size = spec.batch_size if batched else None
 
         if cfg.latency < 1:
             raise ValueError(
@@ -263,41 +288,51 @@ class LaxSimulator:
                 "the heap reference's. Raise train_interval or lower "
                 "ttl/latency for exact parity.",
                 stacklevel=2)
-        alive = np.ones((n,), np.bool_)
-        alive[list(spec.dead)] = False
-        self.alive = alive
-        # flooding routes only through alive nodes
-        adj = topology.adj & alive[None, :] & alive[:, None]
-        dist = topology_lib.hop_distance_from_adj(adj)
-        reach = (dist >= 1) & (dist <= cfg.ttl)
-        self._reach = jnp.asarray(reach)
-        delay = np.where(reach, dist * cfg.latency, 0).astype(np.int32)
-        self._delay = jnp.asarray(delay)
+        # per-member role/topology constants: flooding routes only through
+        # alive nodes, so each batch member gets its own masked reach/delay
+        alives, dists, reaches, delays = [], [], [], []
+        for s in specs:
+            alive = np.ones((n,), np.bool_)
+            alive[list(s.dead)] = False
+            adj = topology.adj & alive[None, :] & alive[:, None]
+            dist = topology_lib.hop_distance_from_adj(adj)
+            reach = (dist >= 1) & (dist <= cfg.ttl)
+            alives.append(alive)
+            dists.append(dist)
+            reaches.append(reach)
+            delays.append(np.where(reach, dist * cfg.latency, 0)
+                          .astype(np.int32))
+        self.alive = np.stack(alives) if batched else alives[0]
+        # sparse/compact slot width and the compact work-buffer bound both
+        # take the MAX over the batch — one static layout serves every
+        # member; batch_budgets also records the per-member exact bounds
+        self.budgets = topology_lib.batch_budgets(
+            topology.adj, cfg.ttl, cfg.train_interval,
+            [s.dead for s in specs], latency=cfg.latency, dists=dists)
         # sparse engine: fixed slot-buffer width = the exact worst case of
         # simultaneous arrivals at one receiver (its ttl-ball size). Slots
         # are STATIC: slot k of dst is its k-th in-ball sender (ascending
         # src index, so the masked argmin reproduces the dense engine's
         # lowest-src tie-break) — a delivery can only come from the ball,
         # so dueness is a cheap (N, budget) gather, no per-tick compaction.
-        self.delivery_budget = max(
-            1, topology_lib.delivery_budget(adj, cfg.ttl, dist=dist))
-        slot_src = np.argsort(~reach, axis=1, kind="stable")
-        self._slot_src = jnp.asarray(
-            slot_src[:, :self.delivery_budget].astype(np.int32))
+        self.delivery_budget = budget = self.budgets.delivery
         # compact engine: one flat work buffer over ALL receivers, sized by
         # the exact per-tick activity bound (every sender's heaviest
         # feasible ring combination landing on one tick) — never larger
         # than the sparse engine's n * budget slots, usually far smaller.
         # cfg.compact_budget overrides it; runtime overflow then fails fast.
-        exact = max(1, topology_lib.compaction_budget(
-            adj, cfg.ttl, cfg.train_interval, latency=cfg.latency,
-            dist=dist))
+        exact = self.budgets.compaction
         if cfg.compact_budget is not None and cfg.compact_budget < 1:
             raise ValueError(
                 f"compact_budget must be >= 1, got {cfg.compact_budget}")
         self.compact_budget = min(
             exact if cfg.compact_budget is None else int(cfg.compact_budget),
             n * self.delivery_budget)
+        # members whose own ttl-ball is smaller than the shared width get
+        # padding slots mapped to non-reach senders: never due, weight 0
+        slot_srcs = [np.argsort(~reach, axis=1, kind="stable")[:, :budget]
+                     .astype(np.int32) for reach in reaches]
+        self._slot_src_np = np.stack(slot_srcs) if batched else slot_srcs[0]
         # compact state layout: arrive is (N, budget) receiver slots, and
         # broadcasting scatters through the static INVERSE slot map — for
         # each sender, the (dst, slot, delay) triples it lands in (out-ball
@@ -306,40 +341,95 @@ class LaxSimulator:
         # arrival bookkeeping O(N * budget); the oracles keep the (N, N)
         # matrix the parity tests compare against — and skip building the
         # map (an O(N^2) temp + a python loop over senders) entirely.
-        self._inv_dst = self._inv_slot = self._inv_delay = None
+        inv_dsts, inv_slots, inv_delays = [], [], []
         if cfg.delivery == "compact":
-            budget = self.delivery_budget
-            slot_of = np.full((n, n), -1, np.int64)
-            rows = np.arange(n)[:, None]
-            slot_of[rows, slot_src[:, :budget]] = \
-                np.arange(budget)[None, :]
-            slot_of[~reach] = -1  # padding columns map to non-reach senders
-            inv_dst = np.full((n, budget), n, np.int32)
-            inv_slot = np.zeros((n, budget), np.int32)
-            inv_delay = np.zeros((n, budget), np.int32)
-            for s in range(n):
-                dsts = np.flatnonzero(reach[:, s])
-                inv_dst[s, :len(dsts)] = dsts
-                inv_slot[s, :len(dsts)] = slot_of[dsts, s]
-                inv_delay[s, :len(dsts)] = delay[dsts, s]
-            self._inv_dst = jnp.asarray(inv_dst)
-            self._inv_slot = jnp.asarray(inv_slot)
-            self._inv_delay = jnp.asarray(inv_delay)
+            for reach, delay, slot_src in zip(reaches, delays, slot_srcs):
+                slot_of = np.full((n, n), -1, np.int64)
+                rows = np.arange(n)[:, None]
+                slot_of[rows, slot_src] = np.arange(budget)[None, :]
+                slot_of[~reach] = -1  # padding cols map to non-reach senders
+                inv_dst = np.full((n, budget), n, np.int32)
+                inv_slot = np.zeros((n, budget), np.int32)
+                inv_delay = np.zeros((n, budget), np.int32)
+                for src in range(n):
+                    dsts = np.flatnonzero(reach[:, src])
+                    inv_dst[src, :len(dsts)] = dsts
+                    inv_slot[src, :len(dsts)] = slot_of[dsts, src]
+                    inv_delay[src, :len(dsts)] = delay[dsts, src]
+                inv_dsts.append(inv_dst)
+                inv_slots.append(inv_slot)
+                inv_delays.append(inv_delay)
 
-        # one gathered vmap per distinct attack instance over that group's
-        # (static) node ids only; group order keys the per-group PRNG folds
-        # (group 0 of a single-gaussian spec replays the legacy hard-coded
-        # poison stream bit-for-bit)
-        self._attack_groups = [(attack, np.flatnonzero(mask))
-                               for attack, mask in spec.attack_groups()]
-        mal = np.zeros((n,), np.bool_)
-        mal[list(spec.malicious)] = True
-        self._malicious = jnp.asarray(mal)
-        strag = np.ones((n,), np.int32)
-        for k, v in spec.straggler_map().items():
-            strag[k] = v
-        self._straggler = jnp.asarray(strag)
-        self._alive_j = jnp.asarray(alive)
+        # distinct attack instances (union over the batch) each run one
+        # masked vmap over ALL nodes; the per-member (G, N) masks select
+        # which nodes actually broadcast the poisoned model, and the
+        # per-member (G,) fold constants key each member's OWN single-run
+        # PRNG stream (group 0 of a single-gaussian spec replays the
+        # legacy hard-coded poison stream bit-for-bit)
+        if batched:
+            union = spec.attack_union()
+            self._attack_instances = tuple(a for a, _, _ in union)
+            amask = (np.stack([m for _, m, _ in union], axis=1) if union
+                     else np.zeros((len(specs), 0, n), np.bool_))  # (B, G, N)
+            afold = (np.stack([f for _, _, f in union], axis=1) if union
+                     else np.zeros((len(specs), 0), np.int32))     # (B, G)
+            gids = [np.flatnonzero(amask[:, g, :].any(axis=0))
+                    for g in range(amask.shape[1])]
+        else:
+            groups = spec.attack_groups()
+            self._attack_instances = tuple(a for a, _ in groups)
+            amask = (np.stack([m for _, m in groups]) if groups
+                     else np.zeros((0, n), np.bool_))              # (G, N)
+            afold = np.asarray([attacks_lib.attack_fold(gi)
+                                for gi in range(len(groups))], np.int32)
+            gids = [np.flatnonzero(amask[g]) for g in range(amask.shape[0])]
+        # static per-group attacker ids (union over the batch): poison
+        # sampling + the attack vmap run over these ids only — at N=2048
+        # with a few attackers, running them over all N nodes multiplies
+        # the per-tick cost several-fold
+        self._attack_ids = tuple(np.asarray(i, np.int32) for i in gids)
+
+        mals, strags, countdowns, use_countdowns = [], [], [], []
+        for s in specs:
+            mal = np.zeros((n,), np.bool_)
+            mal[list(s.malicious)] = True
+            mals.append(mal)
+            strag = np.ones((n,), np.int32)
+            for k, v in s.straggler_map().items():
+                strag[k] = v
+            strags.append(strag)
+            use_countdowns.append(s.initial_countdown is not None)
+            countdowns.append(
+                np.zeros((n,), np.int32) if s.initial_countdown is None
+                else np.asarray(s.initial_countdown, np.int32))
+
+        def _stack(arrs):
+            return jnp.asarray(np.stack(arrs) if batched else arrs[0])
+
+        # the per-member constants the scan closes over — leaves gain a
+        # leading batch axis in batched mode and run() vmaps over them
+        consts = {
+            "alive": _stack(alives),
+            "malicious": _stack(mals),
+            "straggler": _stack(strags),
+            "countdown": _stack(countdowns),
+            "use_countdown": _stack([np.asarray(u) for u in use_countdowns]),
+            "attack_mask": jnp.asarray(amask),
+            "attack_fold": jnp.asarray(afold),
+        }
+        if cfg.delivery == "compact":
+            consts["slot_src"] = _stack(slot_srcs)
+            consts["inv_dst"] = _stack(inv_dsts)
+            consts["inv_slot"] = _stack(inv_slots)
+            consts["inv_delay"] = _stack(inv_delays)
+        elif cfg.delivery == "sparse":
+            consts["slot_src"] = _stack(slot_srcs)
+            consts["reach"] = _stack(reaches)
+            consts["delay"] = _stack(delays)
+        else:
+            consts["reach"] = _stack(reaches)
+            consts["delay"] = _stack(delays)
+        self._consts = consts
 
         self._train_fn = _normalize_train_fn(
             train_fn, has_train_data=train_data is not None)
@@ -347,9 +437,6 @@ class LaxSimulator:
         self._test_fn = test_fn
         self._eval_data = eval_data
         self._train_data = train_data
-        self._initial_countdown = (
-            None if spec.initial_countdown is None
-            else jnp.asarray(np.asarray(spec.initial_countdown, np.int32)))
 
     # ------------------------------------------------------------------ pieces
     def _interval(self, key):
@@ -379,10 +466,10 @@ class LaxSimulator:
         batch_sender = masked.argmin(axis=1).astype(jnp.int32)
         return acc_sum, w_sum, buf_cnt, batch_min, batch_sender
 
-    def _deliver_sparse(self, state, due, eval_data):
+    def _deliver_sparse(self, state, due, eval_data, slot_src):
         """Budgeted: gather the (N, budget) static ball slots, eval only
         those via one nested vmap, scatter weights/min back."""
-        slot_src = self._slot_src                        # (dst, slot)
+        # slot_src: this member's (dst, slot) static ball map
         slot_ok = jnp.take_along_axis(due, slot_src, axis=1)
         # gather the in-ball models once: leaves (N, B, ...)
         gathered = jax.tree.map(lambda s: s[slot_src], state["sent"])
@@ -406,14 +493,14 @@ class LaxSimulator:
             slot_src, arg_slot[:, None], axis=1)[:, 0]
         return acc_sum, w_sum, buf_cnt, batch_min, batch_sender
 
-    def _deliver_compact(self, state, slot_ok, eval_data):
+    def _deliver_compact(self, state, slot_ok, eval_data, slot_src):
         """Segment-compacted: gather the tick's due (receiver, slot) pairs
         into a static (W,) work buffer, eval only those items via ONE flat
         vmap, segment-scatter weights / running-min back per receiver.
         ``slot_ok`` is the (N, budget) slot-layout dueness (the compact
-        arrive state IS slot-indexed, so no per-tick re-mapping)."""
+        arrive state IS slot-indexed, so no per-tick re-mapping);
+        ``slot_src`` the member's (dst, slot) static ball map."""
         n, budget = slot_ok.shape[0], self.delivery_budget
-        slot_src = self._slot_src                        # (dst, slot)
         flat_ok = slot_ok.ravel()                        # (n * budget,)
         # due (receiver, slot) indices compacted to the buffer front; the
         # fill value marks unused items (gathers clamp, scatters drop).
@@ -447,43 +534,49 @@ class LaxSimulator:
         batch_sender = jnp.where(batch_sender == n, 0, batch_sender)
         return acc_sum, w_sum, buf_cnt, batch_min, batch_sender
 
-    # --------------------------------------------------------------------- run
-    def run(self, params0=None):
-        """params0: pytree with leading N dim (defaults to the scenario's
-        stacked init). Returns SimLaxResult."""
-        if params0 is None:
-            if self.scenario is None:
-                raise TypeError(
-                    "run() needs params0 when constructed without a scenario")
-            params0 = self.scenario.init_params_stacked()
+    # -------------------------------------------------------------------- scan
+    def _scan(self, params0, key0, consts):
+        """One member's full tick loop as a single ``lax.scan``. The
+        per-member constants arrive via ``consts`` (leaves WITHOUT a batch
+        axis); ``key0`` is the member's base PRNG key. Batched runs vmap
+        this method over the stacked constants/keys, single runs call it
+        directly — one body serves both, so the heap-parity pins validate
+        the exact code the batch executes. Returns the raw scan output
+        ``(final_state_dict, (ticks, N) per-tick accuracy rows)``."""
         cfg = self.cfg
         n = self.topology.num_nodes
         rep_impl = self.rep_impl
-        alive = self._alive_j
-        reach, delay = self._reach, self._delay
-        malicious, straggler = self._malicious, self._straggler
-        attack_groups = self._attack_groups
+        alive = consts["alive"]
+        malicious, straggler = consts["malicious"], consts["straggler"]
+        attack_instances = self._attack_instances
         eval_data = self._eval_data
         train_data = self._train_data
         train_v = jax.vmap(self._train_fn,
                            in_axes=(0, 0, None if train_data is None else 0))
         test_v = jax.vmap(self._test_fn)
-        deliver = {"compact": self._deliver_compact,
-                   "sparse": self._deliver_sparse,
-                   "dense": self._deliver_dense}[cfg.delivery]
+        compact = cfg.delivery == "compact"
+        if compact:
+            def deliver(s, due):
+                return self._deliver_compact(s, due, eval_data,
+                                             consts["slot_src"])
+        elif cfg.delivery == "sparse":
+            def deliver(s, due):
+                return self._deliver_sparse(s, due, eval_data,
+                                            consts["slot_src"])
+        else:
+            def deliver(s, due):
+                return self._deliver_dense(s, due, eval_data)
 
-        key0 = jax.random.PRNGKey(cfg.seed)
         zeros_like_params = jax.tree.map(
             lambda x: jnp.zeros(x.shape, jnp.float32), params0)
-
         # compact keeps the in-flight state in (N, budget) receiver slots
         # (broadcast scatters through the static inverse map); the oracles
         # carry the full (N, N) matrix
-        compact = cfg.delivery == "compact"
-        inv_dst, inv_slot = self._inv_dst, self._inv_slot
-        inv_delay = self._inv_delay
         arrive_shape = (n, self.delivery_budget) if compact else (n, n)
-
+        # heap parity: the FIRST countdown is not straggler-scaled; members
+        # with an explicit countdown sheet select it over the seeded draw
+        drawn = jax.vmap(self._interval)(
+            jax.random.split(jax.random.fold_in(key0, 12345), n))
         init = dict(
             params=params0,
             sent=jax.tree.map(jnp.zeros_like, params0),
@@ -494,12 +587,8 @@ class LaxSimulator:
             buf_cnt=jnp.zeros((n,), jnp.int32),
             min_acc=jnp.full((n,), jnp.inf, jnp.float32),
             min_sender=jnp.zeros((n,), jnp.int32),
-            # heap parity: the FIRST countdown is not straggler-scaled
-            next_train=(self._initial_countdown
-                        if self._initial_countdown is not None
-                        else jax.vmap(self._interval)(
-                            jax.random.split(
-                                jax.random.fold_in(key0, 12345), n))),
+            next_train=jnp.where(consts["use_countdown"],
+                                 consts["countdown"], drawn),
             broadcasts=jnp.zeros((n,), jnp.int32),
             deliveries=jnp.zeros((), jnp.int32),
             max_due=jnp.zeros((), jnp.int32),
@@ -512,12 +601,15 @@ class LaxSimulator:
             # ---- 1. deliveries: models whose tick counter hits t.
             # On a no-delivery tick every update below is a no-op, so the
             # (model-forward-pass-heavy) eval work is skipped entirely via
-            # cond — most ticks between broadcast waves cost nothing.
+            # cond — most ticks between broadcast waves cost nothing. (In a
+            # vmapped batch the cond becomes a select over per-member
+            # predicates: every member pays the eval on ticks where ANY
+            # member delivers — the batch amortizes dispatch, not work.)
             # due is (dst, src) for the oracles, (dst, slot) for compact.
             due = (state["arrive"] == t) & alive[:, None]
             acc_sum, w_sum, buf_cnt, batch_min, batch_sender = jax.lax.cond(
                 due.any(),
-                lambda s: deliver(s, due, eval_data),
+                lambda s: deliver(s, due),
                 lambda s: (s["acc_sum"], s["w_sum"], s["buf_cnt"],
                            jnp.full((n,), jnp.inf, jnp.float32),
                            jnp.zeros((n,), jnp.int32)),
@@ -584,21 +676,35 @@ class LaxSimulator:
                         new, old),
                     trained, committed)
                 outgoing = trained
-                for gi, (attack, ids) in enumerate(attack_groups):
-                    # fold constants: 0 = train keys, attacks.attack_fold(gi)
-                    # per group, 2 = the interval draw below; the heap
-                    # DFLNode draws from the SAME stream (FederationSpec
-                    # .attack_key_fns), making randomized-attack parity
-                    # bitwise
+                for g, attack in enumerate(attack_instances):
+                    # fold constants: 0 = train keys, the member's
+                    # consts["attack_fold"][g] per attack, 2 = the interval
+                    # draw below; the heap DFLNode draws from the SAME
+                    # stream (FederationSpec.attack_key_fns), making
+                    # randomized-attack parity bitwise. The attack runs
+                    # over the group's STATIC attacker ids (union over the
+                    # batch) and the member's mask selects within — keys
+                    # are gathered from the same n-way split, so per-node
+                    # keys/inputs match the legacy gathered form
+                    # bit-for-bit, while the mask/fold arrays let one
+                    # traced body serve a whole batch of heterogeneous
+                    # adversary sheets.
+                    ids = self._attack_ids[g]
                     akeys = jax.random.split(
-                        jax.random.fold_in(key_t, attacks_lib.attack_fold(gi)),
+                        jax.random.fold_in(key_t,
+                                           consts["attack_fold"][g]),
                         n)[ids]
                     bad = jax.vmap(
                         lambda k, tr, cm, a=attack: a.apply(k, tr, cm, t)
-                    )(akeys, jax.tree.map(lambda x: x[ids], trained),
+                    )(akeys,
+                      jax.tree.map(lambda x: x[ids], trained),
                       jax.tree.map(lambda x: x[ids], committed))
+                    mask = consts["attack_mask"][g][ids]
                     outgoing = jax.tree.map(
-                        lambda o, b: o.at[ids].set(b.astype(o.dtype)),
+                        lambda o, b, m=mask: o.at[ids].set(
+                            jnp.where(
+                                m.reshape((-1,) + (1,) * (o.ndim - 1)),
+                                b.astype(o.dtype), o[ids])),
                         outgoing, bad)
                 sent = jax.tree.map(
                     lambda s, o: jnp.where(
@@ -612,12 +718,13 @@ class LaxSimulator:
             if compact:
                 # scatter each training sender's (dst, slot) landing sites;
                 # non-training senders target the dropped row n
-                tgt = jnp.where(trains[:, None], inv_dst, n)
-                arrive = arrive.at[tgt.ravel(), inv_slot.ravel()].set(
-                    (t + inv_delay).ravel(), mode="drop")
+                tgt = jnp.where(trains[:, None], consts["inv_dst"], n)
+                arrive = arrive.at[tgt.ravel(),
+                                   consts["inv_slot"].ravel()].set(
+                    (t + consts["inv_delay"]).ravel(), mode="drop")
             else:
-                sched = trains[None, :] & reach               # (dst, src)
-                arrive = jnp.where(sched, t + delay, arrive)
+                sched = trains[None, :] & consts["reach"]     # (dst, src)
+                arrive = jnp.where(sched, t + consts["delay"], arrive)
             ikeys = jax.random.split(jax.random.fold_in(key_t, 2), n)
             fresh = jax.vmap(self._interval)(ikeys) * straggler
             next_train = jnp.where(trains, fresh, next_train)
@@ -641,27 +748,84 @@ class LaxSimulator:
                 params)
             return new_state, acc_row
 
-        final, acc_by_tick = jax.lax.scan(
+        return jax.lax.scan(
             body, init, jnp.arange(cfg.ticks, dtype=jnp.int32))
-        rec = np.arange(0, cfg.ticks, cfg.record_every)
-        max_due = int(final["max_due"])
-        if cfg.delivery == "compact" and max_due > self.compact_budget:
-            # only reachable with a cfg.compact_budget override below the
-            # exact topology.compaction_budget bound: fail fast rather than
-            # return results whose overflowing ticks dropped receipts
+
+    # --------------------------------------------------------------------- run
+    def run(self, params0=None):
+        """params0: pytree with leading N dim (defaults to the scenario's
+        stacked init; batched runs share it across members). Returns a
+        SimLaxResult — or, when constructed from a BatchedFederationSpec,
+        a list of B per-member SimLaxResults, member ``b`` bitwise
+        identical to the single run of ``specs[b]`` at ``seeds[b]``."""
+        if params0 is None:
+            if self.scenario is None:
+                raise TypeError(
+                    "run() needs params0 when constructed without a scenario")
+            params0 = self.scenario.init_params_stacked()
+        cfg = self.cfg
+
+        if not self._batched:
+            final, acc_by_tick = self._scan(
+                params0, jax.random.PRNGKey(cfg.seed), self._consts)
+            final = jax.tree.map(np.asarray, final)
+            max_due = int(final["max_due"])
+            if cfg.delivery == "compact" and max_due > self.compact_budget:
+                # only reachable with a cfg.compact_budget override below
+                # the exact topology.compaction_budget bound: fail fast
+                # rather than return results whose overflowing ticks
+                # dropped receipts
+                raise RuntimeError(
+                    f"compact delivery overflow: a tick had {max_due} due "
+                    f"deliveries but the work buffer holds "
+                    f"{self.compact_budget} (SimLaxConfig.compact_budget "
+                    f"override; the exact topology.compaction_budget bound "
+                    "for this topology/ttl/interval cannot overflow)")
+            return self._package(final, np.asarray(acc_by_tick),
+                                 self._slot_src_np, {})
+
+        seeds = self.spec.resolved_seeds(cfg.seed)
+        keys = jnp.stack([jax.random.PRNGKey(s) for s in seeds])
+        final, acc_by_tick = jax.vmap(
+            self._scan, in_axes=(None, 0, 0))(params0, keys, self._consts)
+        final = jax.tree.map(np.asarray, final)
+        acc_np = np.asarray(acc_by_tick)
+        max_due = final["max_due"]                           # (B,)
+        if cfg.delivery == "compact" \
+                and (max_due > self.compact_budget).any():
+            offenders = np.flatnonzero(max_due > self.compact_budget)
             raise RuntimeError(
-                f"compact delivery overflow: a tick had {max_due} due "
-                f"deliveries but the work buffer holds "
+                "compact delivery overflow in batched run: federation "
+                f"{[int(b) for b in offenders]} of the batch (size "
+                f"{self.batch_size}) had "
+                f"{[int(m) for m in max_due[offenders]]} due deliveries on "
+                f"one tick but the shared work buffer holds "
                 f"{self.compact_budget} (SimLaxConfig.compact_budget "
-                f"override; the exact topology.compaction_budget bound "
-                "for this topology/ttl/interval cannot overflow)")
+                "override below the batch's max exact "
+                "topology.compaction_budget bound)")
+        out = []
+        for b in range(self.batch_size):
+            out.append(self._package(
+                jax.tree.map(lambda x: x[b], final), acc_np[b],
+                self._slot_src_np[b],
+                {"federation_index": b, "batch_size": self.batch_size,
+                 "seed": int(seeds[b])}))
+        return out
+
+    def _package(self, final, acc_by_tick, slot_src, extra_stats):
+        """Numpy-side result assembly for one member: expand the compact
+        slot state back to the (N, N) oracle layout, slice the recorded
+        accuracy rows, fold the scan counters into the stats dict."""
+        cfg = self.cfg
+        n = self.topology.num_nodes
+        rec = np.arange(0, cfg.ticks, cfg.record_every)
         final_arrive = np.asarray(final["arrive"])
-        if compact:
+        if cfg.delivery == "compact":
             # expand the (N, budget) slot state back to the (N, N) matrix
             # the oracles carry, so final-state parity is one comparison
             dense_arrive = np.full((n, n), _NEVER, np.int32)
             dense_arrive[np.arange(n)[:, None],
-                         np.asarray(self._slot_src)] = final_arrive
+                         np.asarray(slot_src)] = final_arrive
             final_arrive = dense_arrive
         return SimLaxResult(
             params=jax.tree.map(np.asarray, final["params"]),
@@ -676,7 +840,8 @@ class LaxSimulator:
                 "delivery": cfg.delivery,
                 "delivery_budget": self.delivery_budget,
                 "compact_budget": self.compact_budget,
-                "max_tick_deliveries": max_due,
+                "max_tick_deliveries": int(final["max_due"]),
+                **extra_stats,
             },
             final_state={
                 "arrive": final_arrive,

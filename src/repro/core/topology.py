@@ -22,6 +22,23 @@ Supported families (``make(kind, n, ...)``):
 
 Everything here is host-side numpy: graphs are built once, validated, and
 baked into the jitted round as static constants.
+
+Budget invariants (consumed by ``repro.chain.simlax``):
+
+* ``delivery_budget(adj, ttl)`` — max ttl-ball size over receivers: the
+  width of the sparse/compact engines' per-receiver arrival-slot buffers.
+  A delivery can only come from the receiver's ball, so an ``(N, budget)``
+  slot layout can never overflow.
+* ``compaction_budget(adj, ttl, intervals)`` — exact bound on deliveries
+  due on any ONE tick across the whole federation (per-sender max-weight
+  ring-subset DP): the compact engine's flat work-buffer width ``W``.
+* ``batch_budgets(adj, ttl, intervals, dead_sets)`` — the two bounds per
+  federation of a batched (vmapped) run plus their max over the batch;
+  stacked federations share one static slot width / work buffer, so the
+  batch budget is the max over members (see docs/SWEEPS.md).
+
+Both single-run bounds accept a dead-node-masked adjacency; masking only
+shrinks balls/rings, so budgets computed on the masked graph stay safe.
 """
 from __future__ import annotations
 
@@ -232,6 +249,55 @@ def compaction_budget(adj: np.ndarray, ttl: int, intervals, *,
         f[:, d] = rings[:, d - 1] + prev
         best_prefix[:, d] = np.maximum(best_prefix[:, d - 1], f[:, d])
     return int(best_prefix[:, ttl].sum())
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchBudgets:
+    """Static delivery/compaction budgets for a batch of federations that
+    share one topology (but may differ in dead-node sets): the per-member
+    bounds plus their max over the batch. A vmapped multi-federation run
+    carries ONE static ``(N, budget)`` slot layout and ONE ``(W,)`` work
+    buffer for the whole batch, so the shared widths are the maxima; the
+    per-federation columns record how much headroom each member has."""
+
+    delivery: int                             # max over the batch, >= 1
+    compaction: int                           # max over the batch, >= 1
+    per_federation_delivery: tuple            # (B,) ints
+    per_federation_compaction: tuple          # (B,) ints
+
+
+def batch_budgets(adj: np.ndarray, ttl: int, intervals,
+                  dead_sets: Sequence[Sequence[int]], *,
+                  latency: int = 1,
+                  dists: Optional[Sequence[np.ndarray]] = None
+                  ) -> BatchBudgets:
+    """``delivery_budget`` / ``compaction_budget`` over a batch of
+    federations sharing one topology: member ``b`` routes on ``adj`` with
+    ``dead_sets[b]`` masked out (rows AND columns — dead nodes neither
+    send nor forward, exactly the mask ``LaxSimulator`` applies), and the
+    batch budget is the max over members. ``dists`` optionally supplies
+    precomputed ``hop_distance_from_adj`` results per member (the caller
+    usually needs them anyway). Budgets are floored at 1 so downstream
+    array shapes stay non-degenerate even for an all-dead member."""
+    if not len(dead_sets):
+        raise ValueError("batch_budgets needs >= 1 federation")
+    if dists is not None and len(dists) != len(dead_sets):
+        raise ValueError(
+            f"{len(dists)} dists for {len(dead_sets)} federations")
+    per_del, per_comp = [], []
+    for b, dead in enumerate(dead_sets):
+        alive = np.ones((adj.shape[0],), np.bool_)
+        alive[list(dead)] = False
+        masked = adj & alive[None, :] & alive[:, None]
+        dist = dists[b] if dists is not None \
+            else hop_distance_from_adj(masked)
+        per_del.append(max(1, delivery_budget(masked, ttl, dist=dist)))
+        per_comp.append(max(1, compaction_budget(
+            masked, ttl, intervals, latency=latency, dist=dist)))
+    return BatchBudgets(
+        delivery=max(per_del), compaction=max(per_comp),
+        per_federation_delivery=tuple(per_del),
+        per_federation_compaction=tuple(per_comp))
 
 
 def validate_adjacency(adj: np.ndarray) -> None:

@@ -250,6 +250,65 @@ def run_lax_federation(args):
     return 0
 
 
+def run_sweep_cli(args):
+    """--sweep: expand an attack x topology-seed x size x rng-seed grid,
+    batch shape-compatible cells into single vmapped runs sharded over the
+    forced host devices (see repro.chain.sweeps), and append the frontier
+    tables (time-to-accuracy, accuracy-under-attack) to the JSON log."""
+    from repro.chain import simlax, sweeps
+
+    sizes = [int(s) for s in args.sweep_sizes.split(",")]
+    attack_list = [None if a in ("none", "") else a
+                   for a in args.sweep_attacks.split(",")]
+    topo_seeds = [int(s) for s in args.sweep_topology_seeds.split(",")]
+    seeds = [int(s) for s in args.sweep_seeds.split(",")]
+    cells = sweeps.expand_grid(sizes=sizes, attacks=attack_list,
+                               topology_seeds=topo_seeds, seeds=seeds)
+    ticks = args.ticks
+    cfg = simlax.SimLaxConfig(ticks=ticks, train_interval=(8, 16),
+                              ttl=max(1, args.ttl),
+                              record_every=max(1, ticks // 8),
+                              delivery=args.delivery)
+    scenario_name = args.scenario or "toy"
+    n_batches = len(sweeps.plan_batches(cells, max_batch=args.max_batch))
+    print(f"[dryrun] sweep: {len(cells)} federations in {n_batches} "
+          f"batched dispatches over {jax.device_count()} devices")
+    t0 = time.time()
+    outcomes = sweeps.run_sweep(
+        cells, cfg=cfg, scenario=scenario_name,
+        topology_kind=args.topology, degree=args.topology_degree,
+        target_acc=args.target_acc, max_batch=args.max_batch)
+    wall = time.time() - t0
+    tables = sweeps.frontier_tables(outcomes, target_acc=args.target_acc)
+    for row in tables["accuracy_under_attack"]:
+        print(f"[dryrun] sweep frontier: attack={row['attack']:<10} "
+              f"n={row['size']:<5} acc={row['mean_final_honest_acc']:.3f} "
+              f"rep_attacker={row['mean_attacker_reputation']}")
+    print(f"[dryrun] sweep done: {len(cells)} federations in {wall:.1f}s "
+          f"({len(cells) / wall:.2f} federations/s)")
+    record = {
+        "engine": "sweep", "status": "ok", "scenario": scenario_name,
+        "topology": args.topology, "ttl": max(1, args.ttl), "ticks": ticks,
+        "delivery": args.delivery, "sizes": sizes,
+        "attacks": [a or "none" for a in attack_list],
+        "cells": len(cells), "batches": n_batches,
+        "devices": jax.device_count(),
+        "wall_s": round(wall, 1),
+        "federations_per_s": round(len(cells) / wall, 2),
+        "outcomes": [o.row() for o in outcomes],
+        "frontier": tables,
+    }
+    results = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    results.append(record)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1, default=str)
+    return 0
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS)
@@ -298,10 +357,31 @@ def main():
                     help="--dfl lowering: frontier (exact ttl-ball, default)"
                     " or chain (legacy under-covering oracle; fails fast on"
                     " irregular graphs at ttl >= 2)")
+    ap.add_argument("--sweep", action="store_true",
+                    help="run a batched federation sweep (repro.chain.sweeps)"
+                    " instead of a single lax run / mesh lowering")
+    ap.add_argument("--sweep-sizes", default="16,64", metavar="N,N,...",
+                    help="--sweep: comma-separated federation sizes")
+    ap.add_argument("--sweep-attacks", default="none,gaussian,signflip",
+                    metavar="A,A,...",
+                    help="--sweep: comma-separated attack registry names "
+                    "('none' = honest baseline)")
+    ap.add_argument("--sweep-topology-seeds", default="0", metavar="S,S,...",
+                    help="--sweep: topology generator seeds (erdos/smallworld"
+                    " resampling; kregular/ring ignore the seed)")
+    ap.add_argument("--sweep-seeds", default="0,1", metavar="S,S,...",
+                    help="--sweep: engine PRNG seeds per cell")
+    ap.add_argument("--target-acc", type=float, default=0.5,
+                    help="--sweep: accuracy target for time-to-accuracy")
+    ap.add_argument("--max-batch", type=int, default=0,
+                    help="--sweep: cap federations per batched dispatch "
+                    "(0 = unlimited)")
     ap.add_argument("--out", default="experiments/dryrun.json")
     ap.add_argument("--print-hlo", action="store_true")
     args = ap.parse_args()
 
+    if args.sweep:
+        return run_sweep_cli(args)
     if args.engine == "lax":
         return run_lax_federation(args)
 

@@ -1,0 +1,235 @@
+"""Batched federation runs (``BatchedFederationSpec`` -> one vmapped scan)
+vs independent single runs: the contract is BITWISE equality, member by
+member, across heterogeneous attacker sheets, dead sets, stragglers,
+countdowns and per-federation seeds — on every delivery engine. Plus the
+max-over-batch budget semantics and the batched overflow fail-fast naming
+the offending federation index."""
+import numpy as np
+import pytest
+
+from repro.chain import scenarios, simlax
+from repro.chain.attacks import BatchedFederationSpec, FederationSpec
+from repro.core import topology as T
+from repro.core.reputation import IMPL2
+
+
+def _hetero_specs(n):
+    """Eight federations, no two alike: mixed attacks, a dead node, a
+    straggler, an explicit countdown, and honest baselines."""
+    return [
+        FederationSpec.build(n, malicious=(0,), attack="gaussian"),
+        FederationSpec.build(n, malicious={2: "signflip", 5: "gaussian"},
+                             stragglers={7: 2}),
+        FederationSpec.build(n, malicious=(1, 3), attack="scaled",
+                             dead=(n - 1,)),
+        FederationSpec.build(n),
+        FederationSpec.build(n, malicious=(4,), attack="freerider"),
+        FederationSpec.build(n, malicious=(0, 2), attack="intermittent",
+                             initial_countdown=[1 + (3 * i) % 7
+                                                for i in range(n)]),
+        FederationSpec.build(n, dead=(2, 5)),
+        FederationSpec.build(n, malicious=(6,), attack="signflip",
+                             stragglers={1: 3}),
+    ]
+
+
+def _cfg(ticks, seed=0, delivery="compact", interval=(8, 12)):
+    return simlax.SimLaxConfig(ticks=ticks, train_interval=interval,
+                               latency=2, ttl=2, record_every=10,
+                               seed=seed, delivery=delivery)
+
+
+def _assert_result_equal(batched, single, b, engine):
+    import jax
+
+    ctx = f"federation {b}, engine {engine}"
+    for a, c in zip(jax.tree.leaves(batched.params),
+                    jax.tree.leaves(single.params)):
+        assert np.array_equal(a, c), f"params diverged: {ctx}"
+    assert np.array_equal(batched.reputation, single.reputation), ctx
+    assert np.array_equal(batched.acc_history, single.acc_history), ctx
+    assert np.array_equal(batched.record_ticks, single.record_ticks), ctx
+    for a, c in zip(jax.tree.leaves(batched.sent),
+                    jax.tree.leaves(single.sent)):
+        assert np.array_equal(a, c), f"sent diverged: {ctx}"
+    for k in ("broadcasts", "deliveries", "fedavg_rounds"):
+        assert batched.stats[k] == single.stats[k], f"{k}: {ctx}"
+    for k in ("arrive", "w_sum", "buf_cnt", "next_train"):
+        assert np.array_equal(batched.final_state[k],
+                              single.final_state[k]), f"{k}: {ctx}"
+
+
+@pytest.mark.parametrize("engine", simlax.DELIVERY_ENGINES)
+def test_batched_eight_matches_singles_bitwise(engine):
+    """The acceptance pin: one batched run() over 8 heterogeneous specs ==
+    8 independent single runs, bit for bit, on every delivery engine."""
+    n, ticks = 16, 48
+    topo = T.kregular(n, 2)
+    sc = scenarios.toy_scenario(n, dim=8)
+    specs = _hetero_specs(n)
+    seeds = [3 * b + 1 for b in range(len(specs))]
+    bsim = simlax.LaxSimulator(sc, topo,
+                               BatchedFederationSpec.build(specs, seeds),
+                               IMPL2, _cfg(ticks, delivery=engine))
+    results = bsim.run()
+    assert len(results) == len(specs)
+    for b, (spec, seed, bres) in enumerate(zip(specs, seeds, results)):
+        single = simlax.LaxSimulator(
+            sc, topo, spec, IMPL2, _cfg(ticks, seed=seed, delivery=engine)
+        ).run()
+        _assert_result_equal(bres, single, b, engine)
+        assert bres.stats["federation_index"] == b
+        assert bres.stats["batch_size"] == len(specs)
+        assert bres.stats["seed"] == seed
+
+
+def test_batched_seeds_actually_differ():
+    """Same spec at different seeds must NOT produce identical members —
+    guards against the seed axis being silently dropped."""
+    n, ticks = 12, 40
+    topo = T.ring(n)
+    sc = scenarios.toy_scenario(n, dim=8)
+    spec = FederationSpec.build(n, malicious=(0,))
+    res = simlax.LaxSimulator(
+        sc, topo, BatchedFederationSpec.build([spec, spec], [0, 99]),
+        IMPL2, _cfg(ticks)).run()
+    import jax
+    leaves0, leaves1 = (jax.tree.leaves(res[0].params),
+                        jax.tree.leaves(res[1].params))
+    assert any(not np.array_equal(a, c) for a, c in zip(leaves0, leaves1))
+
+
+def test_batched_spec_validation():
+    a, b = FederationSpec.build(8), FederationSpec.build(9)
+    with pytest.raises(ValueError, match="num_nodes"):
+        BatchedFederationSpec.build([a, b])
+    with pytest.raises(ValueError, match="seeds"):
+        BatchedFederationSpec.build([a, a], seeds=[1])
+    with pytest.raises(ValueError):
+        BatchedFederationSpec.build([])
+
+
+def test_batched_spec_size_mismatch_names_member():
+    """Mixed-size members are rejected at spec build (with the member
+    index); a consistent batch against the wrong topology is rejected at
+    simulator build."""
+    with pytest.raises(ValueError, match="member 1"):
+        BatchedFederationSpec.build(
+            [FederationSpec.build(8), FederationSpec.build(12)])
+    topo = T.ring(8)
+    sc = scenarios.toy_scenario(8, dim=4)
+    bspec = BatchedFederationSpec.build(
+        [FederationSpec.build(12), FederationSpec.build(12)])
+    with pytest.raises(ValueError, match="batch member 0"):
+        simlax.LaxSimulator(sc, topo, bspec, IMPL2, _cfg(10))
+
+
+def test_batch_budgets_take_max_over_members():
+    """Shared engine budgets are the max over per-member budgets computed
+    on each member's own dead-masked adjacency."""
+    n, ttl, interval = 12, 2, (8, 12)
+    topo = T.kregular(n, 2)
+    # member 1 kills node 0's neighbors -> smaller balls around the hole
+    dead_sets = [(), (1, n - 1)]
+    bb = T.batch_budgets(topo.adj, ttl, interval, dead_sets)
+    assert bb.delivery == max(bb.per_federation_delivery)
+    assert bb.compaction == max(bb.per_federation_compaction)
+    assert len(bb.per_federation_delivery) == 2
+    # the no-dead member's budgets match the single-federation functions
+    assert bb.per_federation_delivery[0] == T.delivery_budget(topo.adj, ttl)
+    assert bb.per_federation_compaction[0] == \
+        T.compaction_budget(topo.adj, ttl, interval)
+    # killing nodes never grows a ball
+    assert bb.per_federation_delivery[1] <= bb.per_federation_delivery[0]
+    # the simulator exposes the shared (max) budgets
+    sc = scenarios.toy_scenario(n, dim=4)
+    bspec = BatchedFederationSpec.build(
+        [FederationSpec.build(n, dead=d) for d in dead_sets])
+    sim = simlax.LaxSimulator(
+        sc, topo, bspec, IMPL2,
+        simlax.SimLaxConfig(ticks=10, train_interval=interval, ttl=ttl))
+    assert sim.delivery_budget == bb.delivery
+    assert sim.compact_budget == bb.compaction
+
+
+def test_batched_overflow_names_offending_federation():
+    """A compact_budget override too small for ONE member fails fast with
+    that member's index in the error (not a silent receipt drop)."""
+    n = 10
+    topo = T.full(n)
+    sc = scenarios.toy_scenario(n, dim=4)
+    specs = [
+        # member 0: a single staggered broadcaster -> tiny per-tick load
+        FederationSpec.build(n, dead=tuple(range(1, n))),
+        # member 1: everyone broadcasts on the same tick -> n*(n-1) due
+        FederationSpec.build(n, initial_countdown=[2] * n),
+    ]
+    cfg = simlax.SimLaxConfig(ticks=12, train_interval=(8, 8), ttl=1,
+                              record_every=4, compact_budget=2)
+    sim = simlax.LaxSimulator(sc, topo,
+                              BatchedFederationSpec.build(specs), IMPL2, cfg)
+    with pytest.raises(RuntimeError, match=r"compact delivery overflow"
+                       r".*federation \[1\]"):
+        sim.run()
+
+
+def test_batched_hypothesis_matches_singles():
+    """Property sweep: random role sheets + seeds, batched == singles
+    bitwise on the compact engine."""
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    n, ticks = 10, 30
+    topo = T.kregular(n, 2)
+    sc = scenarios.toy_scenario(n, dim=4)
+    names = st.sampled_from(
+        ["gaussian", "signflip", "scaled", "freerider", "intermittent"])
+    spec_st = st.builds(
+        lambda mal, dead: FederationSpec.build(
+            n, malicious=mal, dead=tuple(d for d in dead
+                                         if d not in mal)),
+        st.dictionaries(st.integers(0, n - 1), names, max_size=3),
+        st.sets(st.integers(0, n - 1), max_size=2))
+
+    @settings(max_examples=8, deadline=None)
+    @given(st.lists(spec_st, min_size=2, max_size=3),
+           st.lists(st.integers(0, 2 ** 16), min_size=3, max_size=3))
+    def prop(specs, seeds):
+        seeds = seeds[:len(specs)]
+        res = simlax.LaxSimulator(
+            sc, topo, BatchedFederationSpec.build(specs, seeds),
+            IMPL2, _cfg(ticks)).run()
+        for b, (spec, seed) in enumerate(zip(specs, seeds)):
+            single = simlax.LaxSimulator(
+                sc, topo, spec, IMPL2, _cfg(ticks, seed=seed)).run()
+            _assert_result_equal(res[b], single, b, "compact")
+
+    prop()
+
+
+@pytest.mark.slow
+def test_batched_lenet_smoke_matches_singles():
+    """Real-model (LeNet) batched run == singles, bitwise on params."""
+    import jax
+
+    n, ticks = 4, 12
+    topo = T.full(n)
+    sc = scenarios.lenet_scenario(n, pool=64, eval_size=16, test_size=64,
+                                  train_steps=1, batch=8)
+    specs = [FederationSpec.build(n, malicious=(0,), attack="gaussian"),
+             FederationSpec.build(n)]
+    cfg = simlax.SimLaxConfig(ticks=ticks, train_interval=(4, 4), ttl=1,
+                              record_every=4)
+    res = simlax.LaxSimulator(
+        sc, topo, BatchedFederationSpec.build(specs, [0, 1]),
+        IMPL2, cfg).run()
+    for b, (spec, seed) in enumerate(zip(specs, [0, 1])):
+        single = simlax.LaxSimulator(
+            sc, topo, spec, IMPL2,
+            simlax.SimLaxConfig(ticks=ticks, train_interval=(4, 4), ttl=1,
+                                record_every=4, seed=seed)).run()
+        for a, c in zip(jax.tree.leaves(res[b].params),
+                        jax.tree.leaves(single.params)):
+            assert np.array_equal(a, c), f"lenet federation {b}"
+        assert np.array_equal(res[b].acc_history, single.acc_history)

@@ -43,6 +43,11 @@ def _write(tmp_path, name, data):
     return str(p)
 
 
+# keep main() hermetic in tests: never pick up a real
+# experiments/bench_sweep.json from the working directory
+NOSWEEP = ["--current-sweep", "/nonexistent/bench_sweep.json"]
+
+
 def test_extract_trims_to_gated_metrics():
     out = cr.extract(_bench_json())
     assert out["schedule"]["erdos,n=12,ttl=2,frontier"] == {
@@ -57,9 +62,10 @@ def test_gate_passes_identical_run_and_update_bootstraps(tmp_path):
     cur = _write(tmp_path, "current.json", _bench_json())
     base = str(tmp_path / "baselines" / "bench_gossip.json")
     # no baseline yet -> setup failure telling the operator to --update
-    assert cr.main(["--current", cur, "--baseline", base]) == 2
-    assert cr.main(["--current", cur, "--baseline", base, "--update"]) == 0
-    assert cr.main(["--current", cur, "--baseline", base]) == 0
+    assert cr.main(["--current", cur, "--baseline", base, *NOSWEEP]) == 2
+    assert cr.main(["--current", cur, "--baseline", base, "--update",
+                    *NOSWEEP]) == 0
+    assert cr.main(["--current", cur, "--baseline", base, *NOSWEEP]) == 0
 
 
 @pytest.mark.parametrize("doctor,category", [
@@ -79,7 +85,7 @@ def test_gate_fails_on_seeded_slowdown(tmp_path, doctor, category, capsys):
     doctor(seeded)
     cur = _write(tmp_path, "current.json", seeded)
     base = _write(tmp_path, "baseline.json", cr.extract(base_data))
-    assert cr.main(["--current", cur, "--baseline", base]) == 1
+    assert cr.main(["--current", cur, "--baseline", base, *NOSWEEP]) == 1
     out = capsys.readouterr().out
     assert f"regress,{category}" in out and "FAIL" in out
 
@@ -93,10 +99,10 @@ def test_gate_tolerates_within_threshold_drift(tmp_path):
     drifted["compact_vs_sparse"]["speedup"] = 2.1
     cur = _write(tmp_path, "current.json", drifted)
     base = _write(tmp_path, "baseline.json", cr.extract(base_data))
-    assert cr.main(["--current", cur, "--baseline", base]) == 0
+    assert cr.main(["--current", cur, "--baseline", base, *NOSWEEP]) == 0
     # a tighter --tolerance turns the same wall drift into a failure
     assert cr.main(["--current", cur, "--baseline", base,
-                    "--tolerance", "0.1"]) == 1
+                    "--tolerance", "0.1", *NOSWEEP]) == 1
 
 
 def test_speedup_band_capped_by_acceptance_floor(tmp_path):
@@ -110,11 +116,11 @@ def test_speedup_band_capped_by_acceptance_floor(tmp_path):
     noisy = copy.deepcopy(base_data)
     noisy["compact_vs_sparse"]["speedup"] = 2.2   # < band 2.8, > floor 2.0
     cur = _write(tmp_path, "current.json", noisy)
-    assert cr.main(["--current", cur, "--baseline", base]) == 0
+    assert cr.main(["--current", cur, "--baseline", base, *NOSWEEP]) == 0
     below = copy.deepcopy(base_data)
     below["compact_vs_sparse"]["speedup"] = 1.9   # < band AND < floor
     cur2 = _write(tmp_path, "current2.json", below)
-    assert cr.main(["--current", cur2, "--baseline", base]) == 1
+    assert cr.main(["--current", cur2, "--baseline", base, *NOSWEEP]) == 1
 
 
 def test_gate_skips_mode_mismatched_rows(tmp_path, capsys):
@@ -127,11 +133,48 @@ def test_gate_skips_mode_mismatched_rows(tmp_path, capsys):
                                            compact_s_per_tick=9.9)
     cur = _write(tmp_path, "current.json", other_mode)
     base = _write(tmp_path, "baseline.json", cr.extract(base_data))
-    assert cr.main(["--current", cur, "--baseline", base]) == 0
+    assert cr.main(["--current", cur, "--baseline", base, *NOSWEEP]) == 0
     out = capsys.readouterr().out
     assert "regress,speedup(sparse_vs_dense),skip" in out
     assert "regress,per_tick(compact_vs_sparse.compact_s_per_tick),skip" \
         in out
+
+
+def _sweep_json(speedup=6.0):
+    return {"sweep_batched_vs_loop": {
+        "nodes": 256, "batch": 32, "ticks": 120, "speedup": speedup,
+        "batched_s_per_fed": 0.2, "loop_s_per_fed": 0.2 * speedup,
+        "bitwise_equal": True}}
+
+
+def test_sweep_rows_merge_and_gate(tmp_path, capsys):
+    """bench_sweep.json merges into the same gate: the batched_vs_loop
+    speedup band is capped by the 5x acceptance contract (a lucky 10x
+    baseline must not flake a conforming 6x run), below-contract fails,
+    and a missing sweep JSON is a vanished gated row, not a silent skip."""
+    base_data = _bench_json()
+    cur = _write(tmp_path, "current.json", _bench_json())
+    merged = dict(base_data, **_sweep_json(10.0))   # lucky baseline run
+    base = _write(tmp_path, "baseline.json", cr.extract(merged))
+    # 6.0 < the 7.0 relative band but >= the 5x contract -> pass
+    sw = _write(tmp_path, "sweep.json", _sweep_json(6.0))
+    assert cr.main(["--current", cur, "--current-sweep", sw,
+                    "--baseline", base]) == 0
+    # below the 5x contract -> FAIL
+    sw_bad = _write(tmp_path, "sweep_bad.json", _sweep_json(4.4))
+    assert cr.main(["--current", cur, "--current-sweep", sw_bad,
+                    "--baseline", base]) == 1
+    assert "speedup(sweep_batched_vs_loop)" in capsys.readouterr().out
+    # sweep bench silently dropped from CI -> vanished-row FAIL
+    assert cr.main(["--current", cur, "--baseline", base, *NOSWEEP]) == 1
+    # a different batch geometry is a scale mismatch -> skip, not compare
+    other = _sweep_json(1.0)
+    other["sweep_batched_vs_loop"]["batch"] = 8
+    sw_other = _write(tmp_path, "sweep_other.json", other)
+    assert cr.main(["--current", cur, "--current-sweep", sw_other,
+                    "--baseline", base]) == 0
+    assert "regress,speedup(sweep_batched_vs_loop),skip" in \
+        capsys.readouterr().out
 
 
 def test_self_test_detects_all_categories():

@@ -1,0 +1,150 @@
+"""Sweep orchestrator (`repro.chain.sweeps`): grid expansion, shape-
+compatible batch planning, end-to-end outcomes + frontier tables, and the
+docs-check reference linter that guards docs/ against code drift."""
+import importlib.util
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.chain import simlax, sweeps
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_expand_grid_is_full_product():
+    cells = sweeps.expand_grid(sizes=[8, 16], attacks=[None, "gaussian"],
+                               topology_seeds=[0, 1], seeds=[0, 1, 2])
+    assert len(cells) == 2 * 2 * 2 * 3
+    assert len(set(cells)) == len(cells)       # frozen dataclass, no dups
+    honest = [c for c in cells if c.attack is None]
+    assert all(c.num_malicious() == 0 for c in honest)
+    attacked = [c for c in cells if c.attack == "gaussian"]
+    # malicious_frac floors at one attacker
+    assert all(c.num_malicious() == max(1, int(0.125 * c.size))
+               for c in attacked)
+
+
+def test_plan_batches_groups_by_static_shape():
+    cells = sweeps.expand_grid(sizes=[8, 16], attacks=[None, "gaussian"],
+                               topology_seeds=[0, 1], seeds=[0, 1])
+    batches = sweeps.plan_batches(cells)
+    # one batch per (size, topology_seed): 2 sizes x 2 topo seeds
+    assert len(batches) == 4
+    for batch in batches:
+        keys = {c.batch_key() for c in batch}
+        assert len(keys) == 1                  # shape-compatible members
+        assert len(batch) == 4                 # attacks x seeds ride along
+    # cells are preserved exactly once across batches
+    flat = [c for b in batches for c in b]
+    assert sorted(map(hash, flat)) == sorted(map(hash, cells))
+
+
+def test_plan_batches_max_batch_splits():
+    cells = sweeps.expand_grid(sizes=[8], attacks=[None, "gaussian"],
+                               seeds=[0, 1, 2])
+    batches = sweeps.plan_batches(cells, max_batch=4)
+    assert [len(b) for b in batches] == [4, 2]
+    assert sweeps.plan_batches(cells, max_batch=0) == \
+        sweeps.plan_batches(cells)
+
+
+def test_run_sweep_end_to_end_and_frontier_tables():
+    cells = sweeps.expand_grid(sizes=[12], attacks=[None, "gaussian"],
+                               seeds=[0, 1])
+    cfg = simlax.SimLaxConfig(ticks=30, train_interval=(6, 8), ttl=2,
+                              record_every=6)
+    outcomes = sweeps.run_sweep(cells, cfg=cfg, target_acc=0.4)
+    assert len(outcomes) == len(cells)
+    for o in outcomes:
+        row = o.row()
+        assert 0.0 <= row["final_honest_acc"] <= 1.0
+        assert row["time_to_acc"] is None or row["time_to_acc"] < 30
+        if o.cell.attack is None:
+            assert np.isnan(o.attacker_reputation)
+            assert row["attack"] == "none"
+    tables = sweeps.frontier_tables(outcomes, target_acc=0.4)
+    assert {r["attack"] for r in tables["time_to_accuracy"]} == \
+        {"none", "gaussian"}
+    for r in tables["time_to_accuracy"]:
+        assert r["replicates"] == 2
+        assert 0.0 <= r["reached_frac"] <= 1.0
+        if r["reached_frac"] == 0:
+            assert r["median_ticks_to_acc"] is None
+    for r in tables["accuracy_under_attack"]:
+        assert 0.0 <= r["mean_final_honest_acc"] <= 1.0
+        if r["attack"] == "none":
+            assert r["mean_attacker_reputation"] is None
+
+
+def test_run_sweep_outcomes_match_single_runs():
+    """The orchestrator adds no simulation semantics: a swept cell's
+    metrics equal those of a hand-built single run of the same cell."""
+    from repro.chain.attacks import BatchedFederationSpec  # noqa: F401
+    from repro.core import topology as T
+    from repro.core.reputation import IMPL2
+    from repro.chain import scenarios
+
+    cells = sweeps.expand_grid(sizes=[10], attacks=["signflip"],
+                               seeds=[7])
+    cfg = simlax.SimLaxConfig(ticks=24, train_interval=(6, 8), ttl=2,
+                              record_every=6)
+    (outcome,) = sweeps.run_sweep(cells, cfg=cfg, target_acc=0.4)
+    cell = cells[0]
+    sc = scenarios.toy_scenario(10)
+    topo = T.kregular(10, 2)
+    res = simlax.LaxSimulator(
+        sc, topo, cell.spec(), IMPL2,
+        simlax.SimLaxConfig(ticks=24, train_interval=(6, 8), ttl=2,
+                            record_every=6, seed=7)).run()
+    mal = range(cell.num_malicious())
+    honest = [i for i in range(10) if i not in mal]
+    assert outcome.final_honest_acc == pytest.approx(
+        float(res.acc_history[-1][honest].mean()))
+    assert outcome.attacker_reputation == pytest.approx(
+        float(np.mean([res.mean_reputation(i) for i in mal])))
+
+
+# ------------------------------------------------------------- docs-check
+
+def _load_docs_check():
+    spec = importlib.util.spec_from_file_location(
+        "docs_check", os.path.join(REPO, "tools", "docs_check.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_docs_check_resolves_good_and_flags_bad():
+    dc = _load_docs_check()
+    assert dc.check_dotted("repro.chain.simlax.LaxSimulator") is None
+    assert dc.check_dotted("repro.chain.attacks.BatchedFederationSpec") \
+        is None
+    assert dc.check_dotted("repro.core.topology.batch_budgets") is None
+    assert dc.check_dotted("benchmarks.bench_sweep") is None
+    assert dc.check_dotted("repro.chain.simlax.NoSuchThing") is not None
+    assert dc.check_dotted("repro.no_such_module.x") is not None
+    assert dc.check_path("benchmarks/check_regress.py") is None
+    assert dc.check_path("repro/compat.py") is None          # under src/
+    assert dc.check_path("docs/no_such_page.md") is not None
+
+
+def test_docs_check_flags_broken_page(tmp_path):
+    dc = _load_docs_check()
+    page = tmp_path / "bad.md"
+    page.write_text("see `repro.chain.simlax.Gone` and "
+                    "[link](missing_page.md)\n")
+    fails = dc.check_file(str(page))
+    assert {ref for ref, _ in fails} == {"repro.chain.simlax.Gone",
+                                         "missing_page.md"}
+
+
+def test_docs_check_passes_on_repo_docs():
+    """The committed docs/README must be reference-clean (same invocation
+    as the CI docs-check job)."""
+    proc = subprocess.run([sys.executable,
+                           os.path.join(REPO, "tools", "docs_check.py")],
+                          capture_output=True, text=True, timeout=120)
+    assert proc.returncode == 0, proc.stdout + proc.stderr

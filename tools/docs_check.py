@@ -1,0 +1,185 @@
+"""docs-check: every code reference in the docs must resolve against the
+source tree.
+
+Scans `docs/*.md` and `README.md` for inline-backtick references and
+verifies each against the repo, so the docs pages cannot silently rot as
+code moves:
+
+* dotted names rooted at a known top-level package
+  (`` `repro.chain.simlax.LaxSimulator` ``, `` `benchmarks.bench_sweep` ``)
+  -> the module file must exist and the trailing symbol(s) must be found
+  in its AST (top-level def/class/assignment, or a method/field one level
+  into a class). Resolution is purely static — no imports, so the linter
+  needs neither jax nor a configured PYTHONPATH.
+* path-like references (`` `src/repro/core/` ``,
+  `` `benchmarks/check_regress.py` ``) -> the file or directory must
+  exist (also tried under `src/`). Generated artifacts (`experiments/...`)
+  and glob patterns are skipped.
+* relative markdown link targets (`[x](SWEEPS.md#anchor)`) -> the linked
+  file must exist next to the referencing page.
+
+Anything else in backticks (CLI flags, shell lines, config values, bare
+symbol names without a package root) is out of scope — the linter checks
+references it can resolve *unambiguously*, and stays quiet about prose.
+
+Usage: python tools/docs_check.py  (exit 1 on any broken reference; CI
+runs it as the `docs-check` job).
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# top-level package/dir roots a dotted reference may start from, and where
+# their source lives relative to the repo root
+ROOTS = {"repro": "src", "benchmarks": "", "tools": "", "tests": ""}
+
+DOTTED = re.compile(r"^[A-Za-z_][\w]*(\.[A-Za-z_][\w]*)+$")
+PATHLIKE = re.compile(r"^[\w.\-/]+$")
+INLINE_CODE = re.compile(r"`([^`\n]+)`")
+MD_LINK = re.compile(r"\]\(([^)\s]+)\)")
+
+
+def _module_file(parts):
+    """Longest prefix of `parts` that is a module file/package; returns
+    (path, remainder) or (None, parts)."""
+    root = ROOTS.get(parts[0])
+    if root is None:
+        return None, parts
+    for k in range(len(parts), 0, -1):
+        base = os.path.join(REPO, root, *parts[:k])
+        for cand in (base + ".py", os.path.join(base, "__init__.py")):
+            if os.path.isfile(cand):
+                return cand, parts[k:]
+        if k > 1 and not os.path.isdir(os.path.join(REPO, root, *parts[:k - 1])):
+            continue
+    return None, parts
+
+
+def _top_level_names(tree):
+    names = set()
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            names.add(node.name)
+        elif isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    names.add(t.id)
+        elif isinstance(node, ast.AnnAssign) and isinstance(node.target,
+                                                            ast.Name):
+            names.add(node.target.id)
+        elif isinstance(node, (ast.Import, ast.ImportFrom)):
+            for a in node.names:
+                names.add(a.asname or a.name.split(".")[0])
+    return names
+
+
+def _class_members(tree, cls):
+    for node in tree.body:
+        if isinstance(node, ast.ClassDef) and node.name == cls:
+            return _top_level_names(ast.Module(body=node.body,
+                                               type_ignores=[]))
+    return None
+
+
+def check_dotted(ref: str):
+    """None if ok, else a failure message."""
+    parts = ref.split(".")
+    mod_file, rest = _module_file(parts)
+    if mod_file is None:
+        return f"no module file for {ref!r}"
+    if not rest:
+        return None
+    tree = ast.parse(open(mod_file).read())
+    top = _top_level_names(tree)
+    if rest[0] not in top:
+        return f"{rest[0]!r} not found at top level of {mod_file}"
+    if len(rest) >= 2:
+        members = _class_members(tree, rest[0])
+        if members is not None and rest[1] not in members:
+            return f"{rest[1]!r} not a member of class {rest[0]} " \
+                   f"in {mod_file}"
+        # rest[0] is a function/value: deeper attrs are runtime objects
+        # (e.g. dataclass instance fields) — out of static scope
+    return None
+
+
+def check_path(ref: str):
+    if "*" in ref or ref.startswith("experiments/"):
+        return None
+    clean = ref.rstrip("/")
+    for cand in (os.path.join(REPO, clean), os.path.join(REPO, "src", clean)):
+        if os.path.exists(cand):
+            return None
+    return f"path {ref!r} does not exist (also tried under src/)"
+
+
+def _strip_fences(text: str) -> str:
+    out, fenced = [], False
+    for line in text.splitlines():
+        if line.lstrip().startswith("```"):
+            fenced = not fenced
+            continue
+        if not fenced:
+            out.append(line)
+    return "\n".join(out)
+
+
+def check_file(path: str):
+    fails = []
+    raw = open(path).read()
+    text = _strip_fences(raw)
+    for ref in INLINE_CODE.findall(text):
+        ref = ref.strip()
+        if DOTTED.match(ref) and ref.split(".")[0] in ROOTS:
+            err = check_dotted(ref)
+        elif PATHLIKE.match(ref) and ("/" in ref or ref.endswith(
+                (".py", ".md", ".yml", ".json", ".txt"))):
+            err = check_path(ref)
+        else:
+            continue
+        if err:
+            fails.append((ref, err))
+    for target in MD_LINK.findall(text):
+        if target.startswith(("http://", "https://", "#", "../")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        if not os.path.exists(os.path.join(os.path.dirname(path), rel)):
+            fails.append((target, f"linked file {rel!r} missing"))
+    return fails
+
+
+def main() -> int:
+    pages = [os.path.join(REPO, "README.md")]
+    docs_dir = os.path.join(REPO, "docs")
+    if os.path.isdir(docs_dir):
+        pages += sorted(os.path.join(docs_dir, f)
+                        for f in os.listdir(docs_dir) if f.endswith(".md"))
+    n_checked, bad = 0, 0
+    for page in pages:
+        fails = check_file(page)
+        rel = os.path.relpath(page, REPO)
+        n_checked += 1
+        if fails:
+            bad += 1
+            for ref, err in fails:
+                print(f"docs-check,FAIL,{rel},{ref},{err}")
+        else:
+            print(f"docs-check,ok,{rel}")
+    if bad:
+        print(f"docs-check,SUMMARY,FAIL,{bad}/{n_checked} pages with "
+              "broken references")
+        return 1
+    print(f"docs-check,SUMMARY,ok,{n_checked} pages clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
