@@ -21,8 +21,10 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.chain import scenarios, simlax
+from repro.core import compression
 from repro.configs import smoke_config
 from repro.core import dfl as dfl_lib
 from repro.core import gossip as gossip_lib
@@ -172,6 +174,70 @@ def compact_vs_sparse(quick: bool = False):
     return out
 
 
+def int8_vs_fp32(*, quick: bool, hlo_fp32: int, hlo_int8: int,
+                 model_ratio: float):
+    """The accuracy/robustness/bandwidth trade-off of int8 wire payloads,
+    per attack x topology (`gossip,int8_vs_fp32`): does quantization noise
+    mask small-sigma gaussian poisoning? does reputation still isolate
+    signflip? Bytes come from two independent derivations that must agree:
+    the HLO of the production gossip round (collective-permute bytes, the
+    gated pair) and the dtype-derived payload model
+    (`repro.core.compression.payload_bytes`, what the simulators record) —
+    if XLA ever hoists the dequant convert above the ppermute, the HLO
+    ratio snaps back to ~1.0 while the model ratio stays ~0.26, and the
+    check_regress bytes gate fails the build."""
+    from repro.chain.attacks import FederationSpec
+    from repro.core.reputation import get as get_rep
+
+    ratio = round(hlo_int8 / max(hlo_fp32, 1), 4)
+    out = {
+        "permute_bytes_fp32": hlo_fp32,
+        "permute_bytes_int8": hlo_int8,
+        "permute_bytes_ratio": ratio,
+        "model_bytes_ratio": round(model_ratio, 4),
+        "sim_rows": [],
+    }
+    print(f"gossip,int8_vs_fp32,permute_bytes,fp32={hlo_fp32:.3e},"
+          f"int8={hlo_int8:.3e},ratio={ratio},model_ratio={model_ratio:.4f}")
+
+    n, ticks, interval = 10, 80 if quick else 160, 8
+    mal = (0,)
+    for attack, akw in (("gaussian", {}), ("signflip", {})):
+        for topo_name in ("kregular", "full"):
+            topo = (topology_lib.kregular(n, 2) if topo_name == "kregular"
+                    else topology_lib.full(n))
+            sc = scenarios.toy_scenario(n, malicious=mal)
+            spec = FederationSpec.build(
+                n, malicious=mal, attack=attack,
+                initial_countdown=[1 + (3 * i) % interval for i in range(n)])
+            for compress in (None, "int8"):
+                cfg = simlax.SimLaxConfig(
+                    ticks=ticks, train_interval=(interval, interval),
+                    latency=1, ttl=2, record_every=max(1, ticks // 8),
+                    seed=0, compress=compress)
+                res = simlax.LaxSimulator(sc, topo, spec, get_rep("impl2"),
+                                          cfg).run()
+                honest = [i for i in range(n) if i not in mal]
+                row = {
+                    "attack": attack, "topology": topo_name, "nodes": n,
+                    "ticks": ticks, "ttl": cfg.ttl, "compress": compress,
+                    "honest_acc": round(
+                        float(res.acc_history[-1][honest].mean()), 4),
+                    "rep_attacker": round(res.mean_reputation(0), 4),
+                    "rep_honest": round(float(np.mean(
+                        [res.mean_reputation(i) for i in honest])), 4),
+                    "broadcast_bytes": res.stats["broadcast_bytes"],
+                    "wire_bytes": res.stats["wire_bytes"],
+                }
+                out["sim_rows"].append(row)
+                print(f"gossip,int8_vs_fp32,{attack},{topo_name},"
+                      f"compress={compress},acc={row['honest_acc']},"
+                      f"rep_mal={row['rep_attacker']},"
+                      f"rep_hon={row['rep_honest']},"
+                      f"wire_bytes={row['wire_bytes']:.3e}")
+    return out
+
+
 def main(quick: bool = False):
     out = {}
     F = min(4, jax.device_count())
@@ -253,6 +319,11 @@ def main(quick: bool = False):
     fp32_grad_bytes = params_n * 4
     dfl_fp32 = rows[0]["permute_bytes_per_round"]
     dfl_int8 = rows[1]["permute_bytes_per_round"]
+    # dtype-derived payload model: the predicted int8/fp32 wire ratio from
+    # shapes alone — the independent cross-check on the HLO-measured pair
+    model_ratio = (compression.payload_bytes(fed_state["params"], "int8")
+                   / max(compression.payload_bytes(fed_state["params"], None),
+                         1))
     out = {
         "params": int(params_n),
         "rows": rows,
@@ -260,6 +331,9 @@ def main(quick: bool = False):
         "sync_dp_bytes_per_round_H4": fp32_grad_bytes * H,
         "reduction_fp32": round(fp32_grad_bytes * H / max(dfl_fp32, 1), 2),
         "reduction_int8": round(fp32_grad_bytes * H / max(dfl_int8, 1), 2),
+        "int8_vs_fp32": int8_vs_fp32(quick=quick, hlo_fp32=dfl_fp32,
+                                     hlo_int8=dfl_int8,
+                                     model_ratio=model_ratio),
         "simulator": simulator_speedup(quick=quick),
         "sparse_vs_dense": sparse_vs_dense(quick=quick),
         "compact_vs_sparse": compact_vs_sparse(quick=quick),

@@ -12,7 +12,12 @@ benchmarks/baselines/ and FAILS the build on:
 * an engine speedup ratio (`simulator`, `sparse_vs_dense`,
   `compact_vs_sparse`, `sweep_batched_vs_loop`) falling more than
   --tolerance (default 30%) below its baseline;
-* a per-tick wall time rising more than --tolerance above its baseline.
+* a per-tick wall time rising more than --tolerance above its baseline;
+* the int8 gossip row's permute bytes exceeding BYTES_RATIO_MAX (0.3x) of
+  the fp32 row — HLO-derived and deterministic, so no tolerance band: the
+  known failure mode is XLA hoisting the dequant convert above the
+  ppermute, which silently restores fp32 traffic (ratio ~1.0) while every
+  numerical test keeps passing.
 
 Baseline-refresh workflow (a legitimate perf change or a runner-class
 change makes wall baselines stale):
@@ -73,6 +78,10 @@ ACCEPTANCE_FLOORS = {"simulator": 10.0,       # >=10x heap at >=256 nodes
                      # >=5x federations/sec, one vmapped dispatch vs a
                      # Python loop of single runs (batch=32, N=256 toy)
                      "sweep_batched_vs_loop": 5.0}
+# int8 wire payloads must move <= this fraction of the fp32 row's permute
+# bytes (int8 elements + bf16 block scales land near 0.26x; ~1.0 means the
+# dequant was hoisted above the ppermute and fp32 went back on the wire)
+BYTES_RATIO_MAX = 0.3
 
 
 def _scale_key(row: dict):
@@ -89,7 +98,15 @@ def _scale_key(row: dict):
 def extract(data: dict) -> dict:
     """Trim a bench_gossip JSON down to the gated metrics — the committed
     baseline stays small, deterministic-first, and reviewable."""
-    out = {"schedule": {}, "speedups": {}, "times": {}, "scale": {}}
+    out = {"schedule": {}, "speedups": {}, "times": {}, "scale": {},
+           "bytes": {}}
+    row = data.get("int8_vs_fp32")
+    if row:
+        out["bytes"]["int8_vs_fp32"] = {
+            "permute_bytes_fp32": row["permute_bytes_fp32"],
+            "permute_bytes_int8": row["permute_bytes_int8"],
+            "ratio": row["permute_bytes_ratio"],
+        }
     for row in data.get("frontier_vs_chain", []):
         key = f"{row['kind']},n={row['nodes']},ttl={row['ttl']}," \
               f"{row['schedule']}"
@@ -144,6 +161,25 @@ def compare(current: dict, baseline: dict, tolerance: float) -> list:
         else:
             line(f"schedule({key})", "ok",
                  f"collectives={cur['num_collectives']}")
+
+    for key, base in baseline.get("bytes", {}).items():
+        cur = current.get("bytes", {}).get(key)
+        if cur is None:
+            line(f"bytes({key})", "FAIL",
+                 "baseline row missing from current run — removed a bench "
+                 "line? refresh baselines (--update) if intentional")
+            continue
+        # deterministic (HLO-derived): the contract IS the bound, no
+        # tolerance band — a ratio drifting toward 1.0 means the dequant
+        # convert was hoisted above the ppermute and fp32 traffic is back
+        if cur["ratio"] > BYTES_RATIO_MAX:
+            line(f"bytes({key})", "FAIL",
+                 f"int8/fp32 permute-bytes ratio {cur['ratio']} > "
+                 f"{BYTES_RATIO_MAX} — dequant hoisted above the ppermute? "
+                 "(fp32 traffic restored on the wire)")
+        else:
+            line(f"bytes({key})", "ok",
+                 f"ratio={cur['ratio']} (max {BYTES_RATIO_MAX})")
 
     def scale_mismatch(sec):
         return current.get("scale", {}).get(sec) != \
@@ -207,6 +243,9 @@ def self_test(tolerance: float) -> int:
         "scale": {"compact_vs_sparse": [2048, [24, 240]],
                   "sweep_batched_vs_loop": [256, [32, 120]]},
         "times": {"compact_vs_sparse.compact_s_per_tick": 0.01},
+        "bytes": {"int8_vs_fp32": {"permute_bytes_fp32": 4.0e9,
+                                   "permute_bytes_int8": 1.04e9,
+                                   "ratio": 0.26}},
     }
     clean = copy.deepcopy(baseline)
     assert compare(clean, baseline, tolerance) == [], \
@@ -220,8 +259,13 @@ def self_test(tolerance: float) -> int:
     seeded["speedups"]["sweep_batched_vs_loop"] = 3.5
     seeded["times"]["compact_vs_sparse.compact_s_per_tick"] = \
         baseline["times"]["compact_vs_sparse.compact_s_per_tick"] * 2.0
+    # the known bytes regression: XLA hoists the dequant convert above the
+    # ppermute and fp32 goes back on the wire — ratio snaps to ~1.0
+    seeded["bytes"]["int8_vs_fp32"]["permute_bytes_int8"] = \
+        seeded["bytes"]["int8_vs_fp32"]["permute_bytes_fp32"]
+    seeded["bytes"]["int8_vs_fp32"]["ratio"] = 1.0
     fails = compare(seeded, baseline, tolerance)
-    missing = [cat for cat in ("schedule", "speedup", "per_tick")
+    missing = [cat for cat in ("schedule", "speedup", "per_tick", "bytes")
                if not any(f.startswith(cat) for f in fails)]
     if not any(f.startswith("speedup(sweep_batched_vs_loop)")
                for f in fails):

@@ -49,7 +49,8 @@ class DFLNode:
                  malicious: bool = False, attack=None,
                  rng: Optional[jax.Array] = None,
                  attack_key_fn: Optional[Callable] = None,
-                 use_kernel: bool = False):
+                 use_kernel: bool = False,
+                 compress: Optional[str] = None):
         self.name = name
         self.kp = crypto.generate_keypair()
         self.info = NodeInformation.from_keypair(self.kp)
@@ -74,6 +75,16 @@ class DFLNode:
         self.attack_key_fn = attack_key_fn
         self.last_broadcast = None      # most recent train_local output
         self.use_kernel = use_kernel
+        if compress not in (None, "int8"):
+            raise ValueError(f"unknown compress mode {compress!r}")
+        self.compress = compress
+        # ^ "int8": broadcasts ship int8-quantized (repro.core.compression,
+        #   the lax engine's exact calls — keeps heap<->lax event streams
+        #   bitwise-comparable under compression). The round-trip happens
+        #   ONCE here at the sender; the heap Simulator hands every
+        #   receiver the same params object, so single-origin quantization
+        #   holds structurally. Committed self.params stay full precision;
+        #   attacks apply BEFORE quantization.
 
         self.reputation: Dict[str, float] = {}   # address -> [0,1], local only
         self.buffer: List[BufferedModel] = []
@@ -84,6 +95,15 @@ class DFLNode:
         self.reputation_history: List[tuple] = []
 
     # ------------------------------------------------------------ local train
+    def _to_wire(self, params):
+        """Apply the configured wire compression to an outgoing broadcast
+        (post-attack, pre-send — the quantized payload is what every
+        receiver evaluates and buffers)."""
+        if self.compress == "int8":
+            from repro.core import compression
+            return compression.roundtrip_tree(params)
+        return params
+
     def train_local(self, now: float):
         self.rng, sub = jax.random.split(self.rng)
         if self.attack is not None:
@@ -96,12 +116,13 @@ class DFLNode:
             else:
                 k_train, k_attack = jax.random.split(sub)
             trained, _ = self.train_fn(self.params, k_train)
-            out = self.attack.apply(k_attack, trained, self.params, now)
+            out = self._to_wire(
+                self.attack.apply(k_attack, trained, self.params, now))
             self.last_broadcast = out
             return out, {}
         self.params, metrics = self.train_fn(self.params, sub)
-        self.last_broadcast = self.params
-        return self.params, metrics
+        self.last_broadcast = self._to_wire(self.params)
+        return self.last_broadcast, metrics
 
     # ---------------------------------------------------- transactions (Fig 1)
     def create_transaction(self, model_params, now: float) -> Transaction:

@@ -118,7 +118,8 @@ def names() -> tuple:
 def make_heap_nodes(scenario: Scenario, *, rep_impl: ReputationImpl,
                     ttl: int, seed: int = 0,
                     spec: Optional[FederationSpec] = None,
-                    sim_seed: Optional[int] = None) -> List[DFLNode]:
+                    sim_seed: Optional[int] = None,
+                    compress: Optional[str] = None) -> List[DFLNode]:
     """Bind ANY Scenario to heap-`Simulator` nodes: slice the stacked
     params/data per node and wrap the uniform jax callbacks into the node's
     (params, key) -> (params, metrics) / params -> float conventions.
@@ -126,7 +127,10 @@ def make_heap_nodes(scenario: Scenario, *, rep_impl: ReputationImpl,
     ``malicious`` ids with the default gaussian attack). ``sim_seed`` (the
     lax engine's ``SimLaxConfig.seed``) wires each attacker to the scan's
     fold_in(tick) poison stream so randomized attacks draw bit-identical
-    keys on both engines; None keeps the legacy per-node rng split."""
+    keys on both engines; None keeps the legacy per-node rng split.
+    ``compress`` is the wire quantization mode (``SimLaxConfig.compress``);
+    nodes then broadcast int8 round-tripped payloads via the same
+    ``repro.core.compression`` calls as the lax scan."""
     n = scenario.num_nodes
     if spec is None:
         spec = FederationSpec.build(
@@ -156,7 +160,7 @@ def make_heap_nodes(scenario: Scenario, *, rep_impl: ReputationImpl,
             name=f"n{i}", model_structure=type(scenario).__name__.lower(),
             params=params_i, train_fn=train_fn, eval_fn=eval_fn,
             rep_impl=rep_impl, ttl=ttl, attack=spec.attack_for(i),
-            attack_key_fn=key_fns.get(i),
+            attack_key_fn=key_fns.get(i), compress=compress,
             rng=jax.random.PRNGKey(seed * 1000 + i)))
     return nodes
 
@@ -180,7 +184,8 @@ def make_heap_simulator(scenario: Scenario, topology, spec: FederationSpec,
     The scalar per-hop latency becomes the heap's (lo, hi) = (l, l)."""
     from repro.chain.network import SimConfig, Simulator
     nodes = make_heap_nodes(scenario, rep_impl=rep_impl, ttl=cfg.ttl,
-                            seed=seed, spec=spec, sim_seed=cfg.seed)
+                            seed=seed, spec=spec, sim_seed=cfg.seed,
+                            compress=getattr(cfg, "compress", None))
     names_ = [nd.name for nd in nodes]
     sim = Simulator(
         nodes, topology.as_name_dict(names_), heap_test_fn(scenario),
@@ -372,7 +377,8 @@ LENET_PAPER_HP = dict(alpha=1.0, pool=384, eval_size=16, test_size=256,
 
 
 def lenet_paper_setup(n: int = 10, *, ticks: int = 108, train_steps: int = 8,
-                      seed: int = 0, delivery: str = "compact"):
+                      seed: int = 0, delivery: str = "compact",
+                      compress: Optional[str] = None):
     """The calibrated §VI-D acceptance recipe, shared by
     tests/test_simlax.py::test_lenet_poisoned_federation_reaches_paper_accuracy
     and benchmarks/bench_malicious.py so they cannot drift apart: 20%
@@ -390,7 +396,7 @@ def lenet_paper_setup(n: int = 10, *, ticks: int = 108, train_steps: int = 8,
     topo = topology_lib.kregular(n, 2)
     cfg = simlax.SimLaxConfig(ticks=ticks, train_interval=(6, 6), latency=1,
                               ttl=2, record_every=12, seed=seed,
-                              delivery=delivery)
+                              delivery=delivery, compress=compress)
     countdown = [3 + (5 * i) % 6 for i in range(n)]
     spec = FederationSpec.build(n, malicious=mal,
                                 initial_countdown=countdown)

@@ -110,6 +110,7 @@ import numpy as np
 
 from repro.chain import attacks as attacks_lib
 from repro.chain.attacks import BatchedFederationSpec, FederationSpec
+from repro.core import compression
 from repro.core import topology as topology_lib
 from repro.core.reputation import ReputationImpl
 
@@ -117,6 +118,7 @@ _NEVER = np.iinfo(np.int32).max
 _EPS = 1e-12
 
 DELIVERY_ENGINES = ("compact", "sparse", "dense")
+COMPRESS_MODES = (None, "int8")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -133,6 +135,15 @@ class SimLaxConfig:
     #   exact topology.compaction_budget bound). A smaller buffer cuts the
     #   per-tick eval bill when broadcasts are known to be staggered; a
     #   tick whose due deliveries exceed it makes run() raise.
+    compress: Optional[str] = None    # None | "int8" wire quantization
+    # ^ "int8": every broadcast payload is quantize->dequantize round-
+    #   tripped ONCE at the sender before entering the in-flight state
+    #   (repro.core.compression — the same math the production gossip
+    #   round ships over ICI), so all receivers of that broadcast see the
+    #   identical reconstruction, across all three delivery engines.
+    #   Attacks apply BEFORE quantization: the attacker ships a quantized
+    #   poisoned model, as on the real wire. Committed params stay full
+    #   precision — only the wire payload is lossy.
 
 
 def _normalize_train_fn(train_fn: Callable, *, has_train_data: bool) -> Callable:
@@ -276,6 +287,10 @@ class LaxSimulator:
             raise ValueError(
                 f"unknown delivery engine {cfg.delivery!r}; "
                 f"choose from {DELIVERY_ENGINES}")
+        if cfg.compress not in COMPRESS_MODES:
+            raise ValueError(
+                f"unknown compress mode {cfg.compress!r}; "
+                f"choose from {COMPRESS_MODES}")
         # strict <: deliveries are processed before same-tick re-broadcast,
         # so interval == ttl*latency still delivers every hop-ttl arrival
         if cfg.train_interval[0] < cfg.ttl * cfg.latency:
@@ -706,6 +721,14 @@ class LaxSimulator:
                                 m.reshape((-1,) + (1,) * (o.ndim - 1)),
                                 b.astype(o.dtype), o[ids])),
                         outgoing, bad)
+                if cfg.compress == "int8":
+                    # wire model: the sender quantizes its (post-attack)
+                    # broadcast ONCE; every receiver sees the identical
+                    # reconstruction. quantize_last_axis blocks only the
+                    # last axis, so this stacked round-trip is bitwise the
+                    # per-node one — the heap DFLNode applies the same
+                    # calls per node and stays event-stream comparable.
+                    outgoing = compression.roundtrip_tree(outgoing)
                 sent = jax.tree.map(
                     lambda s, o: jnp.where(
                         trains.reshape((-1,) + (1,) * (s.ndim - 1)), o, s),
@@ -827,6 +850,14 @@ class LaxSimulator:
             dense_arrive[np.arange(n)[:, None],
                          np.asarray(slot_src)] = final_arrive
             final_arrive = dense_arrive
+        # dtype-derived wire model: one broadcast's bytes under the
+        # configured compression (per-node payload = the (N, ...) sent tree
+        # minus its leading axis); each delivery moves one copy
+        broadcast_bytes = compression.payload_bytes(
+            jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
+                final["sent"]),
+            cfg.compress)
         return SimLaxResult(
             params=jax.tree.map(np.asarray, final["params"]),
             reputation=np.asarray(final["rep"]),
@@ -841,6 +872,9 @@ class LaxSimulator:
                 "delivery_budget": self.delivery_budget,
                 "compact_budget": self.compact_budget,
                 "max_tick_deliveries": int(final["max_due"]),
+                "compress": cfg.compress,
+                "broadcast_bytes": broadcast_bytes,
+                "wire_bytes": broadcast_bytes * int(final["deliveries"]),
                 **extra_stats,
             },
             final_state={

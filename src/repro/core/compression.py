@@ -5,6 +5,18 @@ during the gossip round: 4x fewer link bytes than fp32 master weights
 (2x vs bf16) at <0.4% relative error per tensor. The Pallas kernel pair in
 repro.kernels.quantize implements the same math for the TPU deployment path;
 this module is the jnp reference used inside traced gossip rounds.
+
+Scale-dtype contract (shared with the kernel pair, pinned bitwise by
+tests/test_compression.py): per-block scales ship as bfloat16 and are
+rounded through bf16 BEFORE q is computed, so the exact scale the
+receiver multiplies by is the one the sender divided by. bf16 keeps the
+full f32 exponent range, so the SCALE_EPS clamp stays representable and
+tiny-magnitude leaves keep their ~0.4% relative error; fp16 scales (the
+original wire format) flushed any scale under ~6e-8 to zero — nonzero
+int8 payloads that dequantized to zeros — and its subnormal granularity
+made the rounded scale undershoot by up to 33%, silently clipping q. The
+kernel stores scales as fp32 for lane alignment but the stored value is
+bit-identical to this module's bf16 scale upcast.
 """
 from __future__ import annotations
 
@@ -13,22 +25,43 @@ import jax.numpy as jnp
 
 BLOCK = 256  # quantization block (elements)
 
+# Zero-block guard. Comfortably inside bf16's normal range (min normal
+# ~1.2e-38), so unlike the old fp16 wire format the clamp survives the
+# cast and all-zero blocks dequantize to exact zeros via q == 0.
+SCALE_EPS = 1e-12
+
 
 def _pad_len(n: int, b: int = BLOCK) -> int:
     return (b - n % b) % b
 
 
+def _block_scale(blocks):
+    """absmax blocks (..., b) -> bf16 wire scale and its exact fp32 value.
+
+    The bf16 round-through happens before quantization so sender (divide)
+    and receiver (multiply) use the identical grid; without it, q computed
+    against the unrounded fp32 scale dequantizes against a different
+    number. Round-to-nearest bf16 undershoots by at most 2^-9 relative,
+    so x/scale tops out at ~127.25 and the clip costs < scale/4.
+    """
+    absmax = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True)
+    scale16 = jnp.maximum(absmax / 127.0, SCALE_EPS).astype(jnp.bfloat16)
+    return scale16, scale16.astype(jnp.float32)
+
+
 def quantize_tensor(x, block: int = BLOCK):
-    """x (any shape) -> (q int8 (nblocks, block), scales fp16 (nblocks,))."""
+    """x (any shape) -> (q int8 (nblocks, block), scales bf16 (nblocks,)).
+
+    Size-0 inputs produce 0 blocks: q (0, block), scales (0,).
+    """
     flat = x.astype(jnp.float32).reshape(-1)
     pad = _pad_len(flat.size, block)
     if pad:
         flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)])
     blocks = flat.reshape(-1, block)
-    absmax = jnp.max(jnp.abs(blocks), axis=1, keepdims=True)
-    scale = jnp.maximum(absmax / 127.0, 1e-12)
+    scale16, scale = _block_scale(blocks)
     q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
-    return q, scale[:, 0].astype(jnp.float16)
+    return q, scale16[:, 0]
 
 
 def dequantize_tensor(q, scales, shape, dtype):
@@ -39,29 +72,46 @@ def dequantize_tensor(q, scales, shape, dtype):
     return flat[:n].reshape(shape).astype(dtype)
 
 
+def _last_axis_blocking(shape, block: int = BLOCK):
+    """shape -> (lead, last, b, nblocks) for the last-axis scheme.
+
+    0-d arrays quantize as one 1-element block; zero-size last axes carry
+    zero blocks (empty in, empty out).
+    """
+    lead = tuple(shape[:-1])
+    last = shape[-1] if len(shape) else 1
+    b = min(block, max(last, 1))
+    nblocks = -(-last // b)  # ceil; 0 when last == 0
+    return lead, last, b, nblocks
+
+
 def quantize_last_axis(x, block: int = BLOCK):
     """Shape-preserving variant: blocks along the LAST axis only, so leading
     (often mesh-sharded) dims keep their sharding — a flat reshape would
     force an all-gather of every leaf before quantization (measured: it
-    silently 12x'd the gossip permute bytes)."""
-    lead = x.shape[:-1]
-    last = x.shape[-1] if x.ndim else 1
-    b = min(block, max(last, 1))
-    pad = (-last) % b
+    silently 12x'd the gossip permute bytes).
+
+    Edge cases are defined, not accidental: a 0-d leaf is one 1-element
+    block (q (1, 1), scales (1,)); a zero-size last axis yields zero
+    blocks (q (*lead, 0, 1), scales (*lead, 0)).
+    """
+    lead, last, b, nblocks = _last_axis_blocking(x.shape, block)
     xf = x.astype(jnp.float32).reshape(*lead, last)
+    pad = nblocks * b - last
     if pad:
         xf = jnp.pad(xf, [(0, 0)] * len(lead) + [(0, pad)])
-    blocks = xf.reshape(*lead, (last + pad) // b, b)
-    absmax = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True)
-    scale = jnp.maximum(absmax / 127.0, 1e-12)
+    blocks = xf.reshape(*lead, nblocks, b)
+    scale16, scale = _block_scale(blocks)
     q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
-    return q, scale[..., 0].astype(jnp.float16)
+    return q, scale16[..., 0]
 
 
 def dequantize_last_axis(q, scales, shape, dtype):
+    lead, last, b, nblocks = _last_axis_blocking(shape, q.shape[-1])
+    if last == 0:
+        return jnp.zeros(shape, dtype)
     x = q.astype(jnp.float32) * scales.astype(jnp.float32)[..., None]
-    last = shape[-1] if len(shape) else 1
-    x = x.reshape(*shape[:-1], -1)[..., :last]
+    x = x.reshape(*lead, nblocks * b)[..., :last]
     return x.reshape(shape).astype(dtype)
 
 
@@ -78,4 +128,46 @@ def dequantize_tree(qt, spec):
         qt, spec,
         is_leaf=lambda x: (isinstance(x, tuple) and len(x) == 2
                            and hasattr(x[0], "dtype")),
+    )
+
+
+def roundtrip_tree(tree, block: int = BLOCK):
+    """Quantize + immediately dequantize every leaf back to its own dtype.
+
+    This is the simulators' wire model: the sender quantizes its broadcast
+    once, every receiver sees the identical reconstruction. Because
+    quantize_last_axis blocks only the last axis, applying this to a
+    stacked (N, ...) pytree is bitwise identical to applying it per node —
+    which is what keeps heap and lax event streams comparable bit for bit.
+    """
+    qt, spec = quantize_tree(tree, block)
+    return dequantize_tree(qt, spec)
+
+
+def leaf_wire_bytes(shape, dtype, compress) -> int:
+    """Bytes on the wire for one leaf under a compression mode.
+
+    None ships the raw dtype; "int8" ships the padded int8 blocks plus one
+    bf16 scale per block (the exact arrays quantize_last_axis emits).
+    """
+    size = 1
+    for d in shape:
+        size *= d
+    if compress is None:
+        return size * jnp.dtype(dtype).itemsize
+    if compress == "int8":
+        lead, _, b, nblocks = _last_axis_blocking(shape)
+        nlead = 1
+        for d in lead:
+            nlead *= d
+        return nlead * nblocks * (b + jnp.dtype(jnp.bfloat16).itemsize)
+    raise ValueError(f"unknown compress mode: {compress!r}")
+
+
+def payload_bytes(tree, compress) -> int:
+    """Total wire bytes for a broadcast payload pytree (arrays or anything
+    with .shape/.dtype, e.g. jax.ShapeDtypeStruct)."""
+    return sum(
+        leaf_wire_bytes(leaf.shape, leaf.dtype, compress)
+        for leaf in jax.tree.leaves(tree)
     )

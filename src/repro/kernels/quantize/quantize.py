@@ -16,7 +16,13 @@ from jax.experimental import pallas as pl
 def _q_kernel(x_ref, q_ref, s_ref):
     x = x_ref[...].astype(jnp.float32)                   # (br, C)
     absmax = jnp.max(jnp.abs(x), axis=1, keepdims=True)  # (br, 1)
+    # Same scale contract as repro.core.compression (pinned bitwise in
+    # tests/test_compression.py): clamp, then round through bf16 before
+    # quantizing, so q is computed against the exact scale the bf16 wire
+    # format delivers to the receiver. Stored as fp32 for lane alignment;
+    # the value is the bf16 grid point.
     scale = jnp.maximum(absmax / 127.0, 1e-12)
+    scale = scale.astype(jnp.bfloat16).astype(jnp.float32)
     q_ref[...] = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
     s_ref[...] = scale.astype(s_ref.dtype)
 

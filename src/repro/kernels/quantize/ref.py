@@ -6,10 +6,16 @@ import jax.numpy as jnp
 
 
 def quantize_ref(x):
-    """x (R, C) fp -> (q int8 (R, C), scales fp32 (R, 1))."""
+    """x (R, C) fp -> (q int8 (R, C), scales fp32 (R, 1)).
+
+    Scales are clamped and rounded through bf16 before q is computed — the
+    contract shared with repro.core.compression, whose wire format stores
+    scales in bf16.
+    """
     xf = x.astype(jnp.float32)
     absmax = jnp.max(jnp.abs(xf), axis=1, keepdims=True)
     scale = jnp.maximum(absmax / 127.0, 1e-12)
+    scale = scale.astype(jnp.bfloat16).astype(jnp.float32)
     q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
     return q, scale
 

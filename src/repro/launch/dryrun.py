@@ -152,6 +152,10 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
             "temp": getattr(mem, "temp_size_in_bytes", None),
             "peak": getattr(mem, "peak_memory_in_bytes", None),
         },
+        "compress": (dfl_cfg.compress if (dfl and dfl_cfg is not None)
+                     else None),
+        "permute_bytes": (terms["collective_bytes_by_op"].get(
+            "collective-permute", 0.0) if dfl else None),
         "roofline": terms,
         "model_flops_global": mf,
         "useful_flops_ratio": (mf / hlo_flops_global) if hlo_flops_global else None,
@@ -209,7 +213,7 @@ def run_lax_federation(args):
     cfg = simlax.SimLaxConfig(
         ticks=ticks, train_interval=interval, latency=1,
         ttl=ttl, record_every=max(1, ticks // 8), seed=0,
-        delivery=args.delivery)
+        delivery=args.delivery, compress=args.compress)
     sim = simlax.LaxSimulator(sc, topo, spec, get_rep("impl2"), cfg)
     t0 = time.time()
     res = sim.run()
@@ -221,6 +225,9 @@ def run_lax_federation(args):
         "attack_params": _parse_attack_args(args.attack_arg),
         "delivery": args.delivery, "topology": args.topology,
         "ttl": ttl, "nodes": n, "ticks": ticks,
+        "compress": res.stats["compress"],
+        "broadcast_bytes": res.stats["broadcast_bytes"],
+        "wire_bytes": res.stats["wire_bytes"],
         "delivery_budget": res.stats["delivery_budget"],
         "compact_budget": res.stats["compact_budget"],
         "max_tick_deliveries": res.stats["max_tick_deliveries"],
@@ -234,8 +241,10 @@ def run_lax_federation(args):
     }
     print(f"[dryrun] lax {scenario_name} attack={attack.name} n={n} "
           f"ticks={ticks} delivery={args.delivery} "
+          f"compress={record['compress']} "
           f"budget={record['delivery_budget']} "
           f"deliveries={record['deliveries']} "
+          f"wire_bytes={record['wire_bytes']:.3e} "
           f"honest_acc={record['honest_acc']:.3f} "
           f"rep_attacker={record['malicious_reputation']:.2f} "
           f"wall={wall:.1f}s")
@@ -342,6 +351,13 @@ def main():
                     help="receipt engine for --engine lax: compact "
                     "(segment-compacted work buffer, default), sparse "
                     "(per-receiver slot buffer), dense (N^2 oracle)")
+    ap.add_argument("--compress", default=None,
+                    type=lambda s: None if s in ("none", "") else s,
+                    choices=(None, "int8"), metavar="{none,int8}",
+                    help="wire payload quantization for broadcasts "
+                    "(--dfl lowering and --engine lax): int8 ships "
+                    "block-quantized models (repro.core.compression), "
+                    "none ships fp32 (default)")
     from repro.core.topology import KINDS  # numpy-only module: safe pre-mesh
     ap.add_argument("--topology", default="ring", choices=KINDS,
                     help="gossip graph over the federation axis "
@@ -400,7 +416,8 @@ def main():
         from repro.core.dfl import DFLConfig
         dfl_cfg = DFLConfig(ttl=args.ttl, topology=args.topology,
                             topology_degree=args.topology_degree,
-                            schedule=args.gossip_schedule)
+                            schedule=args.gossip_schedule,
+                            compress=args.compress)
 
     results = []
     if os.path.exists(args.out):

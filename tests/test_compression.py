@@ -1,0 +1,186 @@
+"""core.compression correctness + bitwise parity against the Pallas
+kernels/quantize pair.
+
+Three families, matching the latent bugs they pin:
+* scale underflow — tiny-magnitude leaves must round-trip (the old fp16
+  wire scales flushed anything under ~6e-8 to zero, dequantizing nonzero
+  q to zeros; scales now ship as bf16);
+* edge-case shapes — zero-size, 0-d, and odd non-multiple-of-block last
+  dims have DEFINED behavior (empty -> empty, scalar -> 1-block);
+* reference <-> kernel parity — q AND scales bitwise across sizes and
+  dtypes, including the ops.py block-rows fallback path. compression
+  stores bf16 scales, the kernel fp32; the contract is that the kernel's
+  fp32 value IS the bf16 grid point, so the comparison is exact.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compression
+from repro.kernels.quantize import ops
+from repro.kernels.quantize.quantize import quantize
+from repro.kernels.quantize.ref import dequantize_ref, quantize_ref
+
+
+# --------------------------------------------------------- scale underflow
+@pytest.mark.parametrize("mag", [1e-5, 1e-6, 1e-7, 6e-8, 1e-10, 1e-12])
+def test_tiny_leaf_roundtrip_not_zeroed(mag):
+    x = jnp.asarray([mag, -mag, mag / 2, 0.0, mag], jnp.float32)
+    q, s = compression.quantize_last_axis(x)
+    dq = compression.dequantize_last_axis(q, s, x.shape, x.dtype)
+    # the old bug: q nonzero but scale underflows to fp16 zero -> dq == 0
+    assert float(s.astype(jnp.float32).min()) > 0.0
+    assert float(jnp.max(jnp.abs(dq))) > 0.0
+    # bf16 scales keep tiny leaves at ordinary quantization accuracy: one
+    # scale step of error, plus bf16 rounding slack on the scale itself
+    bound = 1.1 * float(s.astype(jnp.float32).max())
+    np.testing.assert_allclose(np.asarray(dq), np.asarray(x), atol=bound)
+    if mag / 127.0 > compression.SCALE_EPS:  # above the clamp floor the
+        assert bound < 0.02 * mag            # bound is tight: ~1% relative
+
+
+def test_zero_block_dequantizes_to_exact_zero():
+    x = jnp.zeros((compression.BLOCK,), jnp.float32)
+    q, s = compression.quantize_tensor(x)
+    assert float(s.astype(jnp.float32)[0]) > 0.0  # clamp survives bf16 cast
+    assert int(jnp.max(jnp.abs(q))) == 0
+    dq = compression.dequantize_tensor(q, s, x.shape, x.dtype)
+    assert bool(jnp.all(dq == 0.0))
+
+
+def test_quantize_grid_consistency():
+    """q is computed against the SAME bf16-rounded scale the receiver
+    multiplies by, so round-trip error stays under one scale step (half a
+    step of rounding + at most a quarter step of clip from the bf16
+    round-to-nearest undershoot) at every magnitude."""
+    key = jax.random.PRNGKey(7)
+    for mag in (1.0, 1e-3, 1e-5, 3e-6, 1e-8):
+        x = jax.random.normal(key, (512,)) * mag
+        q, s = compression.quantize_last_axis(x)
+        dq = compression.dequantize_last_axis(q, s, x.shape, x.dtype)
+        step = float(s.astype(jnp.float32).max())
+        assert float(jnp.max(jnp.abs(dq - x))) <= 0.76 * step
+
+
+# --------------------------------------------------------- edge-case shapes
+def test_zero_size_leaves_roundtrip_empty():
+    for shape in [(0,), (3, 0), (0, 5), (2, 0, 4)]:
+        x = jnp.zeros(shape, jnp.float32)
+        q, s = compression.quantize_last_axis(x)
+        assert q.size == 0 and s.size == 0
+        dq = compression.dequantize_last_axis(q, s, shape, x.dtype)
+        assert dq.shape == shape and dq.dtype == x.dtype
+
+
+def test_scalar_leaf_is_one_block():
+    x = jnp.float32(3.5)
+    q, s = compression.quantize_last_axis(x)
+    assert q.shape == (1, 1) and s.shape == (1,)
+    dq = compression.dequantize_last_axis(q, s, x.shape, x.dtype)
+    assert dq.shape == ()
+    np.testing.assert_allclose(float(dq), 3.5, rtol=1e-2)
+
+
+@pytest.mark.parametrize("last", [1, 7, 255, 257, 300, 1000])
+def test_odd_last_dims_roundtrip(last):
+    x = jax.random.normal(jax.random.PRNGKey(last), (3, last))
+    q, s = compression.quantize_last_axis(x)
+    nblocks = -(-last // min(compression.BLOCK, last))
+    assert s.shape == (3, nblocks)
+    dq = compression.dequantize_last_axis(q, s, x.shape, x.dtype)
+    rel = float(jnp.max(jnp.abs(dq - x)) / jnp.max(jnp.abs(x)))
+    assert rel < 0.01
+
+
+def test_quantize_tree_mixed_edge_leaves():
+    tree = {"w": jax.random.normal(jax.random.PRNGKey(0), (4, 300)),
+            "scalar": jnp.float32(2.0),
+            "empty": jnp.zeros((0, 8), jnp.float32),
+            "tiny": jnp.full((9,), 1e-6, jnp.float32)}
+    rt = compression.roundtrip_tree(tree)
+    assert jax.tree.structure(rt) == jax.tree.structure(tree)
+    for k in tree:
+        assert rt[k].shape == tree[k].shape and rt[k].dtype == tree[k].dtype
+    assert float(jnp.max(jnp.abs(rt["tiny"] - tree["tiny"]))) < 1e-7
+
+
+def test_stacked_equals_per_node_bitwise():
+    """The heap<->lax parity mechanism: quantizing a stacked (N, ...) pytree
+    equals quantizing each node's slice independently, bit for bit, because
+    blocks never cross the last axis."""
+    key = jax.random.PRNGKey(3)
+    stacked = {"w": jax.random.normal(key, (6, 5, 37)),
+               "b": jax.random.normal(jax.random.fold_in(key, 1), (6, 13))}
+    rt = compression.roundtrip_tree(stacked)
+    for i in range(6):
+        per = compression.roundtrip_tree(
+            jax.tree.map(lambda a: a[i], stacked))
+        for k in stacked:
+            assert bool(jnp.all(rt[k][i] == per[k]))
+
+
+# --------------------------------------------- reference <-> kernel parity
+@pytest.mark.parametrize("size", [256, 2048, 65536, 300, 4096 + 17])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_compression_matches_kernel_bitwise(size, dtype):
+    x = (jax.random.normal(jax.random.PRNGKey(size), (size,)) * 2.0)
+    # exercise tiny magnitudes in half the payload to cover the clamp path
+    x = x * jnp.where(jnp.arange(size) % 2 == 0, 1.0, 1e-6)
+    x = x.astype(dtype)
+    qc, sc = compression.quantize_tensor(x)
+    qk, sk, n = ops.quantize_flat(x)
+    assert n == size
+    assert qc.shape == qk.shape
+    assert bool(jnp.all(qc == qk))
+    # kernel fp32 scales must BE the bf16 grid points compression ships
+    assert bool(jnp.all(sc.astype(jnp.float32) == sk[:, 0]))
+    assert bool(jnp.all(sc == sk[:, 0].astype(jnp.bfloat16)))
+    dc = compression.dequantize_tensor(qc, sc, x.shape, jnp.float32)
+    dk = ops.dequantize_flat(qk, sk, n)
+    assert bool(jnp.all(dc == dk))
+
+
+@pytest.mark.parametrize("rows", [1, 2, 3, 96, 768])
+def test_ops_block_rows_fallback_matches_ref(rows):
+    """rows not divisible by 256 exercises the halving fallback in ops.py
+    (and rows=3 the final br=1 path)."""
+    size = rows * ops.BLOCK_COLS - (17 if rows > 1 else 0)
+    x = jax.random.normal(jax.random.PRNGKey(rows), (size,))
+    qk, sk, n = ops.quantize_flat(x)
+    qc, sc = compression.quantize_tensor(x)
+    assert bool(jnp.all(qc == qk))
+    assert bool(jnp.all(sc.astype(jnp.float32) == sk[:, 0]))
+
+
+@pytest.mark.parametrize("mag", [1.0, 1e-6])
+def test_kernel_matches_ref_oracle_tiny(mag):
+    x = jax.random.normal(jax.random.PRNGKey(0), (256, 128)) * mag
+    q, s = quantize(x, block_rows=64, interpret=True)
+    qr, sr = quantize_ref(x)
+    assert bool(jnp.all(q == qr))
+    assert bool(jnp.all(s == sr))
+    assert bool(jnp.all(dequantize_ref(q, s) == dequantize_ref(qr, sr)))
+
+
+# ------------------------------------------------------------- wire bytes
+def test_payload_bytes_model():
+    tree = {"w": jnp.zeros((4, 512), jnp.float32),
+            "b": jnp.zeros((10,), jnp.float32)}
+    fp32 = compression.payload_bytes(tree, None)
+    assert fp32 == (4 * 512 + 10) * 4
+    int8 = compression.payload_bytes(tree, "int8")
+    # w: 4 rows x 2 blocks x (256 q bytes + 2 scale bytes); b: 1 block of 10
+    assert int8 == 4 * 2 * (256 + 2) + 1 * (10 + 2)
+    assert int8 < 0.3 * fp32
+    # spec leaves (shape/dtype carriers) work the same as arrays
+    spec = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree)
+    assert compression.payload_bytes(spec, "int8") == int8
+    with pytest.raises(ValueError):
+        compression.payload_bytes(tree, "fp8")
+
+
+def test_payload_bytes_edge_leaves():
+    assert compression.leaf_wire_bytes((), jnp.float32, "int8") == 1 + 2
+    assert compression.leaf_wire_bytes((3, 0), jnp.float32, "int8") == 0
+    assert compression.leaf_wire_bytes((0,), jnp.float32, None) == 0

@@ -340,13 +340,15 @@ def test_reputation_crushes_malicious_only():
 
 # ============================================ compact vs sparse vs dense
 def _run_engines(sc, topo, spec, *, ticks, interval, latency=1, ttl=2,
-                 seed=0, engines=simlax.DELIVERY_ENGINES, compact_budget=None):
+                 seed=0, engines=simlax.DELIVERY_ENGINES, compact_budget=None,
+                 compress=None):
     out = {}
     for eng in engines:
         cfg = simlax.SimLaxConfig(
             ticks=ticks, train_interval=interval, latency=latency, ttl=ttl,
             record_every=max(1, ticks // 5), seed=seed, delivery=eng,
-            compact_budget=compact_budget if eng == "compact" else None)
+            compact_budget=compact_budget if eng == "compact" else None,
+            compress=compress)
         sim = simlax.LaxSimulator(sc, topo, spec, IMPL2, cfg)
         out[eng] = sim.run()
     return out
@@ -720,6 +722,154 @@ def test_lenet_poisoned_federation_reaches_paper_accuracy():
     sc, spec, topo, cfg = scenarios.lenet_paper_setup(n)
     mal = spec.malicious
     assert mal == (0, 1)    # 20% poisoned senders
+    sim = simlax.LaxSimulator(sc, topo, spec, IMPL2, cfg)
+    res = sim.run()
+    honest = [i for i in range(n) if i not in mal]
+    final_acc = res.acc_history[-1][honest].mean()
+    rep_mal = np.mean([res.mean_reputation(i) for i in mal])
+    rep_hon = np.mean([res.mean_reputation(i) for i in honest])
+    assert final_acc >= 0.90, (final_acc, res.acc_history[:, honest].mean(1))
+    assert rep_mal < rep_hon - 0.1, (rep_mal, rep_hon)
+
+
+# ------------------------------------------------- quantized wire payloads
+def test_compress_rejects_unknown_mode():
+    with pytest.raises(ValueError, match="compress"):
+        simlax.SimLaxConfig(compress="fp8")
+        sc = scenarios.toy_scenario(4)
+        simlax.LaxSimulator(sc, T.full(4), FederationSpec.build(4), IMPL2,
+                            simlax.SimLaxConfig(compress="fp8"))
+
+
+def test_compress_int8_changes_the_wire_payload():
+    """Guard against the compression path silently becoming a no-op: the
+    int8 run's broadcast payloads must differ from the fp32 run's (same
+    seed/schedule), land exactly on the quantization grid, and stay close."""
+    from repro.core import compression
+    n = 6
+    sc = scenarios.toy_scenario(n)
+    topo = T.full(n)
+    spec = FederationSpec.build(n, initial_countdown=[2 + i for i in range(n)])
+    out = {}
+    for compress in (None, "int8"):
+        cfg = simlax.SimLaxConfig(ticks=30, train_interval=(8, 8), latency=1,
+                                  ttl=1, record_every=10, seed=0,
+                                  compress=compress)
+        out[compress] = simlax.LaxSimulator(sc, topo, spec, IMPL2, cfg).run()
+    raw, q8 = out[None].sent["w"], out["int8"].sent["w"]
+    assert not np.array_equal(raw, q8)
+    np.testing.assert_allclose(raw, q8, rtol=0.05, atol=1e-6)
+    # the int8 payload must be its own quantization fixed point
+    refix = compression.roundtrip_tree({"w": np.asarray(q8)})["w"]
+    np.testing.assert_array_equal(np.asarray(refix), q8)
+    # and the dtype-derived wire model must reflect the compression
+    assert out["int8"].stats["compress"] == "int8"
+    assert out[None].stats["compress"] is None
+    assert (out["int8"].stats["broadcast_bytes"]
+            < 0.3 * out[None].stats["broadcast_bytes"])
+
+
+@pytest.mark.parametrize("attack", ["gaussian", "signflip"])
+def test_delivery_engines_parity_int8(attack):
+    """The engine-parity pin under wire quantization: the sender-side
+    round-trip happens once in do_train (every engine reads the same
+    ``sent`` state), so compact == sparse == dense must hold bit-for-bit
+    with compress="int8" exactly as without."""
+    n = 12
+    mal = (0, 4)
+    sc = scenarios.toy_scenario(n, dim=8, malicious=mal)
+    topo = T.make("kregular", n, degree=3, seed=2)
+    spec = FederationSpec.build(
+        n, malicious=mal, attack=attack, dead=(7,), stragglers={1: 3},
+        initial_countdown=[1 + (3 * i) % 4 for i in range(n)])
+    out = _run_engines(sc, topo, spec, ticks=80, interval=(4, 7),
+                       latency=1, ttl=2, compress="int8")
+    assert out["compact"].stats["deliveries"] > 0
+    _assert_engine_parity(out["compact"], out["sparse"])
+    _assert_engine_parity(out["sparse"], out["dense"])
+    for eng in ("sparse", "dense"):
+        np.testing.assert_array_equal(out["compact"].sent["w"],
+                                      out[eng].sent["w"])
+
+
+@pytest.mark.parametrize("attack", sorted(attacks.names()))
+def test_attack_stream_bitwise_parity_int8(attack):
+    """Heap <-> lax bitwise attack-payload parity survives quantization:
+    both engines round-trip the post-attack payload through the SAME
+    repro.core.compression calls (stacked vs per-node application is
+    bitwise identical because blocks never cross the last axis), so the
+    quantized wire payloads agree bit-for-bit — including `scaled`, whose
+    pre-quantization float-epsilon drift is absorbed by the int8 grid."""
+    import dataclasses
+    rep = dataclasses.replace(IMPL2, buffer_size=10 ** 6)  # FedAvg never fires
+    n, ticks, interval = 8, 60, 8
+    mal = (0, 3)
+    sc = scenarios.toy_scenario(n)
+    topo = T.full(n)
+    spec = FederationSpec.build(
+        n, malicious=mal, attack=attack,
+        initial_countdown=[1 + (3 * i) % interval for i in range(n)])
+    cfg = simlax.SimLaxConfig(ticks=ticks, train_interval=(interval, interval),
+                              latency=1, ttl=2, record_every=10, seed=0,
+                              compress="int8")
+    heap = scenarios.make_heap_simulator(sc, topo, spec, rep, cfg)
+    heap.run()
+    res = simlax.LaxSimulator(sc, topo, spec, rep, cfg).run()
+    assert res.stats["broadcasts"] == heap.stats["tx_sent"]
+    assert res.stats["deliveries"] == heap.stats["tx_delivered"]
+    nodes = list(heap.nodes.values())
+    for i in range(n):   # attackers AND honest nodes ship quantized payloads
+        heap_payload = np.asarray(nodes[i].last_broadcast["w"])
+        lax_payload = res.sent["w"][i]
+        if attack == "scaled" and i in mal:
+            # the engines' pre-quantization payloads differ by float
+            # epsilon (vmap-in-scan vs single-jit fusion); quantization
+            # almost always rounds both to the same grid point, but an
+            # input sitting on a .5 boundary can flip one int8 step
+            scale = np.abs(heap_payload).max() / 127
+            np.testing.assert_allclose(heap_payload, lax_payload,
+                                       atol=1.01 * scale)
+        else:
+            np.testing.assert_array_equal(heap_payload, lax_payload)
+
+
+def test_heap_lax_aggregate_parity_int8():
+    """The full acceptance comparison (FedAvg enabled) under int8: event
+    streams identical, aggregate accuracy/reputation within the same
+    tolerances as the uncompressed parity test, attacker still isolated."""
+    n, ticks, interval = 12, 160, 12
+    sc = scenarios.toy_scenario(n, malicious=(0,))
+    topo = T.full(n)
+    spec = FederationSpec.build(n, malicious=(0,),
+                                initial_countdown=_staggered(n, interval))
+    cfg = simlax.SimLaxConfig(ticks=ticks, train_interval=(interval, interval),
+                              latency=1, ttl=2, record_every=10, seed=0,
+                              compress="int8")
+    heap = scenarios.make_heap_simulator(sc, topo, spec, IMPL2, cfg)
+    heap.run()
+    nodes = list(heap.nodes.values())
+    honest = nodes[1:]
+    heap_acc = np.mean([nd.accuracy_history[-1][1] for nd in honest])
+    heap_mal = mean_reputation(honest, nodes[0].info.address)
+    res = simlax.LaxSimulator(sc, topo, spec, IMPL2, cfg).run()
+    lax_acc = res.acc_history[-1][1:].mean()
+    lax_mal = res.mean_reputation(0)
+    assert res.stats["broadcasts"] == heap.stats["tx_sent"]
+    assert res.stats["deliveries"] == heap.stats["tx_delivered"]
+    assert abs(heap_acc - lax_acc) < 0.02, (heap_acc, lax_acc)
+    assert abs(heap_mal - lax_mal) < 0.1, (heap_mal, lax_mal)
+    assert lax_mal < 0.9 and heap_mal < 0.9
+
+
+@pytest.mark.slow
+def test_lenet_poisoned_federation_reaches_paper_accuracy_int8():
+    """§VI-D acceptance with quantized wire payloads: shipping int8
+    broadcasts (4x fewer link bytes) must not cost the headline result —
+    honest nodes still clear 90% mean test accuracy under 20% poisoning
+    and the reputation system still separates the poisoners."""
+    n = 10
+    sc, spec, topo, cfg = scenarios.lenet_paper_setup(n, compress="int8")
+    mal = spec.malicious
     sim = simlax.LaxSimulator(sc, topo, spec, IMPL2, cfg)
     res = sim.run()
     honest = [i for i in range(n) if i not in mal]
