@@ -202,7 +202,7 @@ def int8_vs_fp32(*, quick: bool, hlo_fp32: int, hlo_int8: int,
 
     n, ticks, interval = 10, 80 if quick else 160, 8
     mal = (0,)
-    for attack, akw in (("gaussian", {}), ("signflip", {})):
+    for attack in ("gaussian", "signflip"):
         for topo_name in ("kregular", "full"):
             topo = (topology_lib.kregular(n, 2) if topo_name == "kregular"
                     else topology_lib.full(n))

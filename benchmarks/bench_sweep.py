@@ -43,7 +43,7 @@ def _assert_bitwise(batched_res, single_res, b: int):
             raise AssertionError(
                 f"sweep,batched_vs_loop: federation {b} diverged in {name}")
     for a, c in zip(jax.tree.leaves(batched_res.params),
-                    jax.tree.leaves(single_res.params)):
+                    jax.tree.leaves(single_res.params), strict=True):
         if not np.array_equal(a, c):
             raise AssertionError(
                 f"sweep,batched_vs_loop: federation {b} diverged in params")
@@ -68,7 +68,7 @@ def batched_vs_loop(n: int = 256, batch: int = 32, ticks: int = 120,
         sc, topo, attacks.BatchedFederationSpec.build(specs, seeds),
         get_rep("impl2"), mk_cfg(0))
     ssims = [simlax.LaxSimulator(sc, topo, s, get_rep("impl2"), mk_cfg(sd))
-             for s, sd in zip(specs, seeds)]
+             for s, sd in zip(specs, seeds, strict=True)]
     # warm both paths (trace+compile) so the timed pass is steady-state
     bsim.run()
     ssims[0].run()
@@ -78,7 +78,7 @@ def batched_vs_loop(n: int = 256, batch: int = 32, ticks: int = 120,
     t0 = time.perf_counter()
     batched = bsim.run()
     batched_wall = time.perf_counter() - t0
-    for b, (br, sr) in enumerate(zip(batched, singles)):
+    for b, (br, sr) in enumerate(zip(batched, singles, strict=True)):
         _assert_bitwise(br, sr, b)
     out = {
         "nodes": n, "batch": batch, "ticks": ticks,

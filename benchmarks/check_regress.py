@@ -17,13 +17,20 @@ benchmarks/baselines/ and FAILS the build on:
   the fp32 row — HLO-derived and deterministic, so no tolerance band: the
   known failure mode is XLA hoisting the dequant convert above the
   ppermute, which silently restores fp32 traffic (ratio ~1.0) while every
-  numerical test keeps passing.
+  numerical test keeps passing;
+* any `tools/hlo_audit.py` cell (experiments/hlo_audit.json, produced by
+  the same job) reporting ok=false, vanishing relative to the committed
+  baseline, or growing its collective-permute count — the audit rows are
+  deterministic structural facts about the compiled modules (quantize
+  placement, scan trip counts, retrace counts), so like the schedule rows
+  they gate with no tolerance band.
 
 Baseline-refresh workflow (a legitimate perf change or a runner-class
 change makes wall baselines stale):
 
     PYTHONPATH=src python -m benchmarks.bench_gossip --quick
     PYTHONPATH=src python -m benchmarks.bench_sweep --quick
+    python tools/hlo_audit.py
     PYTHONPATH=src python -m benchmarks.check_regress --update
     git add benchmarks/baselines/ && git commit
 
@@ -56,6 +63,7 @@ BASELINE_DIR = os.path.join(os.path.dirname(__file__), "baselines")
 BASELINE_PATH = os.path.join(BASELINE_DIR, "bench_gossip.json")
 CURRENT_PATH = os.path.join("experiments", "bench_gossip.json")
 SWEEP_CURRENT_PATH = os.path.join("experiments", "bench_sweep.json")
+HLO_CURRENT_PATH = os.path.join("experiments", "hlo_audit.json")
 
 # (section, key) pairs gated as wall-clock per-tick times (lower is better)
 TIME_KEYS = (
@@ -99,7 +107,14 @@ def extract(data: dict) -> dict:
     """Trim a bench_gossip JSON down to the gated metrics — the committed
     baseline stays small, deterministic-first, and reviewable."""
     out = {"schedule": {}, "speedups": {}, "times": {}, "scale": {},
-           "bytes": {}}
+           "bytes": {}, "hlo": {}}
+    for key, row in data.get("hlo_audit", {}).items():
+        # structural facts only — wall-independent, so gate-able exactly
+        out["hlo"][key] = {
+            "ok": bool(row.get("ok")),
+            "collectives": row.get("collectives", 0),
+            "problems": row.get("problems", []),
+        }
     row = data.get("int8_vs_fp32")
     if row:
         out["bytes"]["int8_vs_fp32"] = {
@@ -162,7 +177,7 @@ def compare(current: dict, baseline: dict, tolerance: float) -> list:
             line(f"schedule({key})", "ok",
                  f"collectives={cur['num_collectives']}")
 
-    for key, base in baseline.get("bytes", {}).items():
+    for key in baseline.get("bytes", {}):
         cur = current.get("bytes", {}).get(key)
         if cur is None:
             line(f"bytes({key})", "FAIL",
@@ -180,6 +195,26 @@ def compare(current: dict, baseline: dict, tolerance: float) -> list:
         else:
             line(f"bytes({key})", "ok",
                  f"ratio={cur['ratio']} (max {BYTES_RATIO_MAX})")
+
+    for key, base in baseline.get("hlo", {}).items():
+        cur = current.get("hlo", {}).get(key)
+        if cur is None:
+            line(f"hlo({key})", "FAIL",
+                 "baseline row missing from current run — removed an audit "
+                 "cell? refresh baselines (--update) if intentional")
+            continue
+        # structural, HLO-derived, deterministic: no tolerance band
+        if not cur["ok"]:
+            detail = "; ".join(cur.get("problems") or []) \
+                or "audit cell reported ok=false"
+            line(f"hlo({key})", "FAIL", f"audit cell failed: {detail}")
+        elif cur["collectives"] > base["collectives"]:
+            line(f"hlo({key})", "FAIL",
+                 f"collective-permute count {base['collectives']}"
+                 f"->{cur['collectives']} (lowering regression)")
+        else:
+            line(f"hlo({key})", "ok",
+                 f"collectives={cur['collectives']}")
 
     def scale_mismatch(sec):
         return current.get("scale", {}).get(sec) != \
@@ -246,6 +281,10 @@ def self_test(tolerance: float) -> int:
         "bytes": {"int8_vs_fp32": {"permute_bytes_fp32": 4.0e9,
                                    "permute_bytes_int8": 1.04e9,
                                    "ratio": 0.26}},
+        "hlo": {"round/ring/ttl1/int8": {"ok": True, "collectives": 8,
+                                         "problems": []},
+                "retrace/single": {"ok": True, "collectives": 0,
+                                   "problems": []}},
     }
     clean = copy.deepcopy(baseline)
     assert compare(clean, baseline, tolerance) == [], \
@@ -264,12 +303,21 @@ def self_test(tolerance: float) -> int:
     seeded["bytes"]["int8_vs_fp32"]["permute_bytes_int8"] = \
         seeded["bytes"]["int8_vs_fp32"]["permute_bytes_fp32"]
     seeded["bytes"]["int8_vs_fp32"]["ratio"] = 1.0
+    # the HLO-audit regressions: an extra permute per step in the round
+    # (lowering regression) and a retrace cell flipping to failed
+    seeded["hlo"]["round/ring/ttl1/int8"]["collectives"] += 4
+    seeded["hlo"]["retrace/single"] = {
+        "ok": False, "collectives": 0,
+        "problems": ["two same-shape runs traced 2x (expected 1)"]}
     fails = compare(seeded, baseline, tolerance)
-    missing = [cat for cat in ("schedule", "speedup", "per_tick", "bytes")
+    missing = [cat for cat in ("schedule", "speedup", "per_tick", "bytes",
+                               "hlo")
                if not any(f.startswith(cat) for f in fails)]
     if not any(f.startswith("speedup(sweep_batched_vs_loop)")
                for f in fails):
         missing.append("speedup(sweep_batched_vs_loop)")
+    if not any(f.startswith("hlo(retrace/single)") for f in fails):
+        missing.append("hlo(retrace/single)")
     if missing:
         print(f"regress,self_test,FAIL,undetected categories: {missing}")
         return 1
@@ -285,6 +333,10 @@ def main(argv=None) -> int:
     ap.add_argument("--current-sweep", default=SWEEP_CURRENT_PATH,
                     help="bench_sweep JSON from the run under test (merged "
                     "into the same gate; absent file = no sweep rows, which "
+                    "FAILS once the baseline carries them)")
+    ap.add_argument("--current-hlo", default=HLO_CURRENT_PATH,
+                    help="hlo_audit JSON from the run under test (merged "
+                    "like --current-sweep; absent file = no hlo rows, which "
                     "FAILS once the baseline carries them)")
     ap.add_argument("--baseline", default=BASELINE_PATH,
                     help="committed baseline (benchmarks/baselines/)")
@@ -316,6 +368,9 @@ def main(argv=None) -> int:
     # silently dropped from CI.
     if os.path.exists(args.current_sweep):
         with open(args.current_sweep) as f:
+            data.update(json.load(f))
+    if os.path.exists(args.current_hlo):
+        with open(args.current_hlo) as f:
             data.update(json.load(f))
     current = extract(data)
 

@@ -64,7 +64,7 @@ def _summarize(name, data):
             for r in data:
                 print(f"kernels,{r['kernel']},{r['s_per_call']*1e6:.0f}us_per_call")
     except Exception as e:  # malformed cache: force a rerun instead
-        raise KeyError(str(e))
+        raise KeyError(str(e)) from e
 
 
 def main(argv=None):

@@ -105,7 +105,7 @@ class GaussianNoise:
         keys = jax.random.split(key, len(leaves))
         bad = [self.sigma * jax.random.normal(k, l.shape, l.dtype)
                if jnp.issubdtype(jnp.asarray(l).dtype, jnp.floating) else l
-               for k, l in zip(keys, leaves)]
+               for k, l in zip(keys, leaves, strict=True)]
         return jax.tree.unflatten(treedef, bad)
 
 
@@ -329,11 +329,13 @@ class FederationSpec:
         base = jax.random.PRNGKey(seed)
         fns: Dict[int, Callable] = {}
         for gi, (_, mask) in enumerate(self.attack_groups()):
+            fold_const = attack_fold(gi)
             for i in np.flatnonzero(mask):
-                def key_at(tick, _fold=attack_fold(gi), _i=int(i)):
+                node = int(i)
+                def key_at(tick, _fold=fold_const, _i=node):
                     return attack_key_at(base, tick, _fold,
                                          self.num_nodes, _i)
-                fns[int(i)] = key_at
+                fns[node] = key_at
         return fns
 
 

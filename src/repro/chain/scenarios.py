@@ -145,10 +145,10 @@ def make_heap_nodes(scenario: Scenario, *, rep_impl: ReputationImpl,
     eval_jit = jax.jit(scenario.eval_fn)
     nodes = []
     for i in range(n):
-        params_i = jax.tree.map(lambda x: jnp.asarray(x[i]), stacked)
+        params_i = jax.tree.map(lambda x, _i=i: jnp.asarray(x[_i]), stacked)
         data_i = (None if tdata is None
-                  else jax.tree.map(lambda x: jnp.asarray(x[i]), tdata))
-        ed_i = jax.tree.map(lambda x: jnp.asarray(x[i]), edata)
+                  else jax.tree.map(lambda x, _i=i: jnp.asarray(x[_i]), tdata))
+        ed_i = jax.tree.map(lambda x, _i=i: jnp.asarray(x[_i]), edata)
 
         def train_fn(p, k, data=data_i):
             return train_jit(p, k, data), {}

@@ -111,11 +111,39 @@ import numpy as np
 from repro.chain import attacks as attacks_lib
 from repro.chain.attacks import BatchedFederationSpec, FederationSpec
 from repro.core import compression
+from repro.core import tracecheck
 from repro.core import topology as topology_lib
 from repro.core.reputation import ReputationImpl
 
 _NEVER = np.iinfo(np.int32).max
 _EPS = 1e-12
+
+# One compiled scan per static configuration: simulators whose static
+# signature matches share a single jitted dispatch (and its
+# tracecheck.TraceCounter), so sweeps over many federations with one
+# scenario/topology/config pay trace+compile ONCE instead of per instance.
+# Everything dynamic (per-member consts, PRNG keys, eval/train data) flows
+# through jit ARGUMENTS; everything the scan closes over statically is part
+# of the key. Values hold strong refs to the keyed callables so the id()s
+# in the key cannot be recycled while an entry is alive.
+_SCAN_CACHE: dict = {}
+
+
+def _fn_key(fn):
+    """Identity key for a (possibly bound-method) callable: bound methods
+    are fresh objects per attribute access, so key on the underlying
+    function + instance instead of the wrapper."""
+    if fn is None:
+        return None
+    func = getattr(fn, "__func__", None)
+    if func is not None:
+        return (id(func), id(fn.__self__))
+    return (id(fn), None)
+
+
+def clear_scan_cache():
+    """Drop every cached compiled scan (tests / memory pressure)."""
+    _SCAN_CACHE.clear()
 
 DELIVERY_ENGINES = ("compact", "sparse", "dense")
 COMPRESS_MODES = (None, "int8")
@@ -358,7 +386,8 @@ class LaxSimulator:
         # map (an O(N^2) temp + a python loop over senders) entirely.
         inv_dsts, inv_slots, inv_delays = [], [], []
         if cfg.delivery == "compact":
-            for reach, delay, slot_src in zip(reaches, delays, slot_srcs):
+            for reach, delay, slot_src in zip(reaches, delays, slot_srcs,
+                                              strict=True):
                 slot_of = np.full((n, n), -1, np.int64)
                 rows = np.arange(n)[:, None]
                 slot_of[rows, slot_src] = np.arange(budget)[None, :]
@@ -452,6 +481,34 @@ class LaxSimulator:
         self._test_fn = test_fn
         self._eval_data = eval_data
         self._train_data = train_data
+
+        # key on the ORIGINAL train_fn: _normalize_train_fn may return a
+        # fresh wrapper per construction, which would defeat sharing
+        self._trace_key = (
+            _fn_key(train_fn), _fn_key(eval_fn), _fn_key(test_fn),
+            train_data is not None, cfg, rep_impl, n, batched,
+            self._attack_instances,
+            tuple(tuple(ids.tolist()) for ids in self._attack_ids),
+            self.delivery_budget, self.compact_budget)
+        cached = _SCAN_CACHE.get(self._trace_key)
+        if cached is None:
+            if batched:
+                def dispatch(params0, keys, consts, eval_data, train_data):
+                    return jax.vmap(
+                        self._scan, in_axes=(None, 0, 0, None, None))(
+                            params0, keys, consts, eval_data, train_data)
+            else:
+                dispatch = self._scan
+            counted = tracecheck.count_traces(
+                dispatch, name=f"simlax._scan#{len(_SCAN_CACHE)}")
+            cached = (jax.jit(counted), counted.counter,
+                      (train_fn, eval_fn, test_fn, self))
+            _SCAN_CACHE[self._trace_key] = cached
+        self._jit_scan = cached[0]
+        #: tracecheck.TraceCounter for this config's compiled scan — two
+        #: same-shape run() calls must leave it at 1 (tests/test_tracecheck
+        #: and tools/hlo_audit.py gate on it)
+        self.trace_counter = cached[1]
 
     # ------------------------------------------------------------------ pieces
     def _interval(self, key):
@@ -550,13 +607,16 @@ class LaxSimulator:
         return acc_sum, w_sum, buf_cnt, batch_min, batch_sender
 
     # -------------------------------------------------------------------- scan
-    def _scan(self, params0, key0, consts):
+    def _scan(self, params0, key0, consts, eval_data, train_data):
         """One member's full tick loop as a single ``lax.scan``. The
         per-member constants arrive via ``consts`` (leaves WITHOUT a batch
-        axis); ``key0`` is the member's base PRNG key. Batched runs vmap
-        this method over the stacked constants/keys, single runs call it
-        directly — one body serves both, so the heap-parity pins validate
-        the exact code the batch executes. Returns the raw scan output
+        axis); ``key0`` is the member's base PRNG key; ``eval_data`` /
+        ``train_data`` are jit arguments rather than closure constants so
+        the compiled scan is shared across simulators with identical
+        static config (see ``_SCAN_CACHE``). Batched runs vmap this method
+        over the stacked constants/keys, single runs call it directly —
+        one body serves both, so the heap-parity pins validate the exact
+        code the batch executes. Returns the raw scan output
         ``(final_state_dict, (ticks, N) per-tick accuracy rows)``."""
         cfg = self.cfg
         n = self.topology.num_nodes
@@ -564,8 +624,6 @@ class LaxSimulator:
         alive = consts["alive"]
         malicious, straggler = consts["malicious"], consts["straggler"]
         attack_instances = self._attack_instances
-        eval_data = self._eval_data
-        train_data = self._train_data
         train_v = jax.vmap(self._train_fn,
                            in_axes=(0, 0, None if train_data is None else 0))
         test_v = jax.vmap(self._test_fn)
@@ -789,8 +847,9 @@ class LaxSimulator:
         cfg = self.cfg
 
         if not self._batched:
-            final, acc_by_tick = self._scan(
-                params0, jax.random.PRNGKey(cfg.seed), self._consts)
+            final, acc_by_tick = self._jit_scan(
+                params0, jax.random.PRNGKey(cfg.seed), self._consts,
+                self._eval_data, self._train_data)
             final = jax.tree.map(np.asarray, final)
             max_due = int(final["max_due"])
             if cfg.delivery == "compact" and max_due > self.compact_budget:
@@ -809,8 +868,8 @@ class LaxSimulator:
 
         seeds = self.spec.resolved_seeds(cfg.seed)
         keys = jnp.stack([jax.random.PRNGKey(s) for s in seeds])
-        final, acc_by_tick = jax.vmap(
-            self._scan, in_axes=(None, 0, 0))(params0, keys, self._consts)
+        final, acc_by_tick = self._jit_scan(
+            params0, keys, self._consts, self._eval_data, self._train_data)
         final = jax.tree.map(np.asarray, final)
         acc_np = np.asarray(acc_by_tick)
         max_due = final["max_due"]                           # (B,)
@@ -829,11 +888,32 @@ class LaxSimulator:
         out = []
         for b in range(self.batch_size):
             out.append(self._package(
-                jax.tree.map(lambda x: x[b], final), acc_np[b],
+                jax.tree.map(lambda x, _b=b: x[_b], final), acc_np[b],
                 self._slot_src_np[b],
                 {"federation_index": b, "batch_size": self.batch_size,
                  "seed": int(seeds[b])}))
         return out
+
+    def lower_scan(self, params0=None):
+        """Lower (never execute) this simulator's cached jitted scan and
+        return the ``jax.stages.Lowered`` object. ``tools/hlo_audit.py``
+        compiles it to assert structural invariants of the tick loop (no
+        f64, quantization confined to the scan body, while trip count ==
+        cfg.ticks). NOTE: lowering traces, so it bumps ``trace_counter``."""
+        if params0 is None:
+            if self.scenario is None:
+                raise TypeError(
+                    "lower_scan() needs params0 when constructed without "
+                    "a scenario")
+            params0 = self.scenario.init_params_stacked()
+        if self._batched:
+            keys = jnp.stack([
+                jax.random.PRNGKey(s)
+                for s in self.spec.resolved_seeds(self.cfg.seed)])
+        else:
+            keys = jax.random.PRNGKey(self.cfg.seed)
+        return self._jit_scan.lower(
+            params0, keys, self._consts, self._eval_data, self._train_data)
 
     def _package(self, final, acc_by_tick, slot_src, extra_stats):
         """Numpy-side result assembly for one member: expand the compact

@@ -186,7 +186,7 @@ def run_sweep(cells: Sequence[SweepCell], *,
                                       bspec, rep, cfg)
             results = sim.run()
         outcomes.extend(_reduce(c, r, target_acc)
-                        for c, r in zip(batch, results))
+                        for c, r in zip(batch, results, strict=True))
     return outcomes
 
 

@@ -154,8 +154,8 @@ def make_gossip_round(
         # sender (degree-1 topologies) would otherwise zero its only
         # neighbor's reputation and freeze itself out of averaging. The
         # sender sets are static, so the guard is a baked per-device flag.
-        distinct = jnp.asarray(
-            [len({int(s) for s in schedule.senders[:, i] if s >= 0}) > 1
+        distinct = jnp.asarray(  # host ints: schedule is static numpy
+            [len({int(s) for s in schedule.senders[:, i] if s >= 0}) > 1  # jaxlint: ignore[host-coercion]
              for i in range(fed_size)])
         new_rep = jnp.where(jnp.take(distinct, me), updated_rep, rep_row)
         n_valid = jnp.maximum(jnp.sum(valid_vec), 1.0)

@@ -609,7 +609,7 @@ def _chain_schedule(topo: Topology, ttl: int):
                 keep[p] = True
                 p = steps[p][1]
     remap, kept_steps, kept_senders, kept_hops = {}, [], [], []
-    for s, (step, row) in enumerate(zip(steps, senders)):
+    for s, (step, row) in enumerate(zip(steps, senders, strict=True)):
         if not keep[s]:
             continue
         perm, parent = step

@@ -1,0 +1,105 @@
+"""Trace-count guards: make "this function compiled once" an assertable fact.
+
+jit hides a failure mode no numerical test catches: a function that quietly
+RE-TRACES on every call (a python object in its closure changing identity, a
+weak-typed scalar flipping dtype, a shape sneaking through as a python int
+one call and an array the next) still returns bit-identical results — it
+just pays trace+compile every time. At simulator scale that is the
+difference between a sweep amortizing one compile across a grid and paying
+seconds per cell (`repro.chain.sweeps` caches scenarios/topologies for
+exactly this reason).
+
+This module is the repo's chex-style ``assert_max_traces``: wrap the python
+callable BEFORE handing it to ``jax.jit``. jit invokes the underlying
+python function only when it actually traces, so the wrapper's call count
+IS the trace count:
+
+    counted = tracecheck.count_traces(fn, name="simlax._scan")
+    jitted = jax.jit(counted)
+    ...
+    assert counted.counter.count == 1      # two same-shape calls, one trace
+
+``count_traces`` only counts; ``assert_max_traces`` also raises on the
+(n+1)-th trace, pointing at the retrace trigger instead of letting it hide
+in wall-clock noise. Counters register by name so audits can read them
+without holding the function (``tools/hlo_audit.py`` gates
+``simlax`` on exactly one trace across two same-config simulators;
+tests/test_tracecheck.py pins the retrace-on-shape-change contract).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, Optional
+
+
+@dataclasses.dataclass
+class TraceCounter:
+    """Mutable trace tally for one wrapped callable."""
+    name: str
+    count: int = 0
+    max_traces: Optional[int] = None
+
+    def bump(self) -> None:
+        self.count += 1
+        if self.max_traces is not None and self.count > self.max_traces:
+            raise RuntimeError(
+                f"{self.name!r} traced {self.count} times "
+                f"(max_traces={self.max_traces}): a retrace means jit saw "
+                "new static inputs — changed shapes/dtypes are legitimate, "
+                "but same-shape retraces leak compile time on every call "
+                "(unstable closure identity or a python-scalar argument?)")
+
+    def reset(self) -> None:
+        self.count = 0
+
+
+_COUNTERS: Dict[str, TraceCounter] = {}
+
+
+def get_counter(name: str) -> Optional[TraceCounter]:
+    """The registered counter for ``name`` (None when nothing registered)."""
+    return _COUNTERS.get(name)
+
+
+def _register(counter: TraceCounter) -> TraceCounter:
+    # last registration wins: re-wrapping under one name (e.g. a fresh
+    # simulator cache entry) must not leave audits reading a dead counter
+    _COUNTERS[counter.name] = counter
+    return counter
+
+
+def count_traces(fn: Callable, *, name: Optional[str] = None,
+                 max_traces: Optional[int] = None) -> Callable:
+    """Wrap ``fn`` so each python invocation bumps a ``TraceCounter``.
+
+    Wrap BEFORE ``jax.jit``: under jit the python body only runs while
+    tracing, so ``wrapped.counter.count`` is the trace count. The counter
+    is exposed on the wrapper and registered under ``name`` (default: the
+    function's qualname) for ``get_counter`` lookups.
+    """
+    counter = _register(TraceCounter(
+        name=name or getattr(fn, "__qualname__", repr(fn)),
+        max_traces=max_traces))
+
+    @functools.wraps(fn)
+    def wrapped(*args, **kwargs):
+        counter.bump()
+        return fn(*args, **kwargs)
+
+    wrapped.counter = counter
+    return wrapped
+
+
+def assert_max_traces(fn: Optional[Callable] = None, *, n: int = 1,
+                      name: Optional[str] = None) -> Callable:
+    """chex-style decorator: the wrapped function may trace at most ``n``
+    times; the (n+1)-th trace raises ``RuntimeError`` at the retrace site.
+
+    Usable bare (``@assert_max_traces``) or parameterized
+    (``@assert_max_traces(n=2)``); compose under jit as with
+    ``count_traces``.
+    """
+    if fn is None:
+        return functools.partial(assert_max_traces, n=n, name=name)
+    return count_traces(fn, name=name, max_traces=n)

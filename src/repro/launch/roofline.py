@@ -85,7 +85,7 @@ def parse_collectives(hlo_text: str) -> CollectiveStats:
         instrs.append((name, rtype, opcode, args))
 
     stats = CollectiveStats()
-    for name, rtype, opcode, args in instrs:
+    for _name, rtype, opcode, args in instrs:
         base = opcode[:-6] if opcode.endswith("-start") else opcode
         if base not in COLLECTIVE_OPS or opcode.endswith("-done"):
             continue

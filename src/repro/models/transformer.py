@@ -382,7 +382,7 @@ def cache_init(cfg, batch, max_seq):
     if n_units:
         cs, as_ = zip(*[
             _entry_cache(cfg, kind, batch, max_seq, stack=n_units)
-            for kind, _ in entries])
+            for kind, _ in entries], strict=True)
         cache["units"] = tuple(cs)
         axes["units"] = tuple(as_)
     else:
@@ -391,7 +391,7 @@ def cache_init(cfg, batch, max_seq):
     if n_rest:
         cs, as_ = zip(*[
             _entry_cache(cfg, kind, batch, max_seq, stack=None)
-            for kind, _ in entries[:n_rest]])
+            for kind, _ in entries[:n_rest]], strict=True)
         cache["rest"] = tuple(cs)
         axes["rest"] = tuple(as_)
     else:

@@ -70,7 +70,7 @@ def logical_to_spec(axes: Sequence[Optional[str]], mesh: Mesh, rules: dict,
     """Resolve logical axis names to a PartitionSpec, checking divisibility."""
     used: set[str] = set()
     out = []
-    for dim, name in zip(shape, axes):
+    for dim, name in zip(shape, axes, strict=False):
         assigned = None
         if name is not None:
             for cand in rules.get(name, ()):

@@ -22,3 +22,38 @@ def run_python(code: str, host_devices: int = 0, timeout: int = 560):
 @pytest.fixture
 def subprocess_runner():
     return run_python
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--jax-debug-nans", action="store_true", default=False,
+        help="run with jax_debug_nans: a NaN produced inside a jitted "
+        "computation raises at the producing op instead of propagating "
+        "into a downstream assertion (slower — opt-in debugging aid, "
+        "not part of tier-1)")
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _jax_debug_nans_flag(request):
+    if not request.config.getoption("--jax-debug-nans"):
+        yield
+        return
+    import jax
+    jax.config.update("jax_debug_nans", True)
+    try:
+        yield
+    finally:
+        jax.config.update("jax_debug_nans", False)
+
+
+@pytest.fixture
+def check_tracer_leaks():
+    """Wrap a test body in jax.checking_leaks(): a tracer escaping its
+    trace (e.g. a scan carry captured into a closure or module global —
+    the bug class tools/jaxlint.py lints for statically) fails the test
+    at the leak site instead of surfacing later as an opaque
+    UnexpectedTracerError. Applied to the engine-parity suite, which
+    exercises every delivery engine's full trace path."""
+    import jax
+    with jax.checking_leaks():
+        yield

@@ -44,8 +44,9 @@ def _write(tmp_path, name, data):
 
 
 # keep main() hermetic in tests: never pick up a real
-# experiments/bench_sweep.json from the working directory
-NOSWEEP = ["--current-sweep", "/nonexistent/bench_sweep.json"]
+# experiments/bench_sweep.json or hlo_audit.json from the working directory
+NOHLO = ["--current-hlo", "/nonexistent/hlo_audit.json"]
+NOSWEEP = ["--current-sweep", "/nonexistent/bench_sweep.json", *NOHLO]
 
 
 def test_extract_trims_to_gated_metrics():
@@ -159,11 +160,11 @@ def test_sweep_rows_merge_and_gate(tmp_path, capsys):
     # 6.0 < the 7.0 relative band but >= the 5x contract -> pass
     sw = _write(tmp_path, "sweep.json", _sweep_json(6.0))
     assert cr.main(["--current", cur, "--current-sweep", sw,
-                    "--baseline", base]) == 0
+                    "--baseline", base, *NOHLO]) == 0
     # below the 5x contract -> FAIL
     sw_bad = _write(tmp_path, "sweep_bad.json", _sweep_json(4.4))
     assert cr.main(["--current", cur, "--current-sweep", sw_bad,
-                    "--baseline", base]) == 1
+                    "--baseline", base, *NOHLO]) == 1
     assert "speedup(sweep_batched_vs_loop)" in capsys.readouterr().out
     # sweep bench silently dropped from CI -> vanished-row FAIL
     assert cr.main(["--current", cur, "--baseline", base, *NOSWEEP]) == 1
@@ -172,9 +173,53 @@ def test_sweep_rows_merge_and_gate(tmp_path, capsys):
     other["sweep_batched_vs_loop"]["batch"] = 8
     sw_other = _write(tmp_path, "sweep_other.json", other)
     assert cr.main(["--current", cur, "--current-sweep", sw_other,
-                    "--baseline", base]) == 0
+                    "--baseline", base, *NOHLO]) == 0
     assert "regress,speedup(sweep_batched_vs_loop),skip" in \
         capsys.readouterr().out
+
+
+def _hlo_json(ok=True, collectives=8):
+    return {"hlo_audit": {
+        "round/ring/ttl1/int8": {
+            "ok": ok, "collectives": collectives,
+            "schedule_collectives": 2, "buffers_per_step": 4,
+            "permute_dtypes": ["f32", "s8"], "permute_bytes": 4608,
+            "problems": [] if ok else ["int8 wire is not s8-dominated"]},
+        "retrace/single": {"ok": True, "collectives": 0, "traces": 1,
+                           "problems": []},
+    }}
+
+
+def test_hlo_rows_merge_and_gate(tmp_path, capsys):
+    """hlo_audit.json merges like the sweep JSON, and its rows gate with
+    no tolerance band: ok=false fails with the audit's problem text,
+    collective growth fails, a vanished audit cell fails, and an identical
+    re-run passes."""
+    cur = _write(tmp_path, "current.json", _bench_json())
+    merged = dict(_bench_json(), **_hlo_json())
+    base = _write(tmp_path, "baseline.json", cr.extract(merged))
+    hlo = _write(tmp_path, "hlo.json", _hlo_json())
+    ok_args = ["--current", cur, "--current-hlo", hlo, "--baseline", base,
+               "--current-sweep", "/nonexistent/bench_sweep.json"]
+    assert cr.main(ok_args) == 0
+    assert "regress,hlo(round/ring/ttl1/int8),ok" in capsys.readouterr().out
+    # an audit cell flipping to failed carries its problem text into CI
+    hlo_bad = _write(tmp_path, "hlo_bad.json", _hlo_json(ok=False))
+    assert cr.main(ok_args[:3] + [hlo_bad] + ok_args[4:]) == 1
+    assert "not s8-dominated" in capsys.readouterr().out
+    # collective-permute growth on an ok cell is a lowering regression
+    hlo_grow = _write(tmp_path, "hlo_grow.json", _hlo_json(collectives=12))
+    assert cr.main(ok_args[:3] + [hlo_grow] + ok_args[4:]) == 1
+    assert "8->12" in capsys.readouterr().out
+    # the audit silently dropped from CI -> vanished-row FAIL
+    assert cr.main(ok_args[:3] + ["/nonexistent/hlo.json"]
+                   + ok_args[4:]) == 1
+
+
+def test_extract_trims_hlo_rows_to_structural_facts():
+    out = cr.extract(_hlo_json())
+    row = out["hlo"]["round/ring/ttl1/int8"]
+    assert row == {"ok": True, "collectives": 8, "problems": []}
 
 
 def test_self_test_detects_all_categories():

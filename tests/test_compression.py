@@ -115,7 +115,7 @@ def test_stacked_equals_per_node_bitwise():
     rt = compression.roundtrip_tree(stacked)
     for i in range(6):
         per = compression.roundtrip_tree(
-            jax.tree.map(lambda a: a[i], stacked))
+            jax.tree.map(lambda a, _i=i: a[_i], stacked))
         for k in stacked:
             assert bool(jnp.all(rt[k][i] == per[k]))
 

@@ -1,0 +1,75 @@
+"""``tools/hlo_audit.py`` — the compiled-HLO audit gate: the pure HLO-text
+helpers on canned module text, the multi-device setup guard, and (in a
+subprocess — the script must set XLA_FLAGS before jax init) the real
+``--quick`` audit pass."""
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+CANNED = """\
+HloModule canned
+%collective-permute.1 = f32[8,1]{1,0} collective-permute(f32[8,1]{1,0} %a), channel_id=1
+%collective-permute.2 = s8[8,1,256]{2,1,0} collective-permute(s8[8,1,256]{2,1,0} %b), channel_id=2
+%collective-permute.3 = f32[]{} collective-permute(f32[]{} %c), channel_id=3
+%not-a-permute = f32[4]{0} add(f32[4]{0} %a, f32[4]{0} %a)
+%loop = (f32[4]{0}, s32[]) while((f32[4]{0}, s32[]) %init), condition=%cond, body=%body
+"""
+
+
+def _import_hlo_audit():
+    """Import the module without triggering its jax device setup twice —
+    tools/ is not a package, so path-import it like the CI job runs it."""
+    sys.path.insert(0, os.path.join(REPO, "tools"))
+    import hlo_audit
+    return hlo_audit
+
+
+def test_permute_payloads_parse_result_types():
+    ha = _import_hlo_audit()
+    payloads = ha.permute_payloads(CANNED)
+    # result type == operand type == what crosses the wire; scalars count
+    assert payloads == [("f32", 32), ("s8", 2048), ("f32", 4)]
+    assert ha.permute_dtypes(CANNED) == {"f32", "s8"}
+
+
+def test_while_carry_token_matching():
+    ha = _import_hlo_audit()
+    assert ha.while_carry_has(CANNED, "f32[")
+    assert ha.while_carry_has(CANNED, "s32[")
+    # s8 appears in the module (a permute) but NOT in the while carry —
+    # exactly the lax-engine invariant the audit gates
+    assert not ha.while_carry_has(CANNED, "s8[")
+
+
+def test_setup_guard_fails_fast_on_one_device():
+    """Run under an XLA_FLAGS that pins one host device: the audit must
+    refuse with an actionable message instead of lowering no-op cells."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=1"
+    res = subprocess.run(
+        [sys.executable, os.path.join("tools", "hlo_audit.py"),
+         "--json", ""],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=300)
+    assert res.returncode == 1, res.stdout + res.stderr
+    assert "need >=2 devices" in res.stdout
+
+
+def test_quick_audit_passes(tmp_path):
+    """The real contract CI enforces (bench job): lower the production
+    gossip round + the compact lax engine and land every cell green."""
+    out = tmp_path / "hlo_audit.json"
+    res = subprocess.run(
+        [sys.executable, os.path.join("tools", "hlo_audit.py"),
+         "--quick", "--json", str(out)],
+        cwd=REPO, capture_output=True, text=True, timeout=560)
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "hlo-audit,summary" in res.stdout and "failed=0" in res.stdout
+    rows = json.loads(out.read_text())["hlo_audit"]
+    assert rows["round/ring/ttl1/int8"]["ok"]
+    assert rows["retrace/single"]["traces"] == 1
+    # int8 ships strictly fewer permute bytes than fp32 on the same cell
+    assert (rows["round/ring/ttl1/int8"]["permute_bytes"]
+            < 0.3 * rows["round/ring/ttl1/fp32"]["permute_bytes"])

@@ -385,11 +385,14 @@ def _assert_engine_parity(s, d):
         ("smallworld", {"degree": 2, "beta": 0.3}, 1, 1, (), {0: 3}, (4,),
          "freerider"),
     ])
+@pytest.mark.usefixtures("check_tracer_leaks")
 def test_delivery_engines_parity(kind, kw, ttl, latency, dead,
                                  stragglers, malicious, attack):
     """compact == sparse == dense on the same (scenario, topology, spec):
     the compact engine's slot-state layout and work-buffer compaction must
-    replay the oracles' event stream bit-for-bit."""
+    replay the oracles' event stream bit-for-bit. Runs under
+    jax.checking_leaks (conftest fixture): tracing any of the three
+    engines must not leak a tracer out of its trace."""
     n = 14
     sc = scenarios.toy_scenario(n, dim=8, malicious=malicious)
     topo = T.make(kind, n, seed=2, **kw)
@@ -770,6 +773,7 @@ def test_compress_int8_changes_the_wire_payload():
 
 
 @pytest.mark.parametrize("attack", ["gaussian", "signflip"])
+@pytest.mark.usefixtures("check_tracer_leaks")
 def test_delivery_engines_parity_int8(attack):
     """The engine-parity pin under wire quantization: the sender-side
     round-trip happens once in do_train (every engine reads the same

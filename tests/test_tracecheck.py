@@ -1,0 +1,152 @@
+"""``core/tracecheck.py`` unit contract + the simlax retrace-regression pin.
+
+The trace counter's promise: wrap BEFORE jit, and the wrapper's call count
+is the trace count — same-shape calls reuse the compiled executable, a
+shape change costs exactly one more trace. The simlax half pins the
+``_SCAN_CACHE`` behavior the counter guards in production: two simulators
+built over the SAME scenario/topology/spec objects with equal config share
+one compiled scan (one trace total across both runs), a batch-size change
+on a shared cache entry retraces exactly once more, and a config change is
+a separate cache entry rather than a silent retrace.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.chain import scenarios, simlax
+from repro.chain.attacks import BatchedFederationSpec, FederationSpec
+from repro.core import topology as T
+from repro.core import tracecheck
+from repro.core.reputation import IMPL2
+
+
+# ------------------------------------------------------------------ unit layer
+def test_counts_traces_not_calls():
+    counted = tracecheck.count_traces(lambda x: x * 2, name="t.calls")
+    f = jax.jit(counted)
+    for _ in range(3):
+        f(jnp.ones(4))
+    assert counted.counter.count == 1
+    f(jnp.ones(8))  # shape change: one more trace, then cached again
+    f(jnp.ones(8))
+    assert counted.counter.count == 2
+
+
+def test_assert_max_traces_raises_at_the_retrace():
+    guarded = jax.jit(tracecheck.assert_max_traces(
+        lambda x: x + 1, n=1, name="t.guard"))
+    guarded(jnp.ones(3))
+    guarded(jnp.ones(3))  # cache hit: no second trace
+    with pytest.raises(RuntimeError, match="t.guard.*traced 2"):
+        guarded(jnp.ones(5))
+
+
+def test_bare_decorator_form():
+    @tracecheck.assert_max_traces
+    def f(x):
+        return x - 1
+
+    g = jax.jit(f)
+    g(jnp.ones(2))
+    with pytest.raises(RuntimeError, match="traced 2"):
+        g(jnp.ones(3))
+
+
+def test_registry_lookup_and_reset():
+    counted = tracecheck.count_traces(lambda x: x, name="t.registry")
+    assert tracecheck.get_counter("t.registry") is counted.counter
+    jax.jit(counted)(jnp.ones(2))
+    assert counted.counter.count == 1
+    counted.counter.reset()
+    assert tracecheck.get_counter("t.registry").count == 0
+    # last registration under a name wins — audits never read a dead counter
+    counted2 = tracecheck.count_traces(lambda x: x, name="t.registry")
+    assert tracecheck.get_counter("t.registry") is counted2.counter
+
+
+# ---------------------------------------------------- simlax retrace regression
+def _cfg(ticks=8, **kw):
+    kw.setdefault("seed", 0)
+    kw.setdefault("train_interval", (4, 4))
+    kw.setdefault("latency", 1)
+    kw.setdefault("ttl", 2)
+    kw.setdefault("delivery", "compact")
+    return simlax.SimLaxConfig(ticks=ticks, **kw)
+
+
+def _shared_fixture(n=8):
+    topo = T.kregular(n, 2)
+    sc = scenarios.toy_scenario(n, dim=8)
+    spec = FederationSpec.build(
+        n, initial_countdown=[1 + (3 * i) % 4 for i in range(n)])
+    return sc, topo, spec
+
+
+def test_same_config_simulators_share_one_trace():
+    """The satellite contract: constructing LaxSimulator twice with
+    identical static config (same scenario/topology/spec OBJECTS — the
+    cache binds train/eval fns by identity) compiles the scan once; both
+    runs execute the same executable."""
+    simlax.clear_scan_cache()
+    sc, topo, spec = _shared_fixture()
+    sim_a = simlax.LaxSimulator(sc, topo, spec, IMPL2, _cfg())
+    sim_b = simlax.LaxSimulator(sc, topo, spec, IMPL2, _cfg())
+    assert sim_b.trace_counter is sim_a.trace_counter
+    res_a = sim_a.run()
+    res_b = sim_b.run()
+    assert sim_a.trace_counter.count == 1
+    # sharing a compiled scan must not perturb results: bitwise equal runs
+    np.testing.assert_array_equal(res_a.acc_history, res_b.acc_history)
+
+
+def test_batch_size_change_retraces_exactly_once():
+    """Honest batched specs of different batch size share one cache entry
+    (the static key ignores batch size — it is a shape, not a config), so
+    a B=3 run after a B=2 run is the canonical shape-changing call: jit
+    must retrace exactly once more, not once per member."""
+    simlax.clear_scan_cache()
+    sc, topo, spec = _shared_fixture()
+    sim2 = simlax.LaxSimulator(
+        sc, topo, BatchedFederationSpec.build([spec, spec], [0, 1]),
+        IMPL2, _cfg())
+    sim2.run()
+    assert sim2.trace_counter.count == 1
+    sim3 = simlax.LaxSimulator(
+        sc, topo, BatchedFederationSpec.build([spec, spec, spec], [0, 1, 2]),
+        IMPL2, _cfg())
+    assert sim3.trace_counter is sim2.trace_counter
+    sim3.run()
+    assert sim3.trace_counter.count == 2
+    sim3.run()  # same shapes again: cache hit, no third trace
+    assert sim3.trace_counter.count == 2
+
+
+def test_config_change_is_a_new_cache_entry_not_a_retrace():
+    simlax.clear_scan_cache()
+    sc, topo, spec = _shared_fixture()
+    sim_a = simlax.LaxSimulator(sc, topo, spec, IMPL2, _cfg(ticks=8))
+    sim_c = simlax.LaxSimulator(sc, topo, spec, IMPL2, _cfg(ticks=10))
+    assert sim_c.trace_counter is not sim_a.trace_counter
+    sim_a.run()
+    sim_c.run()
+    assert sim_a.trace_counter.count == 1
+    assert sim_c.trace_counter.count == 1
+
+
+def test_fresh_scenario_object_is_a_deliberate_cache_miss():
+    """A re-built scenario carries new bound train/eval fns: identity-keyed
+    caching treats it as a different federation (its data really could
+    differ), so the second simulator gets its own counter rather than
+    silently reusing a compile against foreign closures."""
+    simlax.clear_scan_cache()
+    n = 8
+    topo = T.kregular(n, 2)
+    spec = FederationSpec.build(
+        n, initial_countdown=[1 + (3 * i) % 4 for i in range(n)])
+    sim_a = simlax.LaxSimulator(
+        scenarios.toy_scenario(n, dim=8), topo, spec, IMPL2, _cfg())
+    sim_b = simlax.LaxSimulator(
+        scenarios.toy_scenario(n, dim=8), topo, spec, IMPL2, _cfg())
+    assert sim_b.trace_counter is not sim_a.trace_counter

@@ -1,0 +1,361 @@
+#!/usr/bin/env python3
+"""hlo_audit — compiled-HLO structural invariants of the gossip fabric.
+
+Generalizes PR 7's hand-rolled HLO walk (the "dequant hoisted above the
+ppermute" failure mode) into a gate: lower the production gossip round and
+the vectorized simulator's tick scan, then assert properties of the
+OPTIMIZED HLO that no numerical test can see:
+
+production gossip round (per topology x ttl x compress):
+  * collective-permute instructions lower as one per PERMUTED BUFFER per
+    schedule step (fp32: one per param leaf; int8: payload + scales per
+    leaf), so the audit asserts count is a whole multiple of
+    ``GossipSchedule.num_collectives`` and that the schedule's
+    ``delivery_counts()`` exactly covers the BFS ttl-ball
+    (``topology.audit_schedule``)
+  * quantize placement: with compress="int8" the permuted bytes are
+    s8-dominated — quantization happens once on the send side and
+    dequantization on the receive side of the wire. Scales legitimately
+    ride along (bf16 in source; XLA:CPU promotes them to f32), but they
+    are ~1/64 the payload bytes; a dequant hoisted above the ppermute
+    puts FULL-SIZE f32 back on the wire, which the byte-weighted check
+    catches even though a dtype set check would not
+  * compiled permute bytes: int8/fp32 ratio <= the check_regress gate's
+    BYTES_RATIO_MAX
+  * no f64 anywhere in the module
+
+lax engine (per delivery engine x compress):
+  * the tick loop compiles to while loops whose static trip count includes
+    cfg.ticks (the scan was not unrolled or split)
+  * s8 appears iff compress="int8", and NEVER in the while-loop carry —
+    the wire roundtrip is confined to the tick body, committed params stay
+    full precision
+  * no collectives, no f64
+
+retrace guard:
+  * two same-config ``LaxSimulator``s share one compiled scan: the
+    ``core/tracecheck.py`` counter reads exactly 1 after both runs
+
+Writes ``experiments/hlo_audit.json``; ``benchmarks/check_regress.py``
+joins these rows into the CI perf gate (collective-count growth or any
+ok=false fails the PR). Run via ``python tools/hlo_audit.py`` — forces 8
+host devices, so it must set XLA_FLAGS before the first jax import.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+# must precede the first jax import: device count is locked at backend init
+_flags = os.environ.get("XLA_FLAGS", "")
+if "host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=8").strip()
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, _REPO)                       # benchmarks.check_regress
+sys.path.insert(0, os.path.join(_REPO, "src"))  # repro.*
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.chain import scenarios, simlax  # noqa: E402
+from repro.chain.attacks import FederationSpec  # noqa: E402
+from repro.core import gossip as gossip_lib  # noqa: E402
+from repro.core import topology as topology_lib  # noqa: E402
+from repro.core.reputation import get as get_rep  # noqa: E402
+from repro.launch import hlo_cost  # noqa: E402
+from repro.launch.mesh import make_fed_mesh  # noqa: E402
+
+# one source of truth for the wire-compression acceptance ratio
+from benchmarks.check_regress import BYTES_RATIO_MAX  # noqa: E402
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+# result type of a collective-permute instruction: `= f32[8,1]{1,0} collective-permute(`
+_PERMUTE_RESULT = re.compile(
+    r"=\s*([a-z]+[0-9]+)\[([0-9,]*)\][^=]*collective-permute\(")
+
+
+def permute_payloads(text: str):
+    """[(dtype, bytes)] for each collective-permute instruction in an HLO
+    module — a permute's result type equals its operand type, so this is
+    exactly what crosses the wire, per shard."""
+    out = []
+    for line in text.splitlines():
+        m = _PERMUTE_RESULT.search(line)
+        if not m:
+            continue
+        dtype, dims = m.group(1), m.group(2)
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out.append((dtype, n * _DTYPE_BYTES.get(dtype, 4)))
+    return out
+
+
+def permute_dtypes(text: str):
+    """Set of dtypes moved by collective-permute instructions."""
+    return {dt for dt, _ in permute_payloads(text)}
+
+
+def permute_count(res: hlo_cost.CostResult) -> int:
+    return int(sum(v for k, v in res.collective_count.items()
+                   if k.startswith("collective-permute")))
+
+
+def total_collectives(res: hlo_cost.CostResult) -> int:
+    return int(sum(res.collective_count.values()))
+
+
+def while_carry_has(text: str, token: str) -> bool:
+    """Does any while-loop carry (its result tuple type) contain `token`?"""
+    for line in text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\(.*\))\s*while\(", stripped)
+        if m and token in m.group(1):
+            return True
+    return False
+
+
+# --------------------------------------------------------------- gossip round
+def _toy_round_inputs(F: int):
+    """Synthetic fed-sharded inputs: leaves sized in multiples of the
+    compression block (256) so the int8/fp32 byte ratio is padding-free."""
+    key = jax.random.PRNGKey(0)
+    params = {
+        "w": jax.random.normal(key, (F, 8, 256), jnp.float32),
+        "b": jax.random.normal(jax.random.fold_in(key, 1), (F, 256),
+                               jnp.float32),
+    }
+    rep_rows = jnp.ones((F, F), jnp.float32)
+    vb = jnp.ones((F, 16), jnp.float32)
+    return params, rep_rows, vb
+
+
+def _toy_eval_fn(params, val):
+    # any [0, 1] receipt works — the audit is structural, not numerical
+    return jax.nn.sigmoid(jnp.vdot(params["b"][:16], val) / 16.0)
+
+
+def audit_gossip_round(F: int, cells, out: dict) -> None:
+    mesh = make_fed_mesh(F, 1, 1)
+    params, rep_rows, vb = _toy_round_inputs(F)
+    fp32_bytes: dict = {}
+    for topo_name, ttl, compress in cells:
+        topo = (topology_lib.ring(F) if topo_name == "ring"
+                else topology_lib.erdos_renyi(F, 0.4, seed=1))
+        sched = topology_lib.gossip_schedule(topo, ttl)
+        sched_audit = topology_lib.audit_schedule(topo, ttl, sched)
+        fn = gossip_lib.make_gossip_round(
+            _toy_eval_fn, fed_axis="fed", fed_size=F, ttl=ttl,
+            rep_impl=get_rep("impl2"), compress=compress, mesh=mesh,
+            topology=topo)
+        with mesh:
+            text = jax.jit(fn).lower(params, rep_rows, vb).compile().as_text()
+        res = hlo_cost.analyze(text)
+        count = permute_count(res)
+        payloads = permute_payloads(text)
+        dtypes = {dt for dt, _ in payloads}
+        wire_bytes = sum(v for k, v in res.collective_bytes.items()
+                        if k.startswith("collective-permute"))
+        problems = []
+        if not sched_audit.ok:
+            problems.append(f"schedule audit failed: coverage="
+                            f"{sched_audit.coverage:.3f}")
+        # XLA lowers one permute per buffer per schedule step (fp32: one
+        # per leaf; int8: quantized payload + scales per leaf), so the
+        # instruction count must be a whole multiple of the schedule's
+        # step count — anything else means steps were fused, duplicated,
+        # or dropped relative to GossipSchedule.
+        if count < sched.num_collectives or count % sched.num_collectives:
+            problems.append(
+                f"permute count {count} is not a whole multiple of "
+                f"schedule num_collectives {sched.num_collectives}")
+        if "f64[" in text:
+            problems.append("f64 present in compiled module")
+        if compress == "int8":
+            s8_bytes = sum(b for dt, b in payloads if dt == "s8")
+            other_bytes = sum(b for dt, b in payloads if dt != "s8")
+            if s8_bytes == 0:
+                problems.append("int8 round ships no s8 payload "
+                                "(quantization compiled away?)")
+            # scales + routing metadata are ~1/64 the payload; a dequant
+            # hoisted above the ppermute would ship full-size f32 (4x the
+            # s8 bytes) and blow this budget immediately
+            elif other_bytes > s8_bytes // 8 + 256:
+                problems.append(
+                    f"int8 wire is not s8-dominated ({other_bytes}B "
+                    f"non-s8 vs {s8_bytes}B s8): dequantize ran on the "
+                    "SEND side of a ppermute")
+            base = fp32_bytes.get((topo_name, ttl))
+            if base:
+                ratio = wire_bytes / base
+                if ratio > BYTES_RATIO_MAX:
+                    problems.append(f"compiled permute-bytes ratio "
+                                    f"{ratio:.3f} > {BYTES_RATIO_MAX}")
+        else:
+            fp32_bytes[(topo_name, ttl)] = wire_bytes
+            if "s8" in dtypes:
+                problems.append("fp32 wire unexpectedly carries s8")
+        key = f"round/{topo_name}/ttl{ttl}/{compress or 'fp32'}"
+        out[key] = {
+            "ok": not problems,
+            "collectives": count,
+            "schedule_collectives": sched.num_collectives,
+            "buffers_per_step": (count // sched.num_collectives
+                                 if sched.num_collectives else 0),
+            "permute_dtypes": sorted(dtypes),
+            "permute_bytes": wire_bytes,
+            "problems": problems,
+        }
+        print(f"hlo-audit,{'ok' if not problems else 'FAIL'},{key},"
+              f"collectives={count}/{sched.num_collectives},"
+              f"dtypes={'/'.join(sorted(dtypes))}"
+              + ("," + ";".join(problems) if problems else ""))
+
+
+# ----------------------------------------------------------------- lax engine
+def _make_sim(delivery: str, compress, n: int = 10, ticks: int = 12):
+    topo = topology_lib.kregular(n, 2)
+    sc = scenarios.toy_scenario(n, dim=8, malicious=(0,))
+    spec = FederationSpec.build(
+        n, malicious=(0,),
+        initial_countdown=[1 + (3 * i) % 4 for i in range(n)])
+    cfg = simlax.SimLaxConfig(ticks=ticks, seed=0, train_interval=(4, 4),
+                              latency=1, ttl=2, delivery=delivery,
+                              compress=compress)
+    return simlax.LaxSimulator(sc, topo, spec, get_rep("impl2"), cfg)
+
+
+def audit_lax_engine(engines, out: dict) -> None:
+    for delivery in engines:
+        for compress in (None, "int8"):
+            sim = _make_sim(delivery, compress)
+            text = sim.lower_scan().compile().as_text()
+            res = hlo_cost.analyze(text)
+            problems = []
+            if "f64[" in text:
+                problems.append("f64 present in compiled scan")
+            if total_collectives(res) != 0:
+                problems.append(
+                    f"single-device scan lowered {total_collectives(res)} "
+                    "collectives")
+            ticks = sim.cfg.ticks
+            if ticks not in res.while_trips:
+                problems.append(
+                    f"no while loop with static trip count {ticks}: the "
+                    f"tick scan was unrolled or split (trips="
+                    f"{res.while_trips})")
+            has_s8 = "s8[" in text
+            if compress == "int8" and not has_s8:
+                problems.append("int8 engine compiled without any s8 op")
+            if compress is None and has_s8:
+                problems.append("fp32 engine unexpectedly contains s8")
+            if while_carry_has(text, "s8["):
+                problems.append(
+                    "s8 in a while-loop carry: the wire roundtrip must be "
+                    "confined to the tick body (committed params stay f32)")
+            key = f"lax/{delivery}/{compress or 'fp32'}"
+            out[key] = {
+                "ok": not problems,
+                "collectives": total_collectives(res),
+                "while_trips": sorted(res.while_trips),
+                "has_s8": has_s8,
+                "problems": problems,
+            }
+            print(f"hlo-audit,{'ok' if not problems else 'FAIL'},{key},"
+                  f"trips={sorted(res.while_trips)},s8={has_s8}"
+                  + ("," + ";".join(problems) if problems else ""))
+
+
+# -------------------------------------------------------------- retrace guard
+def audit_retrace(out: dict) -> None:
+    """Two simulators over the SAME scenario/topology/spec objects and an
+    equal config must share ONE compiled scan: run both, read the shared
+    tracecheck counter. (The cache keys bound train/eval fns by identity,
+    so the scenario object must be shared — a fresh scenario is a
+    legitimately different federation. lower_scan also traces, so this
+    uses a config distinct from the lax-engine cells.)"""
+    simlax.clear_scan_cache()
+    n = 8
+    topo = topology_lib.kregular(n, 2)
+    sc = scenarios.toy_scenario(n, dim=8, malicious=(0,))
+    spec = FederationSpec.build(
+        n, malicious=(0,),
+        initial_countdown=[1 + (3 * i) % 4 for i in range(n)])
+    cfg = simlax.SimLaxConfig(ticks=10, seed=0, train_interval=(4, 4),
+                              latency=1, ttl=2, delivery="compact",
+                              compress=None)
+    sim_a = simlax.LaxSimulator(sc, topo, spec, get_rep("impl2"), cfg)
+    sim_b = simlax.LaxSimulator(sc, topo, spec, get_rep("impl2"), cfg)
+    sim_a.run()
+    sim_b.run()
+    traces = sim_a.trace_counter.count
+    shared = sim_a.trace_counter is sim_b.trace_counter
+    problems = []
+    if not shared:
+        problems.append("same-config simulators did not share a compiled "
+                        "scan (cache key drift)")
+    if traces != 1:
+        problems.append(
+            f"two same-shape runs traced {traces}x (expected 1): a retrace "
+            "means jit saw unstable static inputs")
+    out["retrace/single"] = {"ok": not problems, "collectives": 0,
+                             "traces": traces, "problems": problems}
+    print(f"hlo-audit,{'ok' if not problems else 'FAIL'},retrace/single,"
+          f"traces={traces}"
+          + ("," + ";".join(problems) if problems else ""))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--json", metavar="OUT",
+                    default="experiments/hlo_audit.json",
+                    help="output path (joined into check_regress)")
+    ap.add_argument("--quick", action="store_true",
+                    help="one topology / one engine (test smoke)")
+    args = ap.parse_args(argv)
+
+    F = min(8, jax.device_count())
+    if F < 2:
+        print("hlo-audit,FAIL,setup,need >=2 devices — run via "
+              "`python tools/hlo_audit.py` so XLA_FLAGS is set before jax "
+              "imports")
+        return 1
+
+    rows: dict = {}
+    if args.quick:
+        round_cells = [("ring", 1, None), ("ring", 1, "int8")]
+        engines = ("compact",)
+    else:
+        round_cells = [("ring", 1, None), ("ring", 1, "int8"),
+                       ("ring", 2, None), ("ring", 2, "int8"),
+                       ("erdos", 2, None), ("erdos", 2, "int8")]
+        engines = ("compact", "sparse", "dense")
+    audit_gossip_round(F, round_cells, rows)
+    audit_lax_engine(engines, rows)
+    audit_retrace(rows)
+
+    payload = {"hlo_audit": rows}
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w", encoding="utf-8") as fh:
+            json.dump(payload, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+    bad = [k for k, r in rows.items() if not r["ok"]]
+    print(f"hlo-audit,summary,cells={len(rows)},failed={len(bad)}"
+          + ("," + ";".join(bad) if bad else ""))
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
