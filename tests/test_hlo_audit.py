@@ -73,3 +73,10 @@ def test_quick_audit_passes(tmp_path):
     # int8 ships strictly fewer permute bytes than fp32 on the same cell
     assert (rows["round/ring/ttl1/int8"]["permute_bytes"]
             < 0.3 * rows["round/ring/ttl1/fp32"]["permute_bytes"])
+    # vmapped B=2 engine: batch axis, not collectives, not an unrolled loop
+    for compress in ("fp32", "int8"):
+        row = rows[f"batched/compact/{compress}"]
+        assert row["ok"], row["problems"]
+        assert row["collectives"] == 0
+        assert 12 in row["while_trips"]  # the tick loop survived vmap
+        assert row["has_s8"] == (compress == "int8")

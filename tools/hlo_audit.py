@@ -32,6 +32,11 @@ lax engine (per delivery engine x compress):
     full precision
   * no collectives, no f64
 
+batched engine (per delivery engine x compress):
+  * the same invariants over the VMAPPED B=2 heterogeneous-federation
+    scan: vmap must add a batch axis, not collectives, not an unrolled
+    tick loop, and not s8 leaking into the while carry
+
 retrace guard:
   * two same-config ``LaxSimulator``s share one compiled scan: the
     ``core/tracecheck.py`` counter reads exactly 1 after both runs
@@ -65,7 +70,10 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
 from repro.chain import scenarios, simlax  # noqa: E402
-from repro.chain.attacks import FederationSpec  # noqa: E402
+from repro.chain.attacks import (  # noqa: E402
+    BatchedFederationSpec,
+    FederationSpec,
+)
 from repro.core import gossip as gossip_lib  # noqa: E402
 from repro.core import topology as topology_lib  # noqa: E402
 from repro.core.reputation import get as get_rep  # noqa: E402
@@ -236,45 +244,85 @@ def _make_sim(delivery: str, compress, n: int = 10, ticks: int = 12):
     return simlax.LaxSimulator(sc, topo, spec, get_rep("impl2"), cfg)
 
 
+def _scan_cell(sim, compress, key: str, out: dict) -> None:
+    """Shared tick-scan invariants: the single-federation and the vmapped
+    batched engine compile to the same structural shape (one while loop at
+    cfg.ticks trips, no collectives, quantization confined to the body)."""
+    text = sim.lower_scan().compile().as_text()
+    res = hlo_cost.analyze(text)
+    problems = []
+    if "f64[" in text:
+        problems.append("f64 present in compiled scan")
+    if total_collectives(res) != 0:
+        problems.append(
+            f"single-device scan lowered {total_collectives(res)} "
+            "collectives")
+    ticks = sim.cfg.ticks
+    if ticks not in res.while_trips:
+        problems.append(
+            f"no while loop with static trip count {ticks}: the "
+            f"tick scan was unrolled or split (trips="
+            f"{res.while_trips})")
+    has_s8 = "s8[" in text
+    if compress == "int8" and not has_s8:
+        problems.append("int8 engine compiled without any s8 op")
+    if compress is None and has_s8:
+        problems.append("fp32 engine unexpectedly contains s8")
+    if while_carry_has(text, "s8["):
+        problems.append(
+            "s8 in a while-loop carry: the wire roundtrip must be "
+            "confined to the tick body (committed params stay f32)")
+    out[key] = {
+        "ok": not problems,
+        "collectives": total_collectives(res),
+        "while_trips": sorted(res.while_trips),
+        "has_s8": has_s8,
+        "problems": problems,
+    }
+    print(f"hlo-audit,{'ok' if not problems else 'FAIL'},{key},"
+          f"trips={sorted(res.while_trips)},s8={has_s8}"
+          + ("," + ";".join(problems) if problems else ""))
+
+
 def audit_lax_engine(engines, out: dict) -> None:
     for delivery in engines:
         for compress in (None, "int8"):
             sim = _make_sim(delivery, compress)
-            text = sim.lower_scan().compile().as_text()
-            res = hlo_cost.analyze(text)
-            problems = []
-            if "f64[" in text:
-                problems.append("f64 present in compiled scan")
-            if total_collectives(res) != 0:
-                problems.append(
-                    f"single-device scan lowered {total_collectives(res)} "
-                    "collectives")
-            ticks = sim.cfg.ticks
-            if ticks not in res.while_trips:
-                problems.append(
-                    f"no while loop with static trip count {ticks}: the "
-                    f"tick scan was unrolled or split (trips="
-                    f"{res.while_trips})")
-            has_s8 = "s8[" in text
-            if compress == "int8" and not has_s8:
-                problems.append("int8 engine compiled without any s8 op")
-            if compress is None and has_s8:
-                problems.append("fp32 engine unexpectedly contains s8")
-            if while_carry_has(text, "s8["):
-                problems.append(
-                    "s8 in a while-loop carry: the wire roundtrip must be "
-                    "confined to the tick body (committed params stay f32)")
-            key = f"lax/{delivery}/{compress or 'fp32'}"
-            out[key] = {
-                "ok": not problems,
-                "collectives": total_collectives(res),
-                "while_trips": sorted(res.while_trips),
-                "has_s8": has_s8,
-                "problems": problems,
-            }
-            print(f"hlo-audit,{'ok' if not problems else 'FAIL'},{key},"
-                  f"trips={sorted(res.while_trips)},s8={has_s8}"
-                  + ("," + ";".join(problems) if problems else ""))
+            _scan_cell(sim, compress, f"lax/{delivery}/{compress or 'fp32'}",
+                       out)
+
+
+# -------------------------------------------------------------- batched engine
+def _make_batched_sim(delivery: str, compress, n: int = 10, ticks: int = 12):
+    """B=2 heterogeneous federations (different attacks, a straggler,
+    distinct seeds) — the smallest batch that exercises the vmapped engine's
+    mask/fold plumbing rather than collapsing to a broadcast."""
+    topo = topology_lib.kregular(n, 2)
+    sc = scenarios.toy_scenario(n, dim=8, malicious=(0,))
+    specs = [
+        FederationSpec.build(
+            n, malicious=(0,), attack="gaussian",
+            initial_countdown=[1 + (3 * i) % 4 for i in range(n)]),
+        FederationSpec.build(n, malicious={2: "signflip"},
+                             stragglers={7: 2}),
+    ]
+    bspec = BatchedFederationSpec.build(specs, seeds=(0, 7))
+    cfg = simlax.SimLaxConfig(ticks=ticks, seed=0, train_interval=(4, 4),
+                              latency=1, ttl=2, delivery=delivery,
+                              compress=compress)
+    return simlax.LaxSimulator(sc, topo, bspec, get_rep("impl2"), cfg)
+
+
+def audit_batched_engine(engines, out: dict) -> None:
+    """The vmapped multi-federation scan must keep every single-federation
+    invariant: vmap adds a batch axis, not collectives; the tick loop stays
+    ONE while loop with cfg.ticks static trips (vmap must not force an
+    unroll); int8 stays confined to the body of that loop."""
+    for delivery in engines:
+        for compress in (None, "int8"):
+            sim = _make_batched_sim(delivery, compress)
+            _scan_cell(sim, compress,
+                       f"batched/{delivery}/{compress or 'fp32'}", out)
 
 
 # -------------------------------------------------------------- retrace guard
@@ -343,6 +391,7 @@ def main(argv=None) -> int:
         engines = ("compact", "sparse", "dense")
     audit_gossip_round(F, round_cells, rows)
     audit_lax_engine(engines, rows)
+    audit_batched_engine(engines, rows)
     audit_retrace(rows)
 
     payload = {"hlo_audit": rows}

@@ -1,5 +1,5 @@
 #!/usr/bin/env python3
-"""jaxlint — repo-specific trace-hygiene linter (pure AST, no jax import).
+"""jaxlint — repo-wide trace-hygiene linter (pure AST, no jax import).
 
 The repo's correctness rests on contracts no general-purpose linter checks:
 everything inside the ``lax.scan`` tick loop must stay jit-traceable, PRNG
@@ -7,954 +7,74 @@ keys must flow from the shared ``fold_in(tick)`` stream that keeps heap↔lax
 parity bitwise, result shapes must be pinned by static python-int budgets
 (``jnp.nonzero(size=...)``), and every wire payload must honor
 ``core/compression.py``'s bf16-scale contract. This tool makes those
-contracts machine-checked: it walks the source tree with ``ast`` only
+contracts machine-checked: it parses the source trees with ``ast`` only
 (same dependency discipline as ``tools/docs_check.py`` — runs on a bare
-python, no jax, no PYTHONPATH) and reports findings per rule.
+python, no jax, no PYTHONPATH), builds a repo-wide import + call graph,
+*derives* the jit boundary from actual jit/scan/vmap/pallas_call sites,
+and propagates traced-param taint across module boundaries.
+
+The implementation lives in the ``tools/jaxlintlib/`` package (graph
+build, derived model, taint engine, rules, fixtures, CLI); this file is
+the stable entry point and import surface (``import jaxlint``).
 
 Usage:
-    python tools/jaxlint.py [paths...]      # default: src
+    python tools/jaxlint.py [paths...]        # default: src
+    python tools/jaxlint.py src benchmarks tools   # the CI repo pass
     python tools/jaxlint.py --json out.json src
-    python tools/jaxlint.py --self-test     # every rule vs embedded fixtures
+    python tools/jaxlint.py --self-test       # every rule vs fixtures
+    python tools/jaxlint.py --explain LaxSimulator._scan
+    python tools/jaxlint.py --check-model     # tables vs derived model
 
 Suppression: append ``# jaxlint: ignore[rule-id]`` (comma-separate several
 ids, or ``ignore[*]``) on the offending line. Suppressions are deliberate,
-reviewed escapes — each should carry a rationale comment.
+reviewed escapes — each should carry a rationale comment. A bare
+``# jaxlint: ignore`` (no rule list) is itself a ``bare-ignore`` finding.
 
 Rules (documented in docs/STATIC_ANALYSIS.md):
     nonzero-size         jnp.nonzero/flatnonzero/argwhere/where(1-arg)
-                         without size= in traced code of jitted modules
+                         without size= on traced paths
     host-coercion        float()/int()/bool()/.item()/.tolist() in traced code
     np-in-traced         numpy calls reachable from jitted code paths
-                         (host-side setup allowlisted per function below)
-    traced-control-flow  python if/while/for over scan-carried values
+                         (host-side setup allowlisted per function)
+    traced-control-flow  python if/while/for over traced values
     prngkey-in-scan      jax.random.PRNGKey built inside a scan body
-                         (keys must flow from attacks.attack_fold streams)
-    fp16-wire            float16 dtype literals in wire modules (the scale
-                         contract is bf16: fp16 subnormals zero tiny leaves)
+    prng-reuse           the same key consumed by two jax.random primitives
+                         without an intervening split/fold_in/rebind
+    f64-root             float64 promotion roots in traced code
+    fp16-wire            float16 literals in wire modules OR in any function
+                         on a call path into them
+    cached-closure-capture  data/traced captures in functions feeding
+                         simlax._SCAN_CACHE (must be jit arguments)
+    bare-ignore          `# jaxlint: ignore` without a rule list
 
 Exit status: 0 iff zero unsuppressed findings (and fixtures pass under
---self-test).
+--self-test / tables agree under --check-model).
 """
 from __future__ import annotations
 
-import argparse
-import ast
-import fnmatch
-import io
-import json
 import os
 import sys
-import tokenize
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Set, Tuple
 
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-
-# --------------------------------------------------------------------------
-# repo contract configuration
-# --------------------------------------------------------------------------
-
-# Modules whose bodies are (transitively) jitted: the tick-loop fabric, the
-# gossip round, and the kernels it lowers to. Trace-hygiene rules treat any
-# traced context in these modules as load-bearing.
-JITTED_MODULES = {
-    "repro.chain.simlax",
-    "repro.chain.attacks",
-    "repro.core.gossip",
-    "repro.core.fedavg",
-    "repro.core.compression",
-    "repro.core.reputation",
-    "repro.core.dfl",
-    "repro.kernels.quantize.ref",
-    "repro.kernels.quantize.ops",
-    "repro.kernels.quantize.quantize",
-    "repro.kernels.wfedavg.ref",
-    "repro.kernels.wfedavg.ops",
-    "repro.kernels.wfedavg.wfedavg",
-}
-
-# Functions in jitted modules that are host-side BY DESIGN (static build /
-# result unpacking). numpy is legal here; the rationale records why. A
-# function both allowlisted and *detected* as traced is still flagged —
-# the allowlist cannot mask a real leak into the scan.
-HOST_SIDE_FUNCS = {
-    "repro.chain.simlax": {
-        "LaxSimulator.__init__":
-            "static-build phase: schedules, budgets, slot tables are "
-            "computed once on host and baked as consts",
-        "LaxSimulator.run":
-            "entry point: seeds PRNG, dispatches the jitted scan, "
-            "post-checks overflow on materialized numpy outputs",
-        "LaxSimulator._package":
-            "unpacks device outputs to numpy history records",
-        "LaxSimulator.lower_scan":
-            "audit surface: lowers (never executes) the cached scan",
-        "SimLaxResult.mean_reputation":
-            "result accessor over materialized numpy history",
-    },
-    "repro.chain.attacks": {
-        "FederationSpec.build":
-            "host-side role-sheet expansion (static per federation)",
-        "FederationSpec.attack_groups":
-            "host-side group extraction from the static role sheet",
-        "FederationSpec.attack_union":
-            "host-side registry lookup over the static role sheet",
-        "FederationSpec.attack_key_fns":
-            "host-side construction of the per-group fold_in streams",
-        "BatchedFederationSpec.build":
-            "host-side stacking of member role sheets",
-        "BatchedFederationSpec.attack_union":
-            "host-side union over member role sheets",
-        "BatchedFederationSpec.attack_masks":
-            "host-side (B, G, N) mask table from static role sheets",
-    },
-}
-
-# Extra traced seeds the detector cannot see statically (methods handed to
-# jit/vmap via instance attributes, or called from the other engine).
-TRACED_SEEDS = {
-    "repro.chain.simlax": {"LaxSimulator._scan"},
-    "repro.chain.attacks": {"*.apply"},       # every Attack.apply runs in-scan
-    "repro.core.compression": {"*"},          # fully traced wire codec
-    "repro.core.fedavg": {"*"},               # fully traced aggregation
-    "repro.core.reputation": {"ReputationImpl.*"},
-}
-
-# Modules that put bytes on the wire: float16 literals here bypass the bf16
-# scale contract (PR 7: fp16 subnormal scales silently zeroed tiny leaves).
-WIRE_MODULES = {
-    "repro.core.compression",
-    "repro.core.gossip",
-    "repro.chain.simlax",
-    "repro.kernels.quantize.ref",
-    "repro.kernels.quantize.ops",
-    "repro.kernels.quantize.quantize",
-}
-
-# Call-sites that hand a function to the tracer. Name-style entries apply to
-# bare names (``from jax import vmap``); attr-style to ``<root>.<attr>``.
-TRACING_NAME_FUNCS = {"jit", "vmap", "pmap", "shard_map", "pallas_call",
-                      "scan", "cond", "while_loop", "fori_loop", "switch",
-                      "grad", "value_and_grad", "checkpoint", "remat"}
-TRACING_ATTR_FUNCS = TRACING_NAME_FUNCS | {"custom_vjp", "custom_jvp"}
-# tracing entries whose callee's parameters are ALL traced by construction
-# (scan carry/xs, while/fori carry, cond/switch operands) — the only scope
-# where "python control flow over a parameter-derived name" is a sound rule
-SCAN_BODY_FUNCS = {"scan", "while_loop", "fori_loop", "cond", "switch"}
-
-COERCION_BUILTINS = {"float", "int", "bool"}
-COERCION_METHODS = {"item", "tolist"}
-SIZE_WANTING = {"nonzero", "flatnonzero", "argwhere"}
-# attributes of a traced value that are static python objects (no taint)
-STATIC_ATTRS = {"shape", "dtype", "ndim", "size", "sharding"}
-
-
-@dataclass
-class Finding:
-    rule: str
-    path: str
-    line: int
-    col: int
-    message: str
-    suppressed: bool = False
-
-    def as_dict(self):
-        return {"rule": self.rule, "path": self.path, "line": self.line,
-                "col": self.col, "message": self.message,
-                "suppressed": self.suppressed}
-
-
-@dataclass
-class FuncInfo:
-    node: ast.AST                      # FunctionDef / AsyncFunctionDef / Lambda
-    qualname: str
-    parent: Optional[str]              # lexically enclosing function qualname
-    cls: Optional[str]                 # enclosing class name, if a method
-    traced: bool = False
-    scan_body: bool = False        # passed DIRECTLY to scan/while/cond/...
-    calls: Set[str] = field(default_factory=set)   # resolvable callee names
-
-
-def _module_name(path: str) -> str:
-    """Dotted module name for a repo file (src-rooted for src/)."""
-    rel = os.path.relpath(os.path.abspath(path), REPO)
-    parts = rel.replace(os.sep, "/").split("/")
-    if parts and parts[0] == "src":
-        parts = parts[1:]
-    if parts and parts[-1].endswith(".py"):
-        parts[-1] = parts[-1][:-3]
-    if parts and parts[-1] == "__init__":
-        parts = parts[:-1]
-    return ".".join(parts)
-
-
-def _suppressions(source: str) -> Dict[int, Set[str]]:
-    """line -> set of suppressed rule ids (or {'*'}) from jaxlint comments."""
-    out: Dict[int, Set[str]] = {}
-    try:
-        toks = tokenize.generate_tokens(io.StringIO(source).readline)
-        for tok in toks:
-            if tok.type != tokenize.COMMENT:
-                continue
-            text = tok.string
-            marker = "jaxlint:"
-            if marker not in text:
-                continue
-            rest = text.split(marker, 1)[1].strip()
-            if not rest.startswith("ignore[") or "]" not in rest:
-                continue
-            rules = rest[len("ignore["):rest.index("]")]
-            ids = {r.strip() for r in rules.split(",") if r.strip()}
-            if ids:
-                out.setdefault(tok.start[0], set()).update(ids)
-    except tokenize.TokenError:
-        pass
-    return out
-
-
-class Analyzer:
-    """Single-file analysis: alias tables, function table, traced-context
-    propagation, then the rule passes."""
-
-    def __init__(self, source: str, path: str, module: str):
-        self.source = source
-        self.path = path
-        self.module = module
-        self.tree = ast.parse(source)
-        self.findings: List[Finding] = []
-        self.np_aliases: Set[str] = set()
-        self.jnp_aliases: Set[str] = set()
-        self.lax_aliases: Set[str] = set()
-        self.jax_aliases: Set[str] = set()
-        self.funcs: Dict[str, FuncInfo] = {}
-        self._collect_aliases()
-        self._collect_funcs()
-        self._seed_traced()
-        self._propagate()
-
-    # -- setup ------------------------------------------------------------
-    def _collect_aliases(self):
-        for node in ast.walk(self.tree):
-            if isinstance(node, ast.Import):
-                for a in node.names:
-                    name = a.asname or a.name
-                    if a.name == "numpy":
-                        self.np_aliases.add(name)
-                    elif a.name in ("jax.numpy",):
-                        self.jnp_aliases.add(name)
-                    elif a.name == "jax":
-                        self.jax_aliases.add(name)
-            elif isinstance(node, ast.ImportFrom):
-                if node.module == "jax":
-                    for a in node.names:
-                        name = a.asname or a.name
-                        if a.name == "numpy":
-                            self.jnp_aliases.add(name)
-                        elif a.name == "lax":
-                            self.lax_aliases.add(name)
-                elif node.module == "numpy":
-                    # `from numpy import ...` — treat the imported names as
-                    # numpy calls when they collide with rule targets; rare
-                    # in this repo, so only record the module-as-a-whole case
-                    pass
-
-    def _collect_funcs(self):
-        analyzer = self
-
-        class V(ast.NodeVisitor):
-            def __init__(self):
-                self.stack: List[str] = []     # qualname parts
-                self.fn_stack: List[str] = []  # enclosing function qualnames
-                self.cls_stack: List[str] = []
-
-            def _add(self, node, name):
-                qual = ".".join(self.stack + [name])
-                analyzer.funcs[qual] = FuncInfo(
-                    node=node, qualname=qual,
-                    parent=self.fn_stack[-1] if self.fn_stack else None,
-                    cls=self.cls_stack[-1] if self.cls_stack else None)
-                return qual
-
-            def visit_ClassDef(self, node):
-                self.stack.append(node.name)
-                self.cls_stack.append(node.name)
-                self.generic_visit(node)
-                self.cls_stack.pop()
-                self.stack.pop()
-
-            def _visit_fn(self, node, name):
-                qual = self._add(node, name)
-                self.stack.append(name)
-                self.fn_stack.append(qual)
-                self.generic_visit(node)
-                self.fn_stack.pop()
-                self.stack.pop()
-
-            def visit_FunctionDef(self, node):
-                self._visit_fn(node, node.name)
-
-            def visit_AsyncFunctionDef(self, node):
-                self._visit_fn(node, node.name)
-
-            def visit_Lambda(self, node):
-                self._visit_fn(node, f"<lambda@{node.lineno}>")
-
-        V().visit(self.tree)
-        # call edges: resolvable module-local calls per function
-        for info in self.funcs.values():
-            body = (info.node.body if isinstance(info.node.body, list)
-                    else [info.node.body])
-            for stmt in body:
-                for sub in ast.walk(stmt if isinstance(stmt, ast.AST) else stmt):
-                    if not isinstance(sub, ast.Call):
-                        continue
-                    f = sub.func
-                    if isinstance(f, ast.Name):
-                        info.calls.add(f.id)
-                    elif (isinstance(f, ast.Attribute)
-                          and isinstance(f.value, ast.Name)
-                          and f.value.id in ("self", "cls")):
-                        info.calls.add(f.attr)
-
-    def _is_tracing_entry(self, func: ast.AST) -> Optional[str]:
-        """If `func` is jit/vmap/scan/... return its short name, else None."""
-        if isinstance(func, ast.Name) and func.id in TRACING_NAME_FUNCS:
-            return func.id
-        if isinstance(func, ast.Attribute):
-            attr = func.attr
-            if attr == "map":
-                # only lax.map / jax.lax.map (python's map is not a tracer)
-                v = func.value
-                if isinstance(v, ast.Name) and v.id in self.lax_aliases:
-                    return attr
-                if (isinstance(v, ast.Attribute) and v.attr == "lax"):
-                    return attr
-                return None
-            if attr in TRACING_ATTR_FUNCS:
-                return attr
-        return None
-
-    def _callee_names(self, arg: ast.AST) -> List[str]:
-        """Module-local function names a call argument might refer to."""
-        if isinstance(arg, ast.Name):
-            return [arg.id]
-        if (isinstance(arg, ast.Attribute) and isinstance(arg.value, ast.Name)
-                and arg.value.id in ("self", "cls")):
-            return [arg.attr]
-        if isinstance(arg, ast.Lambda):
-            return [f"<lambda@{arg.lineno}>"]
-        if isinstance(arg, ast.Call):
-            f = arg.func
-            is_partial = ((isinstance(f, ast.Name) and f.id == "partial") or
-                          (isinstance(f, ast.Attribute) and f.attr == "partial"))
-            if is_partial and arg.args:
-                return self._callee_names(arg.args[0])
-        return []
-
-    def _mark_by_short_name(self, short: str, scan_body: bool):
-        for qual, info in self.funcs.items():
-            last = qual.rsplit(".", 1)[-1]
-            if last == short:
-                info.traced = True
-                info.scan_body = info.scan_body or scan_body
-
-    def _seed_traced(self):
-        # (a) config seeds
-        for pattern in TRACED_SEEDS.get(self.module, ()):  # patterns
-            for qual, info in self.funcs.items():
-                if fnmatch.fnmatch(qual, pattern):
-                    info.traced = True
-        # (b) detected: args of tracing calls + jit-ish decorators
-        for node in ast.walk(self.tree):
-            if isinstance(node, ast.Call):
-                entry = self._is_tracing_entry(node.func)
-                if not entry:
-                    continue
-                scan_body = entry in SCAN_BODY_FUNCS
-                for arg in node.args:
-                    for short in self._callee_names(arg):
-                        self._mark_by_short_name(short, scan_body)
-            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
-                for dec in node.decorator_list:
-                    # @jax.jit / @jit(...) / @partial(jax.jit, ...)
-                    target = dec.func if isinstance(dec, ast.Call) else dec
-                    hit = self._is_tracing_entry(target) is not None
-                    if (not hit and isinstance(dec, ast.Call) and dec.args
-                            and isinstance(target, (ast.Name, ast.Attribute))
-                            and (getattr(target, "id", None) == "partial"
-                                 or getattr(target, "attr", None) == "partial")):
-                        hit = self._is_tracing_entry(dec.args[0]) is not None
-                    if hit:
-                        self._mark_by_short_name(node.name, False)
-
-    def _propagate(self):
-        """Fixpoint: lexical nesting + module-local call graph spread the
-        `traced` flag. `scan_body` deliberately does NOT propagate: only a
-        function handed straight to scan/while/cond has all-traced
-        parameters; a helper it calls may take static config args."""
-        changed = True
-        while changed:
-            changed = False
-            for info in self.funcs.values():
-                if not info.traced and info.parent:
-                    p = self.funcs.get(info.parent)
-                    if p and p.traced:
-                        info.traced = True
-                        changed = True
-                if info.traced:
-                    for callee in info.calls:
-                        for q2, i2 in self.funcs.items():
-                            if q2.rsplit(".", 1)[-1] != callee:
-                                continue
-                            if not i2.traced:
-                                i2.traced = True
-                                changed = True
-
-    # -- helpers ----------------------------------------------------------
-    def _enclosing(self, lineno) -> Optional[FuncInfo]:
-        """Innermost function containing a line (by node span)."""
-        best = None
-        best_span = None
-        for info in self.funcs.values():
-            n = info.node
-            end = getattr(n, "end_lineno", n.lineno)
-            if n.lineno <= lineno <= end:
-                span = end - n.lineno
-                if best_span is None or span < best_span:
-                    best, best_span = info, span
-        return best
-
-    def _in_host_allowlist(self, info: FuncInfo) -> Optional[str]:
-        table = HOST_SIDE_FUNCS.get(self.module, {})
-        # a nested helper inherits its outermost allowlisted ancestor
-        cur: Optional[FuncInfo] = info
-        while cur is not None:
-            if cur.qualname in table:
-                return cur.qualname
-            cur = self.funcs.get(cur.parent) if cur.parent else None
-        return None
-
-    def _emit(self, rule, node, message):
-        self.findings.append(Finding(
-            rule=rule, path=self.path, line=node.lineno,
-            col=getattr(node, "col_offset", 0), message=message))
-
-    def _walk_fn_body(self, info: FuncInfo):
-        """Nodes belonging to this function but not to a nested function."""
-        nested = [i.node for i in self.funcs.values() if i.parent == info.qualname]
-        body = (info.node.body if isinstance(info.node.body, list)
-                else [info.node.body])
-        stack = list(body)
-        while stack:
-            n = stack.pop()
-            if not isinstance(n, ast.AST) or n in nested:
-                continue
-            yield n
-            stack.extend(ast.iter_child_nodes(n))
-
-    # -- rules ------------------------------------------------------------
-    def run_rules(self):
-        jitted = self.module in JITTED_MODULES
-        for info in self.funcs.values():
-            host_entry = self._in_host_allowlist(info)
-            # nonzero-size: traced code in jitted modules must pin shapes
-            if jitted and info.traced:
-                self._rule_nonzero(info)
-            # host-coercion / np-in-traced: scoped to jitted modules (plus
-            # direct scan bodies anywhere) — traced helpers elsewhere may
-            # legally compute on *static* args at trace time (e.g. models'
-            # block-index tables), which pure AST cannot distinguish
-            if (jitted and info.traced) or info.scan_body:
-                self._rule_coercion(info)
-            if ((jitted and (info.traced or host_entry is None)
-                 and self.np_aliases) or info.scan_body):
-                self._rule_np(info, detected_traced=info.traced)
-            if info.traced:
-                self._rule_prngkey(info)
-            if info.scan_body:
-                self._rule_control_flow(info)
-        if self.module in WIRE_MODULES:
-            self._rule_fp16()
-
-    def _rule_nonzero(self, info: FuncInfo):
-        for n in self._walk_fn_body(info):
-            if not isinstance(n, ast.Call):
-                continue
-            f = n.func
-            if not (isinstance(f, ast.Attribute) and isinstance(f.value, ast.Name)
-                    and f.value.id in self.jnp_aliases):
-                continue
-            kwnames = {k.arg for k in n.keywords}
-            if f.attr in SIZE_WANTING and "size" not in kwnames:
-                self._emit("nonzero-size", n,
-                           f"jnp.{f.attr} without size= in traced code "
-                           f"({info.qualname}): result shape is data-"
-                           "dependent and cannot be jitted — pin it with a "
-                           "static budget (size=..., fill_value=...)")
-            elif (f.attr == "where" and len(n.args) == 1
-                  and "size" not in kwnames):
-                self._emit("nonzero-size", n,
-                           f"single-arg jnp.where without size= in traced "
-                           f"code ({info.qualname}): use the 3-arg form or "
-                           "jnp.nonzero(size=...)")
-
-    def _rule_coercion(self, info: FuncInfo):
-        for n in self._walk_fn_body(info):
-            if not isinstance(n, ast.Call):
-                continue
-            f = n.func
-            if (isinstance(f, ast.Name) and f.id in COERCION_BUILTINS
-                    and len(n.args) == 1 and not n.keywords
-                    and not isinstance(n.args[0], (ast.Constant,))):
-                self._emit("host-coercion", n,
-                           f"{f.id}() coercion in traced code "
-                           f"({info.qualname}): forces a concrete value "
-                           "mid-trace (ConcretizationTypeError on a tracer, "
-                           "silently baked constant on host data)")
-            elif (isinstance(f, ast.Attribute) and f.attr in COERCION_METHODS
-                  and not isinstance(f.value, ast.Constant)):
-                self._emit("host-coercion", n,
-                           f".{f.attr}() in traced code ({info.qualname}): "
-                           "pulls the value to host mid-trace")
-
-    def _rule_np(self, info: FuncInfo, detected_traced: bool):
-        for n in self._walk_fn_body(info):
-            if not isinstance(n, ast.Call):
-                continue
-            f = n.func
-            root = f
-            while isinstance(root, ast.Attribute):
-                root = root.value
-            if not (isinstance(root, ast.Name) and root.id in self.np_aliases):
-                continue
-            where = ("traced code" if detected_traced
-                     else "a jitted module without a host-side allowlist "
-                          "entry")
-            self._emit("np-in-traced", n,
-                       f"numpy call in {where} ({info.qualname}): numpy "
-                       "ops bake host constants / break tracing — use jnp, "
-                       "or move to the static-build phase and allowlist "
-                       "the function in tools/jaxlint.py with a rationale")
-
-    def _rule_prngkey(self, info: FuncInfo):
-        for n in self._walk_fn_body(info):
-            if not isinstance(n, ast.Call):
-                continue
-            f = n.func
-            if isinstance(f, ast.Attribute) and f.attr in ("PRNGKey", "key"):
-                v = f.value
-                is_random = ((isinstance(v, ast.Name) and v.id == "random") or
-                             (isinstance(v, ast.Attribute)
-                              and v.attr == "random"))
-                if is_random:
-                    self._emit("prngkey-in-scan", n,
-                               f"PRNGKey constructed inside a scan body "
-                               f"({info.qualname}): keys must flow from the "
-                               "fold_in(tick) stream (attacks.attack_fold) "
-                               "or heap/lax parity silently diverges")
-
-    def _rule_control_flow(self, info: FuncInfo):
-        node = info.node
-        params: Set[str] = set()
-        a = node.args
-        for arg in (list(a.posonlyargs) + list(a.args) + list(a.kwonlyargs)
-                    + ([a.vararg] if a.vararg else [])
-                    + ([a.kwarg] if a.kwarg else [])):
-            params.add(arg.arg)
-        tainted = set(params)
-
-        def expr_taints(e: ast.AST) -> bool:
-            """Does this expression carry a loop-carried (traced) value?"""
-            if isinstance(e, ast.Name):
-                return e.id in tainted
-            if isinstance(e, ast.Tuple) or isinstance(e, ast.List):
-                return any(expr_taints(x) for x in e.elts)
-            if isinstance(e, ast.Starred):
-                return expr_taints(e.value)
-            if isinstance(e, ast.Subscript):
-                return expr_taints(e.value)
-            if isinstance(e, ast.Attribute):
-                if e.attr in STATIC_ATTRS:
-                    return False
-                return expr_taints(e.value)
-            if isinstance(e, ast.BinOp):
-                return expr_taints(e.left) or expr_taints(e.right)
-            if isinstance(e, ast.UnaryOp):
-                return expr_taints(e.operand)
-            if isinstance(e, ast.Compare):
-                return (expr_taints(e.left)
-                        or any(expr_taints(c) for c in e.comparators))
-            if isinstance(e, ast.BoolOp):
-                return any(expr_taints(v) for v in e.values)
-            if isinstance(e, ast.Call):
-                # only jnp/lax results stay traced; python calls (len, range,
-                # jax.tree.leaves -> list) launder the taint for *control
-                # flow* purposes (other rules catch the coercions)
-                f = e.func
-                if (isinstance(f, ast.Attribute) and isinstance(f.value, ast.Name)
-                        and f.value.id in (self.jnp_aliases | self.lax_aliases)):
-                    return any(expr_taints(x) for x in e.args)
-                return False
-            return False
-
-        def assign_targets(t: ast.AST, taint: bool):
-            if isinstance(t, ast.Name):
-                (tainted.add if taint else tainted.discard)(t.id)
-            elif isinstance(t, (ast.Tuple, ast.List)):
-                for x in t.elts:
-                    assign_targets(x, taint)
-            elif isinstance(t, ast.Starred):
-                assign_targets(t.value, taint)
-
-        # taint fixpoint over straight-line assignments
-        body_nodes = list(self._walk_fn_body(info))
-        for _ in range(10):
-            before = len(tainted)
-            for n in body_nodes:
-                if isinstance(n, ast.Assign):
-                    taint = expr_taints(n.value)
-                    if taint:
-                        for t in n.targets:
-                            assign_targets(t, True)
-                elif isinstance(n, ast.AugAssign):
-                    if expr_taints(n.value) or expr_taints(n.target):
-                        assign_targets(n.target, True)
-                elif isinstance(n, ast.AnnAssign) and n.value is not None:
-                    if expr_taints(n.value):
-                        assign_targets(n.target, True)
-            if len(tainted) == before:
-                break
-
-        for n in body_nodes:
-            if isinstance(n, ast.If) and expr_taints(n.test):
-                self._emit("traced-control-flow", n,
-                           f"python `if` over a loop-carried value in scan "
-                           f"body {info.qualname}: branch on tracers with "
-                           "lax.cond/jnp.where, not python control flow")
-            elif isinstance(n, ast.While) and expr_taints(n.test):
-                self._emit("traced-control-flow", n,
-                           f"python `while` over a loop-carried value in "
-                           f"scan body {info.qualname}: use lax.while_loop")
-            elif isinstance(n, ast.For) and expr_taints(n.iter):
-                self._emit("traced-control-flow", n,
-                           f"python `for` over a loop-carried value in scan "
-                           f"body {info.qualname}: traced arrays cannot "
-                           "drive python iteration — use lax.scan/vmap")
-
-    def _rule_fp16(self):
-        dtype_roots = self.np_aliases | self.jnp_aliases
-        for node in ast.walk(self.tree):
-            if (isinstance(node, ast.Attribute) and node.attr == "float16"
-                    and isinstance(node.value, ast.Name)
-                    and node.value.id in dtype_roots):
-                self._emit("fp16-wire", node,
-                           "float16 dtype in a wire module: the scale "
-                           "contract is bf16 (fp16 subnormal scales zero "
-                           "small leaves — see core/compression.py)")
-            elif isinstance(node, ast.Call):
-                for sub in list(node.args) + [k.value for k in node.keywords]:
-                    if (isinstance(sub, ast.Constant)
-                            and isinstance(sub.value, str)
-                            and sub.value.lower() in ("float16", "f16", "fp16")):
-                        self._emit("fp16-wire", sub,
-                                   "float16 dtype literal in a wire module: "
-                                   "wire scales are bf16 by contract")
-
-
-def lint_source(source: str, path: str, module: Optional[str] = None,
-                ) -> List[Finding]:
-    """Analyze one source blob; returns findings with suppressions marked."""
-    module = module if module is not None else _module_name(path)
-    try:
-        an = Analyzer(source, path, module)
-    except SyntaxError as e:
-        return [Finding("parse-error", path, e.lineno or 0, 0, str(e))]
-    an.run_rules()
-    sup = _suppressions(source)
-    for f in an.findings:
-        rules = sup.get(f.line, set())
-        if "*" in rules or f.rule in rules:
-            f.suppressed = True
-    return an.findings
-
-
-def lint_paths(paths: List[str]) -> List[Finding]:
-    findings: List[Finding] = []
-    files: List[str] = []
-    for p in paths:
-        if os.path.isfile(p):
-            files.append(p)
-        else:
-            for dirpath, dirnames, filenames in os.walk(p):
-                dirnames[:] = [d for d in dirnames
-                               if d not in ("__pycache__", ".git")]
-                files.extend(os.path.join(dirpath, f)
-                             for f in sorted(filenames) if f.endswith(".py"))
-    for fp in sorted(files):
-        with open(fp, "r", encoding="utf-8") as fh:
-            src = fh.read()
-        findings.extend(lint_source(src, os.path.relpath(fp, REPO)))
-    return findings
-
-
-# --------------------------------------------------------------------------
-# self-test fixtures: (rule, module-to-analyze-as, bad source, good source)
-# --------------------------------------------------------------------------
-
-FIXTURES: List[Tuple[str, str, str, str]] = [
-    ("nonzero-size", "repro.chain.simlax",
-     """
-import jax
-import jax.numpy as jnp
-
-def body(state, t):
-    idx = jnp.nonzero(state > 0)
-    return state, idx
-
-def run(state):
-    return jax.lax.scan(body, state, jnp.arange(4))
-""",
-     """
-import jax
-import jax.numpy as jnp
-
-def body(state, t):
-    idx = jnp.nonzero(state > 0, size=8, fill_value=0)
-    return state, idx
-
-def run(state):
-    return jax.lax.scan(body, state, jnp.arange(4))
-"""),
-    ("nonzero-size", "repro.chain.simlax",
-     """
-import jax
-import jax.numpy as jnp
-
-def picker(mask):
-    return jnp.where(mask)
-
-def go(mask):
-    return jax.jit(picker)(mask)
-""",
-     """
-import jax
-import jax.numpy as jnp
-
-def picker(mask):
-    return jnp.where(mask, 1.0, 0.0)
-
-def go(mask):
-    return jax.jit(picker)(mask)
-"""),
-    ("host-coercion", "repro.chain.simlax",
-     """
-import jax
-import jax.numpy as jnp
-
-def body(state, t):
-    lr = float(state[0])
-    return state * lr, state.item()
-
-def run(state):
-    return jax.lax.scan(body, state, jnp.arange(4))
-""",
-     """
-import jax
-import jax.numpy as jnp
-
-def body(state, t):
-    lr = state[0]
-    return state * lr, state[0]
-
-def run(state):
-    return jax.lax.scan(body, state, jnp.arange(4))
-"""),
-    ("np-in-traced", "repro.chain.simlax",
-     """
-import jax
-import numpy as np
-import jax.numpy as jnp
-
-def body(state, t):
-    noise = np.random.normal(size=3)
-    return state + noise, t
-
-def run(state):
-    return jax.lax.scan(body, state, jnp.arange(4))
-""",
-     """
-import jax
-import jax.numpy as jnp
-
-def body(state, t):
-    noise = jnp.ones((3,))
-    return state + noise, t
-
-def run(state):
-    return jax.lax.scan(body, state, jnp.arange(4))
-"""),
-    ("traced-control-flow", "repro.chain.simlax",
-     """
-import jax
-import jax.numpy as jnp
-
-def body(state, t):
-    if t == 0:
-        state = state * 0
-    return state, t
-
-def run(state):
-    return jax.lax.scan(body, state, jnp.arange(4))
-""",
-     """
-import jax
-import jax.numpy as jnp
-
-def body(state, t):
-    state = jnp.where(t == 0, state * 0, state)
-    return state, t
-
-def run(state):
-    return jax.lax.scan(body, state, jnp.arange(4))
-"""),
-    ("prngkey-in-scan", "repro.chain.simlax",
-     """
-import jax
-import jax.numpy as jnp
-
-def body(state, t):
-    key = jax.random.PRNGKey(0)
-    return state + jax.random.normal(key, state.shape), t
-
-def run(state):
-    return jax.lax.scan(body, state, jnp.arange(4))
-""",
-     """
-import jax
-import jax.numpy as jnp
-
-def body(state, t):
-    key = jax.random.fold_in(state_key, t)
-    return state + jax.random.normal(key, state.shape), t
-
-def run(state):
-    return jax.lax.scan(body, state, jnp.arange(4))
-"""),
-    ("fp16-wire", "repro.core.compression",
-     """
-import jax.numpy as jnp
-
-def pack(scales):
-    return scales.astype(jnp.float16)
-""",
-     """
-import jax.numpy as jnp
-
-def pack(scales):
-    return scales.astype(jnp.bfloat16)
-"""),
-    ("fp16-wire", "repro.core.compression",
-     """
-import jax.numpy as jnp
-
-def pack(scales):
-    return scales.astype("float16")
-""",
-     """
-import jax.numpy as jnp
-
-def pack(scales):
-    return scales.astype("bfloat16")
-"""),
-]
-
-SUPPRESSION_FIXTURE = (
-    "repro.chain.simlax",
-    """
-import jax
-import jax.numpy as jnp
-
-def body(state, t):
-    idx = jnp.nonzero(state > 0)  # jaxlint: ignore[nonzero-size]
-    return state, idx
-
-def run(state):
-    return jax.lax.scan(body, state, jnp.arange(4))
-""")
-
-
-def self_test() -> int:
-    """Every rule must fire on its bad fixture and stay silent on the good
-    one; suppression comments must mark findings suppressed."""
-    failures = []
-    fired: Set[str] = set()
-    for i, (rule, module, bad, good) in enumerate(FIXTURES):
-        bad_hits = [f for f in lint_source(bad, f"<bad:{rule}:{i}>", module)
-                    if f.rule == rule and not f.suppressed]
-        good_hits = [f for f in lint_source(good, f"<good:{rule}:{i}>", module)
-                     if not f.suppressed]
-        if not bad_hits:
-            failures.append(f"{rule}: bad fixture #{i} produced no finding")
-        else:
-            fired.add(rule)
-        if good_hits:
-            failures.append(
-                f"{rule}: good fixture #{i} produced findings: "
-                + "; ".join(f"{f.rule}@{f.line}" for f in good_hits))
-    module, src = SUPPRESSION_FIXTURE
-    sup_hits = lint_source(src, "<suppressed>", module)
-    if not sup_hits or not all(f.suppressed for f in sup_hits):
-        failures.append("suppression: ignore[...] comment did not suppress")
-    all_rules = {"nonzero-size", "host-coercion", "np-in-traced",
-                 "traced-control-flow", "prngkey-in-scan", "fp16-wire"}
-    for missing in sorted(all_rules - fired):
-        failures.append(f"{missing}: no bad fixture fired this rule")
-    for msg in failures:
-        print(f"jaxlint,SELF-TEST-FAIL,{msg}")
-    status = "FAIL" if failures else "OK"
-    print(f"jaxlint,self-test,{status},rules={len(all_rules)},"
-          f"fixtures={len(FIXTURES) + 1}")
-    return 1 if failures else 0
-
-
-def main(argv=None) -> int:
-    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("paths", nargs="*", default=None,
-                    help="files/directories to lint (default: src)")
-    ap.add_argument("--json", metavar="OUT", default=None,
-                    help="also write findings as JSON (- for stdout)")
-    ap.add_argument("--show-suppressed", action="store_true",
-                    help="list suppressed findings too")
-    ap.add_argument("--self-test", action="store_true",
-                    help="run every rule against its embedded fixtures")
-    args = ap.parse_args(argv)
-
-    if args.self_test:
-        return self_test()
-
-    paths = args.paths or [os.path.join(REPO, "src")]
-    findings = lint_paths(paths)
-    active = [f for f in findings if not f.suppressed]
-    suppressed = [f for f in findings if f.suppressed]
-
-    for f in active:
-        print(f"jaxlint,FAIL,{f.rule},{f.path}:{f.line}:{f.col},{f.message}")
-    if args.show_suppressed:
-        for f in suppressed:
-            print(f"jaxlint,suppressed,{f.rule},{f.path}:{f.line}")
-
-    if args.json:
-        payload = json.dumps([f.as_dict() for f in findings], indent=2)
-        if args.json == "-":
-            print(payload)
-        else:
-            with open(args.json, "w", encoding="utf-8") as fh:
-                fh.write(payload + "\n")
-
-    print(f"jaxlint,summary,findings={len(active)},"
-          f"suppressed={len(suppressed)}")
-    return 1 if active else 0
-
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from jaxlintlib import (  # noqa: E402,F401  (re-exported public API)
+    Finding,
+    Model,
+    Project,
+    lint_paths,
+    lint_project,
+    lint_source,
+    main,
+    self_test,
+)
+from jaxlintlib.config import (  # noqa: E402,F401  (contract tables)
+    HOST_SIDE_FUNCS,
+    JITTED_MODULES,
+    TRACED_SEEDS,
+    WIRE_MODULES,
+)
+from jaxlintlib.fixtures import FIXTURES, SUPPRESSION_FIXTURE  # noqa: E402,F401
+from jaxlintlib.project import REPO, module_name as _module_name  # noqa: E402,F401
 
 if __name__ == "__main__":
     sys.exit(main())

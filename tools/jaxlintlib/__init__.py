@@ -1,0 +1,29 @@
+"""jaxlintlib — the repo-wide trace-hygiene analysis engine behind
+``tools/jaxlint.py``.
+
+Layout (each module documented in docs/STATIC_ANALYSIS.md):
+
+    config    the repo contract tables (JITTED_MODULES, TRACED_SEEDS,
+              HOST_SIDE_FUNCS, WIRE_MODULES) — now asserted-consistent
+              overrides over the DERIVED model, not the model itself —
+              plus the syntax sets every pass shares
+    project   parse a file set into modules / functions / import tables /
+              resolvable cross-module call edges (pure ast + tokenize,
+              no jax import)
+    model     the derived jit-boundary model: tracing-entry detection,
+              traced/param-taint propagation across modules, wire-path
+              reverse reachability, scan-cache-fed function derivation,
+              --explain chains, table consistency checks
+    rules     the rule passes over (project, model)
+    fixtures  embedded bad/good sources for --self-test
+    cli       argument parsing, per-tree rule profiles, entry point
+"""
+from jaxlintlib.cli import main  # noqa: F401
+from jaxlintlib.engine import (  # noqa: F401
+    lint_paths,
+    lint_project,
+    lint_source,
+)
+from jaxlintlib.fixtures import self_test  # noqa: F401
+from jaxlintlib.model import Model  # noqa: F401
+from jaxlintlib.project import Finding, Project  # noqa: F401

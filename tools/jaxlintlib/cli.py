@@ -1,0 +1,96 @@
+"""Command-line entry point for jaxlint (invoked via tools/jaxlint.py)."""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import List, Optional
+
+from jaxlintlib.engine import lint_project
+from jaxlintlib.model import Model
+from jaxlintlib.project import REPO, Project
+
+DESCRIPTION = ("jaxlint — repo-wide trace-hygiene linter "
+               "(pure AST, no jax import)")
+
+# the full analysis surface for --explain / --check-model when no paths
+# are given: the derived model is only meaningful over every tree that
+# can hold a tracing site or a cross-module call edge
+DEFAULT_MODEL_PATHS = ("src", "benchmarks", "tools")
+
+
+def _build_project(paths: Optional[List[str]]) -> Project:
+    paths = paths or [os.path.join(REPO, p) for p in DEFAULT_MODEL_PATHS]
+    return Project.from_paths([os.path.abspath(p) for p in paths], REPO)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=DESCRIPTION)
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files/directories to lint (default: src)")
+    ap.add_argument("--json", metavar="OUT", default=None,
+                    help="also write findings as JSON (- for stdout)")
+    ap.add_argument("--show-suppressed", action="store_true",
+                    help="list suppressed findings too")
+    ap.add_argument("--self-test", action="store_true",
+                    help="run every rule against its embedded fixtures")
+    ap.add_argument("--explain", metavar="FUNC", default=None,
+                    help="print the derived traced-context chain for a "
+                         "function (name, Class.method, or module.qualname);"
+                         " analyzes src benchmarks tools unless paths given")
+    ap.add_argument("--check-model", action="store_true",
+                    help="verify the checked-in override tables "
+                         "(JITTED_MODULES/TRACED_SEEDS/HOST_SIDE_FUNCS/"
+                         "WIRE_MODULES) agree with the derived jit-boundary "
+                         "model; exit 1 on any disagreement")
+    args = ap.parse_args(argv)
+
+    if args.self_test:
+        from jaxlintlib.fixtures import self_test
+        return self_test()
+
+    if args.explain is not None:
+        project = _build_project(args.paths)
+        model = Model(project)
+        for line in model.explain(args.explain):
+            print(line)
+        return 0 if project.find_funcs(args.explain) else 1
+
+    if args.check_model:
+        project = _build_project(args.paths)
+        model = Model(project)
+        problems = model.check()
+        for p in problems:
+            print(f"jaxlint,MODEL-MISMATCH,{p}")
+        print(f"jaxlint,check-model,{'FAIL' if problems else 'OK'},"
+              f"problems={len(problems)},modules={len(project.modules)}")
+        return 1 if problems else 0
+
+    paths = args.paths or [os.path.join(REPO, "src")]
+    project = Project.from_paths([os.path.abspath(p) for p in paths], REPO)
+    findings = lint_project(project)
+    active = [f for f in findings if not f.suppressed]
+    suppressed = [f for f in findings if f.suppressed]
+
+    for f in active:
+        print(f"jaxlint,FAIL,{f.rule},{f.path}:{f.line}:{f.col},{f.message}")
+    if args.show_suppressed:
+        for f in suppressed:
+            print(f"jaxlint,suppressed,{f.rule},{f.path}:{f.line}")
+
+    if args.json:
+        payload = json.dumps([f.as_dict() for f in findings], indent=2)
+        if args.json == "-":
+            print(payload)
+        else:
+            with open(args.json, "w", encoding="utf-8") as fh:
+                fh.write(payload + "\n")
+
+    print(f"jaxlint,summary,findings={len(active)},"
+          f"suppressed={len(suppressed)}")
+    return 1 if active else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,65 @@
+"""Lint driver: build Project -> Model -> rules -> suppressed findings.
+
+Suppressions are file-local by construction: each module's
+``# jaxlint: ignore[rule]`` table only applies to findings whose path is
+that module's path — a suppression in module A never silences a
+cross-module finding reported in module B.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, List, Optional
+
+from jaxlintlib import config
+from jaxlintlib.model import Model
+from jaxlintlib.project import REPO, Finding, Project
+
+
+def _apply_suppressions(project: Project,
+                        findings: List[Finding]) -> List[Finding]:
+    sup_by_path: Dict[str, Dict[int, set]] = {
+        m.path: m.suppressions for m in project.modules.values()}
+    for f in findings:
+        rules = sup_by_path.get(f.path, {}).get(f.line, set())
+        if f.rule != "bare-ignore" and ("*" in rules or f.rule in rules):
+            f.suppressed = True
+    return findings
+
+
+def _apply_profiles(project: Project,
+                    findings: List[Finding]) -> List[Finding]:
+    """Per-tree rule profiles (config.TREE_PROFILES): drop findings whose
+    rule is disabled for the tree the file lives in."""
+    tree_by_path = {m.path: m.tree_kind for m in project.modules.values()}
+    out = []
+    for f in findings:
+        disabled = config.TREE_PROFILES.get(tree_by_path.get(f.path, ""),
+                                            frozenset())
+        if f.rule in disabled:
+            continue
+        out.append(f)
+    return out
+
+
+def lint_project(project: Project,
+                 model: Optional[Model] = None) -> List[Finding]:
+    from jaxlintlib.rules import RuleRunner
+    if model is None:
+        model = Model(project)
+    findings = RuleRunner(project, model).run()
+    findings = _apply_profiles(project, findings)
+    return _apply_suppressions(project, findings)
+
+
+def lint_source(source: str, path: str, module: Optional[str] = None,
+                ) -> List[Finding]:
+    """Analyze one source blob (back-compat single-file entry point)."""
+    from jaxlintlib.project import module_name
+    module = module if module is not None else module_name(path)
+    project = Project.single(source, path, module)
+    return lint_project(project)
+
+
+def lint_paths(paths: List[str], root: str = REPO) -> List[Finding]:
+    project = Project.from_paths([os.path.abspath(p) for p in paths], root)
+    return lint_project(project)

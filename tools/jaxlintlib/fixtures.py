@@ -1,0 +1,618 @@
+"""Embedded self-test fixtures: every rule must fire on its bad fixture
+and stay silent on the good one.
+
+A fixture source is either a plain string (single module, analyzed under
+the given dotted module name) or a ``{repo-relative-path: source}`` dict
+— the cross-module form, analyzed as a real multi-file project so the
+taint rules prove their cross-module propagation end-to-end.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Set, Tuple, Union
+
+from jaxlintlib.engine import lint_project, lint_source
+from jaxlintlib.model import Model
+from jaxlintlib.project import Project
+
+Source = Union[str, Dict[str, str]]
+
+FIXTURES: List[Tuple[str, str, Source, Source]] = [
+    ("nonzero-size", "repro.chain.simlax",
+     """
+import jax
+import jax.numpy as jnp
+
+def body(state, t):
+    idx = jnp.nonzero(state > 0)
+    return state, idx
+
+def run(state):
+    return jax.lax.scan(body, state, jnp.arange(4))
+""",
+     """
+import jax
+import jax.numpy as jnp
+
+def body(state, t):
+    idx = jnp.nonzero(state > 0, size=8, fill_value=0)
+    return state, idx
+
+def run(state):
+    return jax.lax.scan(body, state, jnp.arange(4))
+"""),
+    ("nonzero-size", "repro.chain.simlax",
+     """
+import jax
+import jax.numpy as jnp
+
+def picker(mask):
+    return jnp.where(mask)
+
+def go(mask):
+    return jax.jit(picker)(mask)
+""",
+     """
+import jax
+import jax.numpy as jnp
+
+def picker(mask):
+    return jnp.where(mask, 1.0, 0.0)
+
+def go(mask):
+    return jax.jit(picker)(mask)
+"""),
+    # cross-module: the traced scan body lives in simlax, the unpinned
+    # nonzero in a helper module outside JITTED_MODULES — only the
+    # foreign-taint edge can see it
+    ("nonzero-size", "",
+     {"src/repro/chain/simlax.py": """
+import jax
+import jax.numpy as jnp
+from repro.models.helper import active_set
+
+def body(state, t):
+    return state, active_set(state)
+
+def run(state):
+    return jax.lax.scan(body, state, jnp.arange(4))
+""",
+      "src/repro/models/helper.py": """
+import jax.numpy as jnp
+
+def active_set(x):
+    return jnp.nonzero(x > 0)
+"""},
+     {"src/repro/chain/simlax.py": """
+import jax
+import jax.numpy as jnp
+from repro.models.helper import active_set
+
+def body(state, t):
+    return state, active_set(state)
+
+def run(state):
+    return jax.lax.scan(body, state, jnp.arange(4))
+""",
+      "src/repro/models/helper.py": """
+import jax.numpy as jnp
+
+def active_set(x):
+    return jnp.nonzero(x > 0, size=8, fill_value=0)
+"""}),
+    ("host-coercion", "repro.chain.simlax",
+     """
+import jax
+import jax.numpy as jnp
+
+def body(state, t):
+    lr = float(state[0])
+    return state * lr, state.item()
+
+def run(state):
+    return jax.lax.scan(body, state, jnp.arange(4))
+""",
+     """
+import jax
+import jax.numpy as jnp
+
+def body(state, t):
+    lr = state[0]
+    return state * lr, state[0]
+
+def run(state):
+    return jax.lax.scan(body, state, jnp.arange(4))
+"""),
+    # cross-module: the coercion hides in a helper file; the helper's
+    # *static* param stays legal (good fixture coerces untainted config)
+    ("host-coercion", "",
+     {"src/repro/chain/simlax.py": """
+import jax
+import jax.numpy as jnp
+from repro.train.sched import step_size
+
+def body(state, t):
+    return state * step_size(state, 10), t
+
+def run(state):
+    return jax.lax.scan(body, state, jnp.arange(4))
+""",
+      "src/repro/train/sched.py": """
+def step_size(x, horizon):
+    return float(x[0]) / horizon
+"""},
+     {"src/repro/chain/simlax.py": """
+import jax
+import jax.numpy as jnp
+from repro.train.sched import step_size
+
+def body(state, t):
+    return state * step_size(state, 10), t
+
+def run(state):
+    return jax.lax.scan(body, state, jnp.arange(4))
+""",
+      "src/repro/train/sched.py": """
+def step_size(x, horizon):
+    return x[0] / float(horizon)
+"""}),
+    ("np-in-traced", "repro.chain.simlax",
+     """
+import jax
+import numpy as np
+import jax.numpy as jnp
+
+def body(state, t):
+    noise = np.random.normal(size=3)
+    return state + noise, t
+
+def run(state):
+    return jax.lax.scan(body, state, jnp.arange(4))
+""",
+     """
+import jax
+import jax.numpy as jnp
+
+def body(state, t):
+    noise = jnp.ones((3,))
+    return state + noise, t
+
+def run(state):
+    return jax.lax.scan(body, state, jnp.arange(4))
+"""),
+    # cross-module: np.cumsum over a traced value in a helper module the
+    # old module-local engine could not see
+    ("np-in-traced", "",
+     {"src/repro/chain/simlax.py": """
+import jax
+import jax.numpy as jnp
+from repro.models.helper import smooth
+
+def body(state, t):
+    return smooth(state), t
+
+def run(state):
+    return jax.lax.scan(body, state, jnp.arange(4))
+""",
+      "src/repro/models/helper.py": """
+import numpy as np
+
+def smooth(x):
+    return np.cumsum(x)
+"""},
+     {"src/repro/chain/simlax.py": """
+import jax
+import jax.numpy as jnp
+from repro.models.helper import smooth
+
+def body(state, t):
+    return smooth(state), t
+
+def run(state):
+    return jax.lax.scan(body, state, jnp.arange(4))
+""",
+      "src/repro/models/helper.py": """
+import jax.numpy as jnp
+
+def smooth(x):
+    return jnp.cumsum(x)
+"""}),
+    ("traced-control-flow", "repro.chain.simlax",
+     """
+import jax
+import jax.numpy as jnp
+
+def body(state, t):
+    if t == 0:
+        state = state * 0
+    return state, t
+
+def run(state):
+    return jax.lax.scan(body, state, jnp.arange(4))
+""",
+     """
+import jax
+import jax.numpy as jnp
+
+def body(state, t):
+    state = jnp.where(t == 0, state * 0, state)
+    return state, t
+
+def run(state):
+    return jax.lax.scan(body, state, jnp.arange(4))
+"""),
+    # cross-module: the helper branches on its (foreign-tainted) param;
+    # branching on a static attribute of it stays legal
+    ("traced-control-flow", "",
+     {"src/repro/chain/simlax.py": """
+import jax
+import jax.numpy as jnp
+from repro.models.helper import clamp
+
+def body(state, t):
+    return clamp(state), t
+
+def run(state):
+    return jax.lax.scan(body, state, jnp.arange(4))
+""",
+      "src/repro/models/helper.py": """
+import jax.numpy as jnp
+
+def clamp(x):
+    if x > 0:
+        return x
+    return -x
+"""},
+     {"src/repro/chain/simlax.py": """
+import jax
+import jax.numpy as jnp
+from repro.models.helper import clamp
+
+def body(state, t):
+    return clamp(state), t
+
+def run(state):
+    return jax.lax.scan(body, state, jnp.arange(4))
+""",
+      "src/repro/models/helper.py": """
+import jax.numpy as jnp
+
+def clamp(x):
+    if x.ndim == 2:
+        return jnp.abs(x)
+    return jnp.abs(x)
+"""}),
+    ("prngkey-in-scan", "repro.chain.simlax",
+     """
+import jax
+import jax.numpy as jnp
+
+def body(state, t):
+    key = jax.random.PRNGKey(0)
+    return state + jax.random.normal(key, state.shape), t
+
+def run(state):
+    return jax.lax.scan(body, state, jnp.arange(4))
+""",
+     """
+import jax
+import jax.numpy as jnp
+
+def body(state, t):
+    key = jax.random.fold_in(state_key, t)
+    return state + jax.random.normal(key, state.shape), t
+
+def run(state):
+    return jax.lax.scan(body, state, jnp.arange(4))
+"""),
+    ("fp16-wire", "repro.core.compression",
+     """
+import jax.numpy as jnp
+
+def pack(scales):
+    return scales.astype(jnp.float16)
+""",
+     """
+import jax.numpy as jnp
+
+def pack(scales):
+    return scales.astype(jnp.bfloat16)
+"""),
+    ("fp16-wire", "repro.core.compression",
+     """
+import jax.numpy as jnp
+
+def pack(scales):
+    return scales.astype("float16")
+""",
+     """
+import jax.numpy as jnp
+
+def pack(scales):
+    return scales.astype("bfloat16")
+"""),
+    # cross-module: the fp16 cast lives OUTSIDE the wire modules, but the
+    # function's call graph reaches the codec — the payload is corrupted
+    # all the same
+    ("fp16-wire", "",
+     {"src/repro/chain/node.py": """
+import jax.numpy as jnp
+from repro.core.compression import roundtrip
+
+def send(tree):
+    tree = jnp.asarray(tree).astype(jnp.float16)
+    return roundtrip(tree)
+""",
+      "src/repro/core/compression.py": """
+def roundtrip(tree):
+    return tree
+"""},
+     {"src/repro/chain/node.py": """
+import jax.numpy as jnp
+from repro.core.compression import roundtrip
+
+def send(tree):
+    tree = jnp.asarray(tree).astype(jnp.bfloat16)
+    return roundtrip(tree)
+""",
+      "src/repro/core/compression.py": """
+def roundtrip(tree):
+    return tree
+"""}),
+    ("f64-root", "repro.chain.simlax",
+     """
+import jax
+import jax.numpy as jnp
+
+def body(state, t):
+    acc = state.astype(jnp.float64)
+    return acc, t
+
+def run(state):
+    return jax.lax.scan(body, state, jnp.arange(4))
+""",
+     """
+import jax
+import jax.numpy as jnp
+
+def body(state, t):
+    acc = state.astype(jnp.float32)
+    return acc, t
+
+def run(state):
+    return jax.lax.scan(body, state, jnp.arange(4))
+"""),
+    # cross-module dtype contract: the f64 promotion root sits in a helper
+    # module but reaches jitted code through the traced chain
+    ("f64-root", "",
+     {"src/repro/chain/simlax.py": """
+import jax
+import jax.numpy as jnp
+from repro.models.helper import accumulate
+
+def body(state, t):
+    return accumulate(state), t
+
+def run(state):
+    return jax.lax.scan(body, state, jnp.arange(4))
+""",
+      "src/repro/models/helper.py": """
+import jax.numpy as jnp
+
+def accumulate(x):
+    return jnp.asarray(x, dtype="float64")
+"""},
+     {"src/repro/chain/simlax.py": """
+import jax
+import jax.numpy as jnp
+from repro.models.helper import accumulate
+
+def body(state, t):
+    return accumulate(state), t
+
+def run(state):
+    return jax.lax.scan(body, state, jnp.arange(4))
+""",
+      "src/repro/models/helper.py": """
+import jax.numpy as jnp
+
+def accumulate(x):
+    return jnp.asarray(x, dtype="float32")
+"""}),
+    ("prng-reuse", "repro.chain.simlax",
+     """
+import jax
+import jax.numpy as jnp
+
+def body(state, t):
+    key = jax.random.fold_in(state[1], t)
+    a = jax.random.normal(key, (3,))
+    b = jax.random.normal(key, (3,))
+    return state, (a, b)
+
+def run(state):
+    return jax.lax.scan(body, state, jnp.arange(4))
+""",
+     """
+import jax
+import jax.numpy as jnp
+
+def body(state, t):
+    key = jax.random.fold_in(state[1], t)
+    ka, kb = jax.random.split(key)
+    a = jax.random.normal(ka, (3,))
+    b = jax.random.normal(kb, (3,))
+    return state, (a, b)
+
+def run(state):
+    return jax.lax.scan(body, state, jnp.arange(4))
+"""),
+    # fold_in over distinct constants is the repo's stream-derivation
+    # idiom and must NOT count as reuse
+    ("prng-reuse", "repro.chain.simlax",
+     """
+import jax
+import jax.numpy as jnp
+
+def body(state, t):
+    noise = jax.random.normal(state[1], (3,))
+    more = jax.random.uniform(state[1], (3,))
+    return state, (noise, more)
+
+def run(state):
+    return jax.lax.scan(body, state, jnp.arange(4))
+""",
+     """
+import jax
+import jax.numpy as jnp
+
+def body(state, t):
+    noise = jax.random.normal(jax.random.fold_in(state[1], 0), (3,))
+    more = jax.random.uniform(jax.random.fold_in(state[1], 1), (3,))
+    return state, (noise, more)
+
+def run(state):
+    return jax.lax.scan(body, state, jnp.arange(4))
+"""),
+    ("cached-closure-capture", "repro.chain.simlax",
+     """
+import jax
+
+_SCAN_CACHE = {}
+
+def make_sim(train_data, cfg):
+    def dispatch(params, keys):
+        return params, train_data
+    _SCAN_CACHE[cfg] = jax.jit(dispatch)
+    return _SCAN_CACHE[cfg]
+""",
+     """
+import jax
+
+_SCAN_CACHE = {}
+
+def make_sim(train_data, cfg):
+    def dispatch(params, keys, train_data):
+        return params, train_data
+    _SCAN_CACHE[cfg] = jax.jit(dispatch)
+    return _SCAN_CACHE[cfg]
+"""),
+    # cross-module: the cache-fed function captures self._train_data
+    ("cached-closure-capture", "repro.chain.simlax",
+     """
+import jax
+
+_SCAN_CACHE = {}
+
+class Sim:
+    def __init__(self, cfg):
+        _SCAN_CACHE[cfg] = jax.jit(self._scan)
+
+    def _scan(self, params, keys):
+        return params, self._train_data
+""",
+     """
+import jax
+
+_SCAN_CACHE = {}
+
+class Sim:
+    def __init__(self, cfg):
+        _SCAN_CACHE[cfg] = jax.jit(self._scan)
+
+    def _scan(self, params, keys, train_data):
+        return params, train_data
+"""),
+    ("bare-ignore", "repro.chain.simlax",
+     """
+import jax
+import jax.numpy as jnp
+
+def body(state, t):
+    idx = jnp.nonzero(state > 0)  # jaxlint: ignore
+    return state, idx
+
+def run(state):
+    return jax.lax.scan(body, state, jnp.arange(4))
+""",
+     """
+import jax
+import jax.numpy as jnp
+
+def body(state, t):
+    idx = jnp.nonzero(state > 0)  # jaxlint: ignore[nonzero-size]
+    return state, idx
+
+def run(state):
+    return jax.lax.scan(body, state, jnp.arange(4))
+"""),
+]
+
+SUPPRESSION_FIXTURE = (
+    "repro.chain.simlax",
+    """
+import jax
+import jax.numpy as jnp
+
+def body(state, t):
+    idx = jnp.nonzero(state > 0)  # jaxlint: ignore[nonzero-size]
+    return state, idx
+
+def run(state):
+    return jax.lax.scan(body, state, jnp.arange(4))
+""")
+
+SELF_TEST_RULES = {
+    "nonzero-size", "host-coercion", "np-in-traced", "traced-control-flow",
+    "prngkey-in-scan", "fp16-wire", "f64-root", "prng-reuse",
+    "cached-closure-capture", "bare-ignore",
+}
+
+
+def _lint_fixture(src: Source, module: str, tag: str):
+    if isinstance(src, dict):
+        return lint_project(Project.from_sources(src))
+    return lint_source(src, f"<{tag}>", module)
+
+
+def self_test() -> int:
+    """Every rule must fire on its bad fixture and stay silent on the good
+    one; suppression comments must mark findings suppressed; --explain must
+    resolve a traced chain across a module boundary."""
+    failures = []
+    fired: Set[str] = set()
+    for i, (rule, module, bad, good) in enumerate(FIXTURES):
+        bad_hits = [f for f in _lint_fixture(bad, module, f"bad:{rule}:{i}")
+                    if f.rule == rule and not f.suppressed]
+        good_hits = [f for f in _lint_fixture(good, module,
+                                              f"good:{rule}:{i}")
+                     if not f.suppressed]
+        if not bad_hits:
+            failures.append(f"{rule}: bad fixture #{i} produced no finding")
+        else:
+            fired.add(rule)
+        if good_hits:
+            failures.append(
+                f"{rule}: good fixture #{i} produced findings: "
+                + "; ".join(f"{f.rule}@{f.path}:{f.line}"
+                            for f in good_hits))
+    module, src = SUPPRESSION_FIXTURE
+    sup_hits = lint_source(src, "<suppressed>", module)
+    if not sup_hits or not all(f.suppressed for f in sup_hits):
+        failures.append("suppression: ignore[...] comment did not suppress")
+    for missing in sorted(SELF_TEST_RULES - fired):
+        failures.append(f"{missing}: no bad fixture fired this rule")
+    # the acceptance contract for --explain: a derived traced chain that
+    # crosses a module boundary must resolve through the cross-module call
+    xmod = next(bad for rule, _m, bad, _g in FIXTURES
+                if rule == "np-in-traced" and isinstance(bad, dict))
+    model = Model(Project.from_sources(xmod))
+    explain = "\n".join(model.explain("smooth"))
+    if "TRACED" not in explain or "repro.chain.simlax" not in explain:
+        failures.append(
+            "explain: cross-module chain did not resolve: " + explain)
+    for msg in failures:
+        print(f"jaxlint,SELF-TEST-FAIL,{msg}")
+    status = "FAIL" if failures else "OK"
+    print(f"jaxlint,self-test,{status},rules={len(SELF_TEST_RULES)},"
+          f"fixtures={len(FIXTURES) + 1}")
+    return 1 if failures else 0

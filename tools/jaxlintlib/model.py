@@ -1,0 +1,616 @@
+"""The derived jit-boundary model.
+
+Instead of trusting the hand-maintained tables, the model *derives*
+traced contexts from the source:
+
+1. **Tracing entries.** Every ``jit`` / ``vmap`` / ``scan`` /
+   ``pallas_call`` / ``shard_map`` / ... call site and decorator marks its
+   function arguments traced — following local dataflow, so
+   ``counted = count_traces(dispatch); jax.jit(counted)`` derives
+   ``dispatch``, and ``train_v = jax.vmap(self._train_fn, ...)`` chases
+   through the assignment.
+2. **Propagation.** Tracedness spreads through lexical nesting and
+   *resolvable* call edges — now cross-module — with every hop recorded
+   as a :class:`TraceReason` so ``--explain`` can print the chain.
+   Context-manager calls (``with sharding_ctx():``) and the tracing
+   entries themselves do not propagate (their bodies are host-side
+   trace-time plumbing).
+3. **Param taint.** Scan bodies taint every parameter; jit-like entries
+   taint every non-static parameter; taint then flows argument-by-
+   argument through resolvable call sites. Taint that crosses a module
+   boundary is recorded as *foreign* — the license for ``np-in-traced``
+   / ``host-coercion`` / ``traced-control-flow`` to fire on helpers
+   defined in other files.
+4. **Wire reachability.** Any function whose call graph reaches a
+   ``WIRE_MODULES`` module is on the wire path (``fp16-wire`` fires on
+   its body wherever it lives).
+5. **Cache-fed functions.** Functions whose references flow into a
+   ``simlax._SCAN_CACHE`` store outlive the call that created them —
+   the ``cached-closure-capture`` rule's scope.
+
+The checked-in tables (``config.JITTED_MODULES`` etc.) are applied *after*
+derivation as asserted overrides; :meth:`Model.check` reports every
+disagreement between them and the derived model.
+"""
+from __future__ import annotations
+
+import ast
+import fnmatch
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Set
+
+from jaxlintlib import config
+from jaxlintlib.project import FuncInfo, ModuleInfo, Project
+
+
+@dataclass
+class TraceReason:
+    kind: str            # "entry" | "decorator" | "seed-table" | "nesting" | "call"
+    detail: str          # human-readable evidence
+    site_module: str     # module the evidence lives in
+    line: int
+    via: Optional[FuncInfo] = None   # previous hop for chain reasons
+
+
+class TaintInfo:
+    """Intra-function taint: which local names carry traced values, and an
+    ``expr_taints`` oracle the rules reuse."""
+
+    def __init__(self, mod: ModuleInfo, info: FuncInfo, seeds: Set[str]):
+        self.mod = mod
+        self.info = info
+        self.tainted: Set[str] = set(seeds)
+        self._body = list(mod.walk_fn_body(info))
+        self._fixpoint()
+
+    def expr_taints(self, e: ast.AST) -> bool:
+        """Does this expression carry a traced value?"""
+        if isinstance(e, ast.Name):
+            return e.id in self.tainted
+        if isinstance(e, (ast.Tuple, ast.List, ast.Set)):
+            return any(self.expr_taints(x) for x in e.elts)
+        if isinstance(e, ast.Dict):
+            return any(v is not None and self.expr_taints(v)
+                       for v in e.values)
+        if isinstance(e, ast.Starred):
+            return self.expr_taints(e.value)
+        if isinstance(e, ast.Subscript):
+            return self.expr_taints(e.value)
+        if isinstance(e, ast.Attribute):
+            if e.attr in config.STATIC_ATTRS:
+                return False
+            return self.expr_taints(e.value)
+        if isinstance(e, ast.BinOp):
+            return self.expr_taints(e.left) or self.expr_taints(e.right)
+        if isinstance(e, ast.UnaryOp):
+            return self.expr_taints(e.operand)
+        if isinstance(e, ast.IfExp):
+            return self.expr_taints(e.body) or self.expr_taints(e.orelse)
+        if isinstance(e, ast.NamedExpr):
+            return self.expr_taints(e.value)
+        if isinstance(e, ast.Compare):
+            # `x is None` / `x is not None` is trace-time-static structure,
+            # and so is `"bias" in params`: pytree/dict key membership is
+            # python-level structure, fixed at trace time
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in e.ops):
+                return False
+            if (all(isinstance(op, (ast.In, ast.NotIn)) for op in e.ops)
+                    and isinstance(e.left, ast.Constant)
+                    and isinstance(e.left.value, str)):
+                return False
+            return (self.expr_taints(e.left)
+                    or any(self.expr_taints(c) for c in e.comparators))
+        if isinstance(e, ast.BoolOp):
+            return any(self.expr_taints(v) for v in e.values)
+        if isinstance(e, ast.Call):
+            # jnp/lax/jax results stay traced; python calls (len, range,
+            # int(...)) launder the taint for *control flow* purposes —
+            # the coercion rule catches the coercions themselves
+            f = e.func
+            root = f
+            while isinstance(root, ast.Attribute):
+                root = root.value
+            if isinstance(root, ast.Name) and root.id in (
+                    self.mod.jnp_aliases | self.mod.lax_aliases
+                    | self.mod.jax_aliases | self.mod.random_aliases):
+                return any(self.expr_taints(x) for x in e.args) or any(
+                    self.expr_taints(k.value) for k in e.keywords)
+            return False
+        return False
+
+    def _assign_targets(self, t: ast.AST, taint: bool):
+        if isinstance(t, ast.Name):
+            (self.tainted.add if taint else self.tainted.discard)(t.id)
+        elif isinstance(t, (ast.Tuple, ast.List)):
+            for x in t.elts:
+                self._assign_targets(x, taint)
+        elif isinstance(t, ast.Starred):
+            self._assign_targets(t.value, taint)
+
+    def _fixpoint(self):
+        for _ in range(10):
+            before = len(self.tainted)
+            for n in self._body:
+                if isinstance(n, ast.Assign):
+                    if self.expr_taints(n.value):
+                        for t in n.targets:
+                            self._assign_targets(t, True)
+                elif isinstance(n, ast.AugAssign):
+                    if self.expr_taints(n.value) or self.expr_taints(n.target):
+                        self._assign_targets(n.target, True)
+                elif isinstance(n, ast.AnnAssign) and n.value is not None:
+                    if self.expr_taints(n.value):
+                        self._assign_targets(n.target, True)
+                elif isinstance(n, ast.NamedExpr):
+                    if self.expr_taints(n.value):
+                        self._assign_targets(n.target, True)
+                elif isinstance(n, (ast.For, ast.AsyncFor)):
+                    if self.expr_taints(n.iter):
+                        self._assign_targets(n.target, True)
+            if len(self.tainted) == before:
+                break
+
+
+class Model:
+    """Derived jit-boundary model over a :class:`Project`."""
+
+    def __init__(self, project: Project, *,
+                 jitted_modules: Optional[Set[str]] = None,
+                 traced_seeds: Optional[Dict[str, Set[str]]] = None,
+                 host_side: Optional[Dict[str, Dict[str, str]]] = None,
+                 wire_modules: Optional[Set[str]] = None):
+        self.project = project
+        self.jitted_modules = (config.JITTED_MODULES if jitted_modules is None
+                               else jitted_modules)
+        self.traced_seeds = (config.TRACED_SEEDS if traced_seeds is None
+                             else traced_seeds)
+        self.host_side = (config.HOST_SIDE_FUNCS if host_side is None
+                          else host_side)
+        self.wire_modules = (config.WIRE_MODULES if wire_modules is None
+                             else wire_modules)
+        # per (module, pattern): number of functions the seed matched
+        self.seed_matches: Dict[tuple, int] = {}
+        # modules containing at least one *derived* tracing site
+        self.entry_modules: Set[str] = set()
+        self._build()
+
+    # -- construction -----------------------------------------------------
+    def _build(self):
+        for mod in self.project.modules.values():
+            if mod.tree is not None:
+                self._scan_entries(mod)
+                self._scan_cache_stores(mod)
+        # derivation first, seed tables second: a table entry never masks a
+        # derived chain (--explain shows real evidence when it exists, and
+        # check() can tell "confirmed by derivation" from "asserted only")
+        self._propagate_traced()
+        self.derived_traced = {(i.module, i.qualname)
+                               for i in self.project.iter_funcs()
+                               if i.traced}
+        seeded = self._apply_seed_tables()
+        self._propagate_traced(roots=seeded)
+        self._propagate_param_taint()
+        self._wire_reachability()
+
+    def _mark_entry(self, targets: List[FuncInfo], entry: str,
+                    mod: ModuleInfo, line: int, *, scan_body: bool,
+                    tainted: Optional[List[Optional[Set[str]]]] = None,
+                    kind: str = "entry"):
+        self.entry_modules.add(mod.name)
+        for i, info in enumerate(targets):
+            info.traced = True
+            info.scan_body = info.scan_body or scan_body
+            info.add_reason(TraceReason(
+                kind=kind, detail=f"passed to {entry}",
+                site_module=mod.name, line=line))
+            if tainted is not None and tainted[i] is not None:
+                info.tainted_params |= tainted[i]
+
+    @staticmethod
+    def _static_params(info: FuncInfo, call: Optional[ast.Call]) -> Set[str]:
+        """Params excluded from jit taint via literal static_argnums /
+        static_argnames."""
+        out: Set[str] = set()
+        params = [p for p in info.params if p not in ("self", "cls")]
+        if call is None:
+            return out
+
+        def ints(node):
+            if isinstance(node, ast.Constant) and isinstance(node.value, int):
+                return [node.value]
+            if isinstance(node, (ast.Tuple, ast.List)):
+                return [v for e in node.elts for v in ints(e)]
+            return []
+
+        def strs(node):
+            if isinstance(node, ast.Constant) and isinstance(node.value, str):
+                return [node.value]
+            if isinstance(node, (ast.Tuple, ast.List)):
+                return [v for e in node.elts for v in strs(e)]
+            return []
+
+        for kw in call.keywords:
+            if kw.arg == "static_argnums":
+                for i in ints(kw.value):
+                    if 0 <= i < len(params):
+                        out.add(params[i])
+            elif kw.arg == "static_argnames":
+                out.update(strs(kw.value))
+        return out
+
+    def _entry_taint(self, entry: str, info: FuncInfo,
+                     call: Optional[ast.Call]) -> Optional[Set[str]]:
+        nonself = {p for p in info.params if p not in ("self", "cls")}
+        if entry in config.SCAN_BODY_FUNCS:
+            return nonself
+        if entry in config.JIT_PARAM_FUNCS or entry == "map":
+            return nonself - self._static_params(info, call)
+        return None
+
+    def _scan_entries(self, mod: ModuleInfo):
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call):
+                entry = mod.tracing_entry(node.func)
+                if not entry:
+                    continue
+                scope = mod.enclosing(node)
+                scan_body = entry in config.SCAN_BODY_FUNCS
+                for arg in node.args:
+                    targets = self.project.resolve_funcref(mod, scope, arg)
+                    self._mark_entry(
+                        targets, entry, mod, node.lineno,
+                        scan_body=scan_body,
+                        tainted=[self._entry_taint(entry, t, node)
+                                 for t in targets])
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    # @jax.jit / @jit(...) / @partial(jax.jit, ...)
+                    target = dec.func if isinstance(dec, ast.Call) else dec
+                    entry = mod.tracing_entry(target)
+                    call = dec if isinstance(dec, ast.Call) else None
+                    if (entry is None and isinstance(dec, ast.Call)
+                            and dec.args
+                            and isinstance(target, (ast.Name, ast.Attribute))
+                            and (getattr(target, "id", None) == "partial"
+                                 or getattr(target, "attr", None)
+                                 == "partial")):
+                        entry = mod.tracing_entry(dec.args[0])
+                    if entry is None:
+                        continue
+                    scope = mod.enclosing(node)
+                    # the decorated function itself
+                    targets = [i for i in mod.funcs.values()
+                               if i.node is node]
+                    self._mark_entry(
+                        targets, f"@{entry}", mod, node.lineno,
+                        scan_body=entry in config.SCAN_BODY_FUNCS,
+                        tainted=[self._entry_taint(entry, t, call)
+                                 for t in targets],
+                        kind="decorator")
+
+    def _scan_cache_stores(self, mod: ModuleInfo):
+        def is_cache(base: ast.AST) -> bool:
+            return ((isinstance(base, ast.Name)
+                     and base.id in config.SCAN_CACHE_NAMES)
+                    or (isinstance(base, ast.Attribute)
+                        and base.attr in config.SCAN_CACHE_NAMES))
+
+        for node in ast.walk(mod.tree):
+            value = None
+            if isinstance(node, ast.Assign):
+                for t in node.targets:
+                    if isinstance(t, ast.Subscript) and is_cache(t.value):
+                        value = node.value
+            elif (isinstance(node, ast.Call)
+                  and isinstance(node.func, ast.Attribute)
+                  and node.func.attr == "setdefault"
+                  and is_cache(node.func.value) and len(node.args) >= 2):
+                value = node.args[1]
+            if value is None:
+                continue
+            scope = mod.enclosing(node)
+            for info in self.project.resolve_funcref(mod, scope, value):
+                if info.cache_fed is None:
+                    info.cache_fed = f"{mod.path}:{node.lineno}"
+
+    def _apply_seed_tables(self) -> List[FuncInfo]:
+        newly: List[FuncInfo] = []
+        for modname, patterns in self.traced_seeds.items():
+            mod = self.project.modules.get(modname)
+            for pattern in sorted(patterns):
+                count = 0
+                if mod is not None:
+                    for qual, info in mod.funcs.items():
+                        if fnmatch.fnmatch(qual, pattern):
+                            count += 1
+                            if not info.traced:
+                                info.traced = True
+                                info.add_reason(TraceReason(
+                                    kind="seed-table",
+                                    detail=f"TRACED_SEEDS[{modname!r}] "
+                                           f"pattern {pattern!r}",
+                                    site_module=modname,
+                                    line=info.node.lineno))
+                                newly.append(info)
+                self.seed_matches[(modname, pattern)] = count
+        return newly
+
+    def _propagate_traced(self, roots: Optional[List[FuncInfo]] = None):
+        """Fixpoint: lexical nesting + resolvable (cross-module) call edges
+        spread `traced`, each hop recorded for --explain. `scan_body` does
+        NOT propagate: only a function handed straight to scan/while/cond
+        has all-traced parameters."""
+        work = (list(roots) if roots is not None
+                else [i for i in self.project.iter_funcs() if i.traced])
+        children: Dict[tuple, List[FuncInfo]] = {}
+        for i in self.project.iter_funcs():
+            if i.parent:
+                children.setdefault((i.module, i.parent), []).append(i)
+        while work:
+            src = work.pop()
+            mod = self.project.mod_of(src)
+            for child in children.get((src.module, src.qualname), ()):
+                if not child.traced:
+                    child.traced = True
+                    child.add_reason(TraceReason(
+                        kind="nesting",
+                        detail=f"nested in {src.qualname}",
+                        site_module=src.module,
+                        line=child.node.lineno, via=src))
+                    work.append(child)
+            for site in src.calls:
+                if site.is_with or site.is_entry:
+                    continue
+                for target in self.project.resolve_call(mod, src, site.call):
+                    if not target.traced:
+                        target.traced = True
+                        target.add_reason(TraceReason(
+                            kind="call",
+                            detail=f"called from {src.module}."
+                                   f"{src.qualname}",
+                            site_module=src.module,
+                            line=site.call.lineno, via=src))
+                        work.append(target)
+
+    def _propagate_param_taint(self):
+        """Worklist: run the intra-function taint fixpoint, push taint
+        argument-by-argument through resolvable call sites (foreign when
+        the edge crosses a module boundary) and into nested closures."""
+        work = [i for i in self.project.iter_funcs()
+                if i.tainted_params or i.scan_body]
+        for info in self.project.iter_funcs():
+            if info.scan_body:
+                info.tainted_params |= {p for p in info.params
+                                        if p not in ("self", "cls")}
+        seen_state: Dict[int, tuple] = {}
+        guard = 0
+        while work and guard < 10000:
+            guard += 1
+            info = work.pop()
+            state = (frozenset(info.tainted_params),
+                     frozenset(info.closure_taint))
+            if seen_state.get(id(info)) == state:
+                continue
+            seen_state[id(info)] = state
+            mod = self.project.mod_of(info)
+            info.taint = TaintInfo(mod, info,
+                                   info.tainted_params | info.closure_taint)
+            ta = info.taint
+            # closures: nested functions inherit tainted free names
+            for child in (i for i in mod.funcs.values()
+                          if i.parent == info.qualname):
+                free = {n.id for n in ast.walk(child.node)
+                        if isinstance(n, ast.Name)
+                        and isinstance(n.ctx, ast.Load)}
+                inherited = (free & ta.tainted) - set(child.params)
+                if not inherited <= child.closure_taint:
+                    child.closure_taint |= inherited
+                    work.append(child)
+            # call sites: map tainted arguments onto callee params
+            for site in info.calls:
+                if site.is_entry:
+                    continue
+                call = site.call
+                # explicit unbound `ClassName.method(obj, ...)` passes self
+                # positionally; every other route to a method (self.m(...),
+                # vmap(self.m, ...)(...)) binds it
+                f = call.func
+                unbound_cls = (
+                    isinstance(f, ast.Attribute)
+                    and isinstance(f.value, ast.Name)
+                    and (f.value.id in mod.classes
+                         or (f.value.id in mod.sym_imports
+                             and self._is_class_import(mod, f.value.id))))
+                for target in self.project.resolve_call(mod, info, call):
+                    params = list(target.params)
+                    offset = 1 if (params and params[0] in ("self", "cls")
+                                   and not unbound_cls) else 0
+                    newly: Set[str] = set()
+                    for i, arg in enumerate(call.args):
+                        if isinstance(arg, ast.Starred):
+                            continue
+                        pi = i + offset
+                        if pi < len(params) and ta.expr_taints(arg):
+                            newly.add(params[pi])
+                    for kw in call.keywords:
+                        if kw.arg and kw.arg in params and \
+                                ta.expr_taints(kw.value):
+                            newly.add(kw.arg)
+                    newly -= target.tainted_params
+                    if not newly:
+                        continue
+                    target.tainted_params |= newly
+                    if target.module != info.module or info.foreign_taint:
+                        origin = (f"{info.module}.{info.qualname}:"
+                                  f"{call.lineno}")
+                        for p in newly:
+                            target.foreign_taint.setdefault(p, origin)
+                    work.append(target)
+        # make sure every func with taint has its TaintInfo computed
+        for info in self.project.iter_funcs():
+            if (info.tainted_params or info.closure_taint) and \
+                    info.taint is None:
+                info.taint = TaintInfo(self.project.mod_of(info), info,
+                                       info.tainted_params
+                                       | info.closure_taint)
+
+    def _is_class_import(self, mod: ModuleInfo, name: str) -> bool:
+        base, sym = mod.sym_imports[name]
+        src = self.project.modules.get(base)
+        return src is not None and sym in src.classes
+
+    def _wire_reachability(self):
+        """Reverse reachability: F.wire_path iff F's resolvable call graph
+        reaches a WIRE_MODULES module."""
+        for info in self.project.iter_funcs():
+            if info.module in self.wire_modules:
+                info.wire_path = True
+        changed = True
+        while changed:
+            changed = False
+            for info in self.project.iter_funcs():
+                if info.wire_path:
+                    continue
+                mod = self.project.mod_of(info)
+                for site in info.calls:
+                    if site.is_with:
+                        continue
+                    hit = any(
+                        t.wire_path or t.module in self.wire_modules
+                        for t in self.project.resolve_call(mod, info,
+                                                           site.call))
+                    if hit:
+                        info.wire_path = True
+                        changed = True
+                        break
+
+    # -- host allowlist ----------------------------------------------------
+    def host_entry(self, mod: ModuleInfo, info: FuncInfo) -> Optional[str]:
+        table = self.host_side.get(mod.name, {})
+        cur: Optional[FuncInfo] = info
+        while cur is not None:
+            if cur.qualname in table:
+                return cur.qualname
+            cur = mod.funcs.get(cur.parent) if cur.parent else None
+        return None
+
+    # -- explain ------------------------------------------------------------
+    def explain(self, query: str) -> List[str]:
+        """Human-readable derived-traced-context chains for a function."""
+        lines: List[str] = []
+        matches = self.project.find_funcs(query)
+        if not matches:
+            return [f"jaxlint,explain,NO-MATCH,{query}"]
+        for info in matches:
+            head = f"{info.module}.{info.qualname}"
+            if not info.traced:
+                lines.append(f"{head}: not traced")
+            else:
+                lines.append(f"{head}: TRACED"
+                             + (" (scan body: every param is a tracer)"
+                                if info.scan_body else ""))
+                chain, cur, depth = [], info, 0
+                while cur is not None and depth < 20:
+                    r = cur.reasons[0] if cur.reasons else None
+                    if r is None:
+                        break
+                    chain.append(f"  {'  ' * depth}<- {r.kind}: {r.detail} "
+                                 f"[{r.site_module}:{r.line}]")
+                    cur = r.via
+                    depth += 1
+                lines.extend(chain)
+            if info.tainted_params:
+                pts = ", ".join(sorted(info.tainted_params))
+                lines.append(f"  tainted params: {pts}")
+                for p, origin in sorted(info.foreign_taint.items()):
+                    lines.append(f"    {p}: foreign taint via {origin}")
+            if info.wire_path and info.module not in self.wire_modules:
+                lines.append("  on a call path into WIRE_MODULES "
+                             "(fp16-wire applies)")
+            if info.cache_fed:
+                lines.append(f"  feeds a scan cache (stored at "
+                             f"{info.cache_fed})")
+        return lines
+
+    # -- table consistency --------------------------------------------------
+    def check(self) -> List[str]:
+        """Disagreements between the checked-in tables and the derived
+        model. Empty list == consistent."""
+        problems: List[str] = []
+        mods = self.project.modules
+
+        def derived_root(info: FuncInfo) -> Optional[TraceReason]:
+            cur, depth = info, 0
+            while cur is not None and depth < 50:
+                r = cur.reasons[0] if cur.reasons else None
+                if r is None:
+                    return None
+                if r.via is None:
+                    return r
+                cur = r.via
+                depth += 1
+            return None
+
+        asserted = config.ASSERTED_JITTED
+        for m in sorted(asserted):
+            if m not in self.jitted_modules:
+                problems.append(
+                    f"ASSERTED_JITTED entry {m!r} is not in JITTED_MODULES "
+                    "(assertions annotate the operative table, they do not "
+                    "extend it)")
+        for m in sorted(self.jitted_modules):
+            if m not in mods:
+                problems.append(f"JITTED_MODULES entry {m!r} does not exist")
+                continue
+            confirmed = m in self.entry_modules or any(
+                (i.module, i.qualname) in self.derived_traced
+                for i in mods[m].funcs.values())
+            if not confirmed and m not in asserted:
+                problems.append(
+                    f"JITTED_MODULES entry {m!r} is stale: no tracing "
+                    "entry in the module, no derived traced chain reaches "
+                    "it, and no ASSERTED_JITTED rationale covers it")
+            elif confirmed and m in asserted:
+                problems.append(
+                    f"ASSERTED_JITTED entry {m!r} is now confirmed by the "
+                    "derived model — drop the assertion (rationale was: "
+                    f"{asserted[m]})")
+        for (modname, pattern), count in sorted(self.seed_matches.items()):
+            if modname not in mods:
+                problems.append(
+                    f"TRACED_SEEDS module {modname!r} does not exist")
+            elif count == 0:
+                problems.append(
+                    f"TRACED_SEEDS[{modname!r}] pattern {pattern!r} "
+                    "matches no function")
+        for modname, table in sorted(self.host_side.items()):
+            if modname not in mods:
+                problems.append(
+                    f"HOST_SIDE_FUNCS module {modname!r} does not exist")
+                continue
+            for qual in sorted(table):
+                if qual not in mods[modname].funcs:
+                    problems.append(
+                        f"HOST_SIDE_FUNCS entry {modname}:{qual} does "
+                        "not exist")
+        for m in sorted(self.wire_modules):
+            if m not in mods:
+                problems.append(f"WIRE_MODULES entry {m!r} does not exist")
+        # closure: a traced chain rooted in a jitted module must not escape
+        # into an unlisted src module (benchmarks/tools callers are fine —
+        # the jitted-module blanket rules do not apply there)
+        for info in self.project.iter_funcs():
+            if not info.traced or info.module in self.jitted_modules:
+                continue
+            mod = self.project.mod_of(info)
+            if mod.tree_kind != "src":
+                continue
+            root = derived_root(info)
+            if root is not None and root.site_module in \
+                    self.jitted_modules and root.site_module != info.module:
+                problems.append(
+                    f"traced chain rooted in jitted module "
+                    f"{root.site_module} reaches {info.module}."
+                    f"{info.qualname}, but {info.module!r} is not in "
+                    "JITTED_MODULES")
+        return problems

@@ -1,0 +1,539 @@
+"""Parse a file set into a cross-module project graph.
+
+Pure ``ast`` + ``tokenize`` — no jax import, no PYTHONPATH (same
+dependency discipline as ``tools/docs_check.py``). A :class:`Project`
+holds every module's alias tables, import tables, function table and
+call sites; its resolvers turn call/function-reference expressions into
+:class:`FuncInfo` targets across module boundaries (plain names,
+``from``-imports, module-alias attributes, ``self.`` methods,
+``ClassName.method``, lambdas, and ``partial``/wrapper chains followed
+through local assignments).
+"""
+from __future__ import annotations
+
+import ast
+import io
+import os
+import tokenize
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from jaxlintlib import config
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+@dataclass
+class Finding:
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+    suppressed: bool = False
+
+    def as_dict(self):
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "col": self.col, "message": self.message,
+                "suppressed": self.suppressed}
+
+
+@dataclass
+class CallSite:
+    call: ast.Call
+    is_with: bool = False      # a `with ctx():` context manager call — the
+                               # callee runs host-side at trace time, so it
+                               # does not propagate tracedness
+    is_entry: bool = False     # a tracing entry (jit/scan/...): tracedness
+                               # flows to its function ARGUMENTS, not callee
+
+
+@dataclass
+class FuncInfo:
+    node: ast.AST                      # FunctionDef / AsyncFunctionDef / Lambda
+    qualname: str
+    module: str                        # dotted module name
+    parent: Optional[str]              # lexically enclosing function qualname
+    cls: Optional[str]                 # enclosing class name, if a method
+    params: Tuple[str, ...] = ()
+    traced: bool = False
+    scan_body: bool = False            # passed DIRECTLY to scan/while/cond/...
+    calls: List[CallSite] = field(default_factory=list)
+    # --- filled by jaxlintlib.model ---
+    reasons: list = field(default_factory=list)          # List[TraceReason]
+    tainted_params: Set[str] = field(default_factory=set)
+    foreign_taint: Dict[str, str] = field(default_factory=dict)
+    # param -> "module.qual:line" of the cross-module caller that tainted it
+    closure_taint: Set[str] = field(default_factory=set)
+    taint: Optional[object] = None                        # TaintInfo
+    wire_path: bool = False
+    cache_fed: Optional[str] = None    # "path:line" of the cache store
+
+    @property
+    def name(self) -> str:
+        return self.qualname.rsplit(".", 1)[-1]
+
+    def add_reason(self, reason) -> bool:
+        """Record a trace reason once per (kind, via); returns True if new."""
+        key = (reason.kind, reason.via.qualname if reason.via else None)
+        for r in self.reasons:
+            if (r.kind, r.via.qualname if r.via else None) == key:
+                return False
+        self.reasons.append(reason)
+        return True
+
+
+def module_name(path: str, root: str = REPO) -> str:
+    """Dotted module name for a repo file (src-rooted for src/)."""
+    rel = os.path.relpath(os.path.abspath(path), root)
+    parts = rel.replace(os.sep, "/").split("/")
+    if parts and parts[0] == "src":
+        parts = parts[1:]
+    if parts and parts[-1].endswith(".py"):
+        parts[-1] = parts[-1][:-3]
+    if parts and parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+def scan_suppressions(source: str):
+    """Returns (line -> suppressed rule ids, [(line, col) of bare ignores]).
+
+    Only the rule-scoped form ``# jaxlint: ignore[rule-a, rule-b]`` (or
+    ``ignore[*]``) suppresses. A bare ``# jaxlint: ignore`` — which would
+    silently waive *every* rule on the line — is rejected and reported as
+    a ``bare-ignore`` finding instead.
+    """
+    out: Dict[int, Set[str]] = {}
+    bare: List[Tuple[int, int]] = []
+    try:
+        toks = tokenize.generate_tokens(io.StringIO(source).readline)
+        for tok in toks:
+            if tok.type != tokenize.COMMENT:
+                continue
+            text = tok.string
+            marker = "jaxlint:"
+            if marker not in text:
+                continue
+            rest = text.split(marker, 1)[1].strip()
+            if not rest.startswith("ignore"):
+                continue
+            ids: Set[str] = set()
+            if rest.startswith("ignore[") and "]" in rest:
+                rules = rest[len("ignore["):rest.index("]")]
+                ids = {r.strip() for r in rules.split(",") if r.strip()}
+            if ids:
+                out.setdefault(tok.start[0], set()).update(ids)
+            else:
+                bare.append(tok.start)
+    except tokenize.TokenError:
+        pass
+    return out, bare
+
+
+class ModuleInfo:
+    """One parsed file: aliases, imports, functions, classes, call sites."""
+
+    def __init__(self, name: str, path: str, source: str, tree_kind: str):
+        self.name = name
+        self.path = path
+        self.source = source
+        self.tree_kind = tree_kind
+        self.parse_error: Optional[SyntaxError] = None
+        self.tree: Optional[ast.Module] = None
+        self.np_aliases: Set[str] = set()
+        self.jnp_aliases: Set[str] = set()
+        self.lax_aliases: Set[str] = set()
+        self.jax_aliases: Set[str] = set()
+        self.random_aliases: Set[str] = set()   # `from jax import random [as r]`
+        self.mod_imports: Dict[str, str] = {}   # local alias -> dotted module
+        self.sym_imports: Dict[str, Tuple[str, str]] = {}  # name -> (module, symbol)
+        self.classes: Set[str] = set()          # top-level class names
+        self.funcs: Dict[str, FuncInfo] = {}
+        self.suppressions: Dict[int, Set[str]] = {}
+        self.bare_ignores: List[Tuple[int, int]] = []
+        try:
+            self.tree = ast.parse(source)
+        except SyntaxError as e:
+            self.parse_error = e
+            return
+        self.suppressions, self.bare_ignores = scan_suppressions(source)
+        self._collect_imports()
+        self._collect_funcs()
+        self._collect_calls()
+
+    # -- setup ------------------------------------------------------------
+    def _pkg(self) -> str:
+        """Package prefix for resolving relative imports."""
+        if self.path.replace(os.sep, "/").endswith("/__init__.py"):
+            return self.name
+        return self.name.rsplit(".", 1)[0] if "." in self.name else ""
+
+    def _collect_imports(self):
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    name = a.asname or a.name.split(".")[0]
+                    if a.name == "numpy":
+                        self.np_aliases.add(a.asname or a.name)
+                    elif a.name == "jax.numpy":
+                        self.jnp_aliases.add(a.asname or a.name)
+                    elif a.name == "jax":
+                        self.jax_aliases.add(name)
+                    if a.asname:
+                        self.mod_imports[a.asname] = a.name
+                    else:
+                        self.mod_imports[a.name.split(".")[0]] = \
+                            a.name.split(".")[0]
+            elif isinstance(node, ast.ImportFrom):
+                base = node.module or ""
+                if node.level:
+                    pkg_parts = self._pkg().split(".") if self._pkg() else []
+                    up = node.level - 1
+                    pkg_parts = pkg_parts[:len(pkg_parts) - up] if up else \
+                        pkg_parts
+                    base = ".".join(pkg_parts + ([node.module]
+                                                 if node.module else []))
+                if base == "jax":
+                    for a in node.names:
+                        name = a.asname or a.name
+                        if a.name == "numpy":
+                            self.jnp_aliases.add(name)
+                        elif a.name == "lax":
+                            self.lax_aliases.add(name)
+                        elif a.name == "random":
+                            self.random_aliases.add(name)
+                for a in node.names:
+                    name = a.asname or a.name
+                    self.sym_imports[name] = (base, a.name)
+
+    def _collect_funcs(self):
+        mod = self
+
+        class V(ast.NodeVisitor):
+            def __init__(self):
+                self.stack: List[str] = []
+                self.fn_stack: List[str] = []
+                self.cls_stack: List[str] = []
+
+            def _add(self, node, name):
+                qual = ".".join(self.stack + [name])
+                a = node.args
+                params = [arg.arg for arg in
+                          (list(a.posonlyargs) + list(a.args)
+                           + list(a.kwonlyargs)
+                           + ([a.vararg] if a.vararg else [])
+                           + ([a.kwarg] if a.kwarg else []))]
+                mod.funcs[qual] = FuncInfo(
+                    node=node, qualname=qual, module=mod.name,
+                    parent=self.fn_stack[-1] if self.fn_stack else None,
+                    cls=self.cls_stack[-1] if self.cls_stack else None,
+                    params=tuple(params))
+                return qual
+
+            def visit_ClassDef(self, node):
+                if not self.stack:
+                    mod.classes.add(node.name)
+                self.stack.append(node.name)
+                self.cls_stack.append(node.name)
+                self.generic_visit(node)
+                self.cls_stack.pop()
+                self.stack.pop()
+
+            def _visit_fn(self, node, name):
+                qual = self._add(node, name)
+                self.stack.append(name)
+                self.fn_stack.append(qual)
+                self.generic_visit(node)
+                self.fn_stack.pop()
+                self.stack.pop()
+
+            def visit_FunctionDef(self, node):
+                self._visit_fn(node, node.name)
+
+            def visit_AsyncFunctionDef(self, node):
+                self._visit_fn(node, node.name)
+
+            def visit_Lambda(self, node):
+                self._visit_fn(node, f"<lambda@{node.lineno}>")
+
+        V().visit(self.tree)
+
+    def _collect_calls(self):
+        for info in self.funcs.values():
+            with_calls = set()
+            for n in self.walk_fn_body(info):
+                if isinstance(n, (ast.With, ast.AsyncWith)):
+                    for item in n.items:
+                        if isinstance(item.context_expr, ast.Call):
+                            with_calls.add(id(item.context_expr))
+            for n in self.walk_fn_body(info):
+                if isinstance(n, ast.Call):
+                    info.calls.append(CallSite(
+                        call=n, is_with=id(n) in with_calls,
+                        is_entry=self.tracing_entry(n.func) is not None))
+
+    # -- structural helpers -----------------------------------------------
+    def walk_fn_body(self, info: FuncInfo) -> Iterable[ast.AST]:
+        """Nodes belonging to this function but not to a nested function."""
+        nested = {id(i.node) for i in self.funcs.values()
+                  if i.parent == info.qualname}
+        body = (info.node.body if isinstance(info.node.body, list)
+                else [info.node.body])
+        stack = list(body)
+        while stack:
+            n = stack.pop()
+            if not isinstance(n, ast.AST) or id(n) in nested:
+                continue
+            yield n
+            stack.extend(ast.iter_child_nodes(n))
+
+    def enclosing(self, node: ast.AST) -> Optional[FuncInfo]:
+        """Innermost function containing a node (by line span)."""
+        lineno = getattr(node, "lineno", None)
+        if lineno is None:
+            return None
+        best, best_span = None, None
+        for info in self.funcs.values():
+            n = info.node
+            end = getattr(n, "end_lineno", n.lineno)
+            if n.lineno <= lineno <= end:
+                span = end - n.lineno
+                if best_span is None or span < best_span:
+                    best, best_span = info, span
+        return best
+
+    def scope_body(self, scope: Optional[FuncInfo]) -> List[ast.AST]:
+        """Statement list for local-assignment chasing: the function's own
+        body (nested functions excluded) or the module's top level."""
+        if scope is not None:
+            return list(self.walk_fn_body(scope))
+        out = []
+        in_fn = {id(n) for i in self.funcs.values()
+                 for n in ast.walk(i.node)}
+        for n in ast.walk(self.tree):
+            if id(n) not in in_fn:
+                out.append(n)
+        return out
+
+    def tracing_entry(self, func: ast.AST) -> Optional[str]:
+        """If `func` is jit/vmap/scan/... return its short name, else None."""
+        if isinstance(func, ast.Name) and func.id in config.TRACING_NAME_FUNCS:
+            return func.id
+        if isinstance(func, ast.Attribute):
+            attr = func.attr
+            if attr == "map":
+                # only lax.map / jax.lax.map (python's map is not a tracer)
+                v = func.value
+                if isinstance(v, ast.Name) and v.id in self.lax_aliases:
+                    return attr
+                if isinstance(v, ast.Attribute) and v.attr == "lax":
+                    return attr
+                return None
+            if attr in config.TRACING_ATTR_FUNCS:
+                return attr
+        return None
+
+
+class Project:
+    """All modules of a lint run, with cross-module resolution."""
+
+    def __init__(self, modules: List[ModuleInfo]):
+        self.modules: Dict[str, ModuleInfo] = {}
+        for m in modules:
+            self.modules[m.name] = m
+
+    # -- construction -----------------------------------------------------
+    @classmethod
+    def from_paths(cls, paths: List[str], root: str = REPO) -> "Project":
+        files: List[str] = []
+        for p in paths:
+            if os.path.isfile(p):
+                files.append(p)
+            else:
+                for dirpath, dirnames, filenames in os.walk(p):
+                    dirnames[:] = [d for d in dirnames
+                                   if d not in ("__pycache__", ".git")]
+                    files.extend(os.path.join(dirpath, f)
+                                 for f in sorted(filenames)
+                                 if f.endswith(".py"))
+        mods = []
+        for fp in sorted(files):
+            with open(fp, "r", encoding="utf-8") as fh:
+                src = fh.read()
+            rel = os.path.relpath(os.path.abspath(fp), root)
+            mods.append(ModuleInfo(module_name(fp, root), rel, src,
+                                   rel.replace(os.sep, "/").split("/")[0]))
+        return cls(mods)
+
+    @classmethod
+    def from_sources(cls, sources: Dict[str, str]) -> "Project":
+        """In-memory project from {repo-relative-path: source} — the
+        multi-file fixture/test entry point."""
+        mods = []
+        for rel, src in sorted(sources.items()):
+            rel = rel.replace(os.sep, "/")
+            name = rel
+            parts = rel.split("/")
+            if parts and parts[0] == "src":
+                parts = parts[1:]
+            if parts and parts[-1].endswith(".py"):
+                parts[-1] = parts[-1][:-3]
+            if parts and parts[-1] == "__init__":
+                parts = parts[:-1]
+            name = ".".join(parts)
+            mods.append(ModuleInfo(name, rel, src, rel.split("/")[0]))
+        return cls(mods)
+
+    @classmethod
+    def single(cls, source: str, path: str, module: str) -> "Project":
+        """One in-memory module under an explicit dotted name — the
+        lint_source() back-compat path."""
+        return cls([ModuleInfo(module, path, source, "src")])
+
+    # -- iteration --------------------------------------------------------
+    def iter_funcs(self) -> Iterable[FuncInfo]:
+        for m in self.modules.values():
+            yield from m.funcs.values()
+
+    def mod_of(self, info: FuncInfo) -> ModuleInfo:
+        return self.modules[info.module]
+
+    # -- resolution -------------------------------------------------------
+    def _local_by_name(self, mod: ModuleInfo, short: str,
+                       cls_name: Optional[str] = None) -> List[FuncInfo]:
+        hits = [i for i in mod.funcs.values() if i.name == short]
+        if cls_name is not None:
+            scoped = [i for i in hits if i.cls == cls_name]
+            if scoped:
+                return scoped
+        return hits
+
+    def _toplevel_func(self, modname: str, short: str) -> List[FuncInfo]:
+        m = self.modules.get(modname)
+        if m is None:
+            return []
+        info = m.funcs.get(short)
+        return [info] if info is not None else []
+
+    def resolve_funcref(self, mod: ModuleInfo, scope: Optional[FuncInfo],
+                        expr: ast.AST, _depth: int = 0,
+                        _seen: Optional[Set[Tuple[str, str]]] = None,
+                        ) -> List[FuncInfo]:
+        """FuncInfos an expression may refer to (best-effort, cross-module).
+
+        Handles: bare names (local defs, from-imports, local assignments
+        chased through partial/jit/count_traces wrappers and tuples),
+        ``self.method`` / ``cls.method``, ``alias.func`` module attributes,
+        ``ClassName.method``, and lambdas.
+        """
+        if _depth > 6:
+            return []
+        _seen = _seen or set()
+        if isinstance(expr, ast.Lambda):
+            key = f"<lambda@{expr.lineno}>"
+            return [i for i in mod.funcs.values()
+                    if i.name == key and i.node is expr] or \
+                   [i for i in mod.funcs.values() if i.name == key]
+        if isinstance(expr, ast.Name):
+            nm = expr.id
+            if (mod.name, nm) in _seen:
+                return []
+            _seen = _seen | {(mod.name, nm)}
+            # 1. module-local function definitions
+            hits = self._local_by_name(mod, nm,
+                                       scope.cls if scope else None)
+            hits = [h for h in hits if h.cls is None or
+                    (scope is not None and h.cls == scope.cls)]
+            if hits:
+                return hits
+            # 2. from-imports: plain function in the source module
+            if nm in mod.sym_imports:
+                src_mod, sym = mod.sym_imports[nm]
+                got = self._toplevel_func(src_mod, sym)
+                if got:
+                    return got
+            # 3. local assignment dataflow (train_v = jax.vmap(...), etc.)
+            out: List[FuncInfo] = []
+            for n in mod.scope_body(scope):
+                if isinstance(n, ast.Assign):
+                    for t in n.targets:
+                        if isinstance(t, ast.Name) and t.id == nm:
+                            out.extend(self.resolve_funcref(
+                                mod, scope, n.value, _depth + 1, _seen))
+            return out
+        if isinstance(expr, ast.Attribute):
+            v = expr.value
+            attr = expr.attr
+            if isinstance(v, ast.Name):
+                if v.id in ("self", "cls"):
+                    return self._local_by_name(
+                        mod, attr, scope.cls if scope else None)
+                # module alias: `compression.quantize_tensor`
+                target = None
+                if v.id in mod.sym_imports:
+                    base, sym = mod.sym_imports[v.id]
+                    dotted = f"{base}.{sym}" if base else sym
+                    if dotted in self.modules:
+                        target = dotted
+                    elif base in self.modules and sym in \
+                            self.modules[base].classes:
+                        # imported class: ClassName.method
+                        return [i for i in
+                                self.modules[base].funcs.values()
+                                if i.qualname == f"{sym}.{attr}"]
+                if target is None and v.id in mod.mod_imports:
+                    dotted = mod.mod_imports[v.id]
+                    if dotted in self.modules:
+                        target = dotted
+                if target is not None:
+                    return self._toplevel_func(target, attr)
+                # local class: ClassName.method
+                if v.id in mod.classes:
+                    return [i for i in mod.funcs.values()
+                            if i.qualname == f"{v.id}.{attr}"]
+                return []
+            # dotted module path: repro.core.fedavg.tree_mean
+            parts = []
+            cur = expr
+            while isinstance(cur, ast.Attribute):
+                parts.append(cur.attr)
+                cur = cur.value
+            if isinstance(cur, ast.Name):
+                parts.append(cur.id)
+                dotted = ".".join(reversed(parts[1:]))
+                if dotted in self.modules:
+                    return self._toplevel_func(dotted, attr)
+            return []
+        if isinstance(expr, (ast.Tuple, ast.List)):
+            out = []
+            for e in expr.elts:
+                out.extend(self.resolve_funcref(mod, scope, e,
+                                                _depth + 1, _seen))
+            return out
+        if isinstance(expr, ast.Call):
+            f = expr.func
+            short = f.id if isinstance(f, ast.Name) else (
+                f.attr if isinstance(f, ast.Attribute) else None)
+            is_wrap = short in config.WRAPPER_FUNCS
+            is_entry = mod.tracing_entry(f) is not None
+            if (is_wrap or is_entry) and expr.args:
+                return self.resolve_funcref(mod, scope, expr.args[0],
+                                            _depth + 1, _seen)
+        return []
+
+    def resolve_call(self, mod: ModuleInfo, scope: Optional[FuncInfo],
+                     call: ast.Call) -> List[FuncInfo]:
+        return self.resolve_funcref(mod, scope, call.func)
+
+    def find_funcs(self, query: str) -> List[FuncInfo]:
+        """Match '--explain' queries: 'module.Qual.name', 'Qual.name' or a
+        bare function name."""
+        out = []
+        for m in self.modules.values():
+            for q, info in m.funcs.items():
+                full = f"{m.name}.{q}"
+                if query in (full, q, info.name) or full.endswith(
+                        "." + query):
+                    out.append(info)
+        return out

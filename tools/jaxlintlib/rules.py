@@ -1,0 +1,471 @@
+"""Rule passes over a (:class:`Project`, :class:`Model`) pair.
+
+Scoping model (documented per rule in docs/STATIC_ANALYSIS.md):
+
+* *Blanket* scopes are unchanged from the module-local engine: the
+  np/coercion/nonzero rules fire throughout traced functions of
+  ``JITTED_MODULES``, and in direct scan bodies anywhere.
+* *Value-sensitive* (cross-module) firing is new: when a parameter's
+  taint arrived over a **cross-module call edge** (``foreign_taint``),
+  the np/coercion/nonzero/control-flow rules fire on expressions that
+  actually touch a tainted value — wherever the helper is defined. A
+  helper's static config params stay untainted, so trace-time work on
+  them stays legal.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from jaxlintlib import config
+from jaxlintlib.model import Model
+from jaxlintlib.project import Finding, FuncInfo, ModuleInfo, Project
+
+
+class RuleRunner:
+    def __init__(self, project: Project, model: Model):
+        self.project = project
+        self.model = model
+        self.findings: List[Finding] = []
+
+    # -- driver ------------------------------------------------------------
+    def run(self) -> List[Finding]:
+        for mod in self.project.modules.values():
+            if mod.parse_error is not None:
+                e = mod.parse_error
+                self.findings.append(Finding(
+                    "parse-error", mod.path, e.lineno or 0, 0, str(e)))
+                continue
+            self._run_module(mod)
+        # one finding per (rule, site): blanket and value-sensitive scopes
+        # can both match the same expression
+        seen = set()
+        out = []
+        for f in sorted(self.findings,
+                        key=lambda f: (f.path, f.line, f.col, f.rule)):
+            key = (f.rule, f.path, f.line, f.col)
+            if key not in seen:
+                seen.add(key)
+                out.append(f)
+        return out
+
+    def _run_module(self, mod: ModuleInfo):
+        model = self.model
+        jitted = mod.name in model.jitted_modules
+        for line, col in mod.bare_ignores:
+            self._emit_at("bare-ignore", mod, line, col,
+                          "bare `# jaxlint: ignore` would waive every rule "
+                          "on the line — name the rules: "
+                          "`# jaxlint: ignore[rule-a, rule-b]`")
+        for info in mod.funcs.values():
+            host_entry = model.host_entry(mod, info)
+            foreign = bool(info.foreign_taint)
+            # nonzero-size: traced code in jitted modules must pin shapes;
+            # cross-module, a helper whose tainted arg feeds the query
+            if (jitted and info.traced) or foreign:
+                self._rule_nonzero(mod, info,
+                                   blanket=jitted and info.traced)
+            # host-coercion / np-in-traced: blanket in jitted modules (plus
+            # direct scan bodies anywhere) — traced helpers elsewhere may
+            # legally compute on *static* args at trace time, so outside
+            # the jitted set they fire only on foreign-tainted values
+            if (jitted and info.traced) or info.scan_body or foreign:
+                self._rule_coercion(mod, info,
+                                    blanket=(jitted and info.traced)
+                                    or info.scan_body)
+            if ((jitted and (info.traced or host_entry is None)
+                 and mod.np_aliases) or info.scan_body or foreign):
+                self._rule_np(mod, info,
+                              detected_traced=info.traced,
+                              blanket=(jitted and host_entry is None)
+                              or (jitted and info.traced)
+                              or info.scan_body)
+            if info.traced:
+                self._rule_prngkey(mod, info)
+                self._rule_f64(mod, info)
+            if info.traced or info.scan_body:
+                self._rule_prng_reuse(mod, info)
+            if info.scan_body or foreign:
+                self._rule_control_flow(mod, info)
+            if info.wire_path and mod.name not in model.wire_modules:
+                self._rule_fp16(mod, info=info)
+            if info.cache_fed:
+                self._rule_cache_capture(mod, info)
+        if mod.name in model.wire_modules:
+            self._rule_fp16(mod, info=None)
+
+    # -- emit helpers -------------------------------------------------------
+    def _emit(self, rule: str, mod: ModuleInfo, node: ast.AST, message: str):
+        self.findings.append(Finding(
+            rule=rule, path=mod.path, line=node.lineno,
+            col=getattr(node, "col_offset", 0), message=message))
+
+    def _emit_at(self, rule: str, mod: ModuleInfo, line: int, col: int,
+                 message: str):
+        self.findings.append(Finding(rule, mod.path, line, col, message))
+
+    @staticmethod
+    def _origin(info: FuncInfo) -> str:
+        """' (taint entered via ...)' suffix for cross-module messages."""
+        if not info.foreign_taint:
+            return ""
+        p, origin = sorted(info.foreign_taint.items())[0]
+        return f" — param {p!r} tainted via {origin}"
+
+    def _touches_taint(self, info: FuncInfo, call: ast.Call) -> bool:
+        ta = info.taint
+        if ta is None:
+            return False
+        return any(ta.expr_taints(a) for a in call.args) or any(
+            ta.expr_taints(k.value) for k in call.keywords)
+
+    # -- rules --------------------------------------------------------------
+    def _rule_nonzero(self, mod: ModuleInfo, info: FuncInfo, blanket: bool):
+        for n in mod.walk_fn_body(info):
+            if not isinstance(n, ast.Call):
+                continue
+            f = n.func
+            if not (isinstance(f, ast.Attribute)
+                    and isinstance(f.value, ast.Name)
+                    and f.value.id in mod.jnp_aliases):
+                continue
+            if not blanket and not self._touches_taint(info, n):
+                continue
+            kwnames = {k.arg for k in n.keywords}
+            if f.attr in config.SIZE_WANTING and "size" not in kwnames:
+                self._emit("nonzero-size", mod, n,
+                           f"jnp.{f.attr} without size= in traced code "
+                           f"({info.qualname}): result shape is data-"
+                           "dependent and cannot be jitted — pin it with a "
+                           "static budget (size=..., fill_value=...)"
+                           + ("" if blanket else self._origin(info)))
+            elif (f.attr == "where" and len(n.args) == 1
+                  and "size" not in kwnames):
+                self._emit("nonzero-size", mod, n,
+                           f"single-arg jnp.where without size= in traced "
+                           f"code ({info.qualname}): use the 3-arg form or "
+                           "jnp.nonzero(size=...)"
+                           + ("" if blanket else self._origin(info)))
+
+    def _rule_coercion(self, mod: ModuleInfo, info: FuncInfo, blanket: bool):
+        ta = info.taint
+        for n in mod.walk_fn_body(info):
+            if not isinstance(n, ast.Call):
+                continue
+            f = n.func
+            if (isinstance(f, ast.Name) and f.id in config.COERCION_BUILTINS
+                    and len(n.args) == 1 and not n.keywords
+                    and not isinstance(n.args[0], ast.Constant)):
+                if not blanket and not (ta and ta.expr_taints(n.args[0])):
+                    continue
+                self._emit("host-coercion", mod, n,
+                           f"{f.id}() coercion in traced code "
+                           f"({info.qualname}): forces a concrete value "
+                           "mid-trace (ConcretizationTypeError on a tracer, "
+                           "silently baked constant on host data)"
+                           + ("" if blanket else self._origin(info)))
+            elif (isinstance(f, ast.Attribute)
+                  and f.attr in config.COERCION_METHODS
+                  and not isinstance(f.value, ast.Constant)):
+                if not blanket and not (ta and ta.expr_taints(f.value)):
+                    continue
+                self._emit("host-coercion", mod, n,
+                           f".{f.attr}() in traced code ({info.qualname}): "
+                           "pulls the value to host mid-trace"
+                           + ("" if blanket else self._origin(info)))
+
+    def _rule_np(self, mod: ModuleInfo, info: FuncInfo,
+                 detected_traced: bool, blanket: bool):
+        ta = info.taint
+        for n in mod.walk_fn_body(info):
+            if not isinstance(n, ast.Call):
+                continue
+            f = n.func
+            root = f
+            while isinstance(root, ast.Attribute):
+                root = root.value
+            if not (isinstance(root, ast.Name)
+                    and root.id in mod.np_aliases):
+                continue
+            if not blanket:
+                if not ta:
+                    continue
+                touches = any(ta.expr_taints(a) for a in n.args) or any(
+                    ta.expr_taints(k.value) for k in n.keywords)
+                if not touches:
+                    continue
+            where = ("traced code" if detected_traced
+                     else "a jitted module without a host-side allowlist "
+                          "entry")
+            self._emit("np-in-traced", mod, n,
+                       f"numpy call in {where} ({info.qualname}): numpy "
+                       "ops bake host constants / break tracing — use jnp, "
+                       "or move to the static-build phase and allowlist "
+                       "the function in tools/jaxlintlib/config.py with a "
+                       "rationale" + ("" if blanket else self._origin(info)))
+
+    def _rule_prngkey(self, mod: ModuleInfo, info: FuncInfo):
+        for n in mod.walk_fn_body(info):
+            if not isinstance(n, ast.Call):
+                continue
+            f = n.func
+            if isinstance(f, ast.Attribute) and f.attr in ("PRNGKey", "key"):
+                v = f.value
+                is_random = ((isinstance(v, ast.Name)
+                              and (v.id == "random"
+                                   or v.id in mod.random_aliases))
+                             or (isinstance(v, ast.Attribute)
+                                 and v.attr == "random"))
+                if is_random:
+                    self._emit("prngkey-in-scan", mod, n,
+                               f"PRNGKey constructed inside a scan body "
+                               f"({info.qualname}): keys must flow from the "
+                               "fold_in(tick) stream (attacks.attack_fold) "
+                               "or heap/lax parity silently diverges")
+
+    def _rule_control_flow(self, mod: ModuleInfo, info: FuncInfo):
+        ta = info.taint
+        if ta is None:
+            return
+        origin = "" if info.scan_body else self._origin(info)
+        for n in mod.walk_fn_body(info):
+            if isinstance(n, ast.If) and ta.expr_taints(n.test):
+                self._emit("traced-control-flow", mod, n,
+                           f"python `if` over a traced value in "
+                           f"{info.qualname}: branch on tracers with "
+                           "lax.cond/jnp.where, not python control flow"
+                           + origin)
+            elif isinstance(n, ast.While) and ta.expr_taints(n.test):
+                self._emit("traced-control-flow", mod, n,
+                           f"python `while` over a traced value in "
+                           f"{info.qualname}: use lax.while_loop" + origin)
+            elif isinstance(n, ast.For) and ta.expr_taints(n.iter):
+                self._emit("traced-control-flow", mod, n,
+                           f"python `for` over a traced value in "
+                           f"{info.qualname}: traced arrays cannot drive "
+                           "python iteration — use lax.scan/vmap" + origin)
+
+    def _rule_f64(self, mod: ModuleInfo, info: FuncInfo):
+        dtype_roots = mod.np_aliases | mod.jnp_aliases
+        for n in mod.walk_fn_body(info):
+            if (isinstance(n, ast.Attribute)
+                    and n.attr in config.F64_ATTRS
+                    and isinstance(n.value, ast.Name)
+                    and n.value.id in dtype_roots):
+                self._emit("f64-root", mod, n,
+                           f"float64 dtype in traced code "
+                           f"({info.qualname}): an f64 promotion root "
+                           "either upcasts the downstream computation "
+                           "(x64 on) or silently truncates (x64 off) — "
+                           "both break the bitwise heap<->lax parity pin; "
+                           "use float32/bfloat16")
+            elif isinstance(n, ast.Call):
+                f = n.func
+                # .astype(float) / dtype=float: weak f64 root under x64
+                if (isinstance(f, ast.Attribute) and f.attr == "astype"
+                        and n.args
+                        and isinstance(n.args[0], ast.Name)
+                        and n.args[0].id == "float"):
+                    self._emit("f64-root", mod, n,
+                               f".astype(float) in traced code "
+                               f"({info.qualname}): python float means "
+                               "float64 under x64 — name the dtype "
+                               "(jnp.float32)")
+                    continue
+                for kw in n.keywords:
+                    if (kw.arg == "dtype" and isinstance(kw.value, ast.Name)
+                            and kw.value.id == "float"):
+                        self._emit("f64-root", mod, kw.value,
+                                   f"dtype=float in traced code "
+                                   f"({info.qualname}): python float means "
+                                   "float64 under x64 — name the dtype")
+                for sub in list(n.args) + [k.value for k in n.keywords]:
+                    if (isinstance(sub, ast.Constant)
+                            and isinstance(sub.value, str)
+                            and sub.value.lower() in config.F64_STRINGS):
+                        self._emit("f64-root", mod, sub,
+                                   f"'{sub.value}' dtype literal in traced "
+                                   f"code ({info.qualname}): f64 roots "
+                                   "break the parity pin — use float32")
+
+    def _rule_prng_reuse(self, mod: ModuleInfo, info: FuncInfo):
+        """Same key expression consumed by two jax.random primitives with
+        no intervening split/rebind. fold_in is exempt: deriving streams
+        via fold_in(key, i) over distinct constants is the repo idiom."""
+
+        def consumer(call: ast.Call) -> Optional[ast.AST]:
+            f = call.func
+            if isinstance(f, ast.Attribute) and \
+                    f.attr in config.PRNG_CONSUMERS:
+                v = f.value
+                is_random = ((isinstance(v, ast.Name)
+                              and (v.id == "random"
+                                   or v.id in mod.random_aliases))
+                             or (isinstance(v, ast.Attribute)
+                                 and v.attr == "random"))
+                if is_random and call.args:
+                    return call.args[0]
+            return None
+
+        def names_assigned(t: ast.AST, acc: set):
+            if isinstance(t, ast.Name):
+                acc.add(t.id)
+            elif isinstance(t, (ast.Tuple, ast.List, ast.Starred)):
+                for x in getattr(t, "elts", [getattr(t, "value", None)]):
+                    if x is not None:
+                        names_assigned(x, acc)
+
+        nested = {id(i.node) for i in mod.funcs.values()
+                  if i.parent == info.qualname}
+
+        def stmt_calls(stmt: ast.AST):
+            """Calls directly under a statement (nested blocks and nested
+            function bodies excluded)."""
+            block_fields = {"body", "orelse", "finalbody", "handlers"}
+            out = []
+            stack = [(stmt, True)]
+            while stack:
+                n, is_root = stack.pop()
+                if id(n) in nested:
+                    continue
+                if isinstance(n, ast.Call):
+                    out.append(n)
+                for fname, value in ast.iter_fields(n):
+                    if is_root and isinstance(
+                            n, (ast.If, ast.While, ast.For, ast.With,
+                                ast.Try)) and fname in block_fields:
+                        continue
+                    for child in (value if isinstance(value, list)
+                                  else [value]):
+                        if isinstance(child, ast.AST):
+                            stack.append((child, False))
+            return sorted(out, key=lambda c: (c.lineno, c.col_offset))
+
+        def scan_block(stmts, counts):
+            for stmt in stmts:
+                for call in stmt_calls(stmt):
+                    key = consumer(call)
+                    if key is None:
+                        continue
+                    try:
+                        rep = ast.unparse(key)
+                    except Exception:
+                        continue
+                    counts[rep] = counts.get(rep, 0) + 1
+                    if counts[rep] == 2:
+                        self._emit("prng-reuse", mod, call,
+                                   f"key `{rep}` consumed twice in "
+                                   f"{info.qualname} without an "
+                                   "intervening split/fold_in/rebind: "
+                                   "reused keys correlate streams and "
+                                   "silently break the bitwise heap<->lax "
+                                   "parity contract")
+                # rebinding a name retires every key expression built on it
+                assigned: set = set()
+                if isinstance(stmt, ast.Assign):
+                    for t in stmt.targets:
+                        names_assigned(t, assigned)
+                elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+                    names_assigned(stmt.target, assigned)
+                if assigned:
+                    for rep in list(counts):
+                        toks = set(
+                            rep.replace("(", " ").replace(")", " ")
+                            .replace("[", " ").replace("]", " ")
+                            .replace(",", " ").replace(".", " ").split())
+                        if toks & assigned:
+                            del counts[rep]
+                # branches see the prefix counts but not each other's
+                if isinstance(stmt, (ast.If,)):
+                    scan_block(stmt.body, dict(counts))
+                    scan_block(stmt.orelse, dict(counts))
+                elif isinstance(stmt, (ast.For, ast.While, ast.With,
+                                       ast.Try)):
+                    for block in ("body", "orelse", "finalbody"):
+                        scan_block(getattr(stmt, block, []) or [],
+                                   dict(counts))
+
+        body = (info.node.body if isinstance(info.node.body, list)
+                else [info.node.body])
+        scan_block(body, {})
+
+    def _rule_fp16(self, mod: ModuleInfo, info: Optional[FuncInfo]):
+        dtype_roots = mod.np_aliases | mod.jnp_aliases
+        where = ("a wire module" if info is None else
+                 f"{info.qualname}, which is on a call path into a wire "
+                 "module")
+        nodes = (ast.walk(mod.tree) if info is None
+                 else mod.walk_fn_body(info))
+        for node in nodes:
+            if (isinstance(node, ast.Attribute) and node.attr == "float16"
+                    and isinstance(node.value, ast.Name)
+                    and node.value.id in dtype_roots):
+                self._emit("fp16-wire", mod, node,
+                           f"float16 dtype in {where}: the scale "
+                           "contract is bf16 (fp16 subnormal scales zero "
+                           "small leaves — see core/compression.py)")
+            elif isinstance(node, ast.Call):
+                for sub in list(node.args) + [k.value for k in
+                                              node.keywords]:
+                    if (isinstance(sub, ast.Constant)
+                            and isinstance(sub.value, str)
+                            and sub.value.lower() in config.FP16_STRINGS):
+                        self._emit("fp16-wire", mod, sub,
+                                   f"float16 dtype literal in {where}: "
+                                   "wire scales are bf16 by contract")
+
+    def _rule_cache_capture(self, mod: ModuleInfo, info: FuncInfo):
+        """Data-dependent closure captures in a function that feeds a scan
+        cache: the capture outlives the call that created it, so a cached
+        compile silently reuses stale data (the PR 8 bug class — train/
+        eval data must be jit *arguments*)."""
+        params = set(info.params)
+        parent = mod.funcs.get(info.parent) if info.parent else None
+        parent_taint = parent.taint.tainted if parent and parent.taint \
+            else set()
+        local: set = set()
+        for n in mod.walk_fn_body(info):
+            if isinstance(n, ast.Assign):
+                for t in n.targets:
+                    for sub in ast.walk(t):
+                        if isinstance(sub, ast.Name):
+                            local.add(sub.id)
+            elif isinstance(n, (ast.For, ast.AsyncFor)):
+                for sub in ast.walk(n.target):
+                    if isinstance(sub, ast.Name):
+                        local.add(sub.id)
+        module_level = (set(mod.classes) | set(mod.sym_imports)
+                        | set(mod.mod_imports)
+                        | {i.name for i in mod.funcs.values()
+                           if i.parent is None})
+        reported: set = set()
+        for n in mod.walk_fn_body(info):
+            if (isinstance(n, ast.Attribute)
+                    and isinstance(n.value, ast.Name)
+                    and n.value.id in ("self", "cls")
+                    and config.DATA_CAPTURE_RE.match(n.attr)
+                    and n.attr not in reported):
+                reported.add(n.attr)
+                self._emit("cached-closure-capture", mod, n,
+                           f"self.{n.attr} captured by {info.qualname}, "
+                           f"which feeds a scan cache (stored at "
+                           f"{info.cache_fed}): data captured by a cached "
+                           "jitted callable is baked into the compile and "
+                           "goes stale — pass it as a jit argument "
+                           "instead")
+            elif (isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load)
+                  and n.id not in params and n.id not in local
+                  and n.id not in module_level and n.id not in reported):
+                is_data = bool(config.DATA_CAPTURE_RE.match(n.id))
+                is_traced_capture = n.id in parent_taint
+                if is_data or is_traced_capture:
+                    reported.add(n.id)
+                    why = ("matches a federation-data name"
+                           if is_data else
+                           "carries a traced value in the enclosing scope")
+                    self._emit("cached-closure-capture", mod, n,
+                               f"free variable `{n.id}` ({why}) captured "
+                               f"by {info.qualname}, which feeds a scan "
+                               f"cache (stored at {info.cache_fed}): "
+                               "captures outlive the call that created "
+                               "them — pass the value as a jit argument")
