@@ -3,8 +3,11 @@ of the DFL gossip round vs synchronous data-parallel all-reduce, the
 int8-compression saving, a gossip-topology sweep, the frontier-vs-chain
 schedule coverage/collective-count table (`gossip,frontier_vs_chain`), the
 receipt-engine head-to-heads (`gossip,sparse_vs_dense`,
-`gossip,compact_vs_sparse`), and the vectorized simulator's wall-clock
-speedup over the heap reference at large N. The JSON is the input to the
+`gossip,compact_vs_sparse`), the vectorized simulator's wall-clock
+speedup over the heap reference at large N, and the sharded-engine
+sections (`gossip,sharded_vs_single`, `gossip,cond_vs_select`) delegated
+to benchmarks/bench_sharded.py on 8 forced host devices. The JSON is the
+input to the
 CI perf-regression gate (benchmarks/check_regress.py vs
 benchmarks/baselines/).
 
@@ -339,6 +342,11 @@ def main(quick: bool = False):
         "compact_vs_sparse": compact_vs_sparse(quick=quick),
         "frontier_vs_chain": frontier_vs_chain(quick=quick),
     }
+    # the sharded engine needs 8 host devices (this interpreter forced 4):
+    # bench_sharded re-execs itself and persists its own artifact; merging
+    # its sections here puts them under the same check_regress gate
+    from benchmarks import bench_sharded
+    out.update(bench_sharded.main(quick=quick))
     print(f"gossip,dfl_vs_syncdp_fp32,{out['reduction_fp32']}x_fewer_link_bytes")
     print(f"gossip,dfl_vs_syncdp_int8,{out['reduction_int8']}x_fewer_link_bytes")
     return out

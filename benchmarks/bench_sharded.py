@@ -1,0 +1,205 @@
+"""Sharded-engine benchmark: the `gossip,sharded_vs_single` acceptance line
+plus the carried `gossip,cond_vs_select` batching-delta row.
+
+Runs on 8 forced host devices (re-execs itself with XLA_FLAGS when the
+parent interpreter initialized jax with fewer — same pattern as
+bench_gossip): the node axis of the compact scan state is partitioned over
+a `make_fed_mesh(8,1,1)` mesh via shard_map (`delivery="sharded"`), and
+each row times it against the single-device compact engine on the SAME toy
+scenario with activity-matched work-buffer budgets.
+
+* `gossip,sharded_vs_single` — seconds/tick each way at N up to 8192,
+  kregular degree 2, staggered broadcast phases. On a CPU host mesh the
+  shards share the same physical cores, so the "speedup" ratio
+  (single/sharded, higher is better) is an OVERHEAD bound, not a win: the
+  acceptance floor in check_regress (`ACCEPTANCE_FLOORS`) pins the
+  partition + ppermute halo tax, and a drop means the sharded lowering
+  regressed (e.g. an accidental all-gather of the (N, budget) state — the
+  structural twin of this gate lives in tools/hlo_audit.py). The per-N rows
+  double as the nodes-vs-ticks/sec table in docs/SCALING.md.
+* `gossip,cond_vs_select` — the measured cost of the PR 6 deferral: under
+  `BatchedFederationSpec` the scan's `lax.cond`s (train / deliver / eval)
+  lower to `select`, so every federation pays every branch every tick even
+  when its phase is idle. Phase-ALIGNED federations make the delta visible
+  (a single run skips the train branch on 31/32 ticks; the batched run
+  cannot): the row records batched-per-federation vs single seconds/tick.
+  Phase-sorted batching stays deferred — rationale in docs/SWEEPS.md.
+
+Quick mode keeps shards=8 but drops the big-N rows; the JSON is merged into
+experiments/bench_gossip.json by bench_gossip.main() for check_regress.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+
+from repro.chain import attacks, scenarios, simlax
+from repro.core import topology as topology_lib
+from repro.core.reputation import get as get_rep
+
+SHARDS = 8
+
+
+def _pertick(sc, topo, spec, *, delivery, ticks_pair, interval, budget,
+             shards=None, dim_note=None, reps=2, seed=0):
+    """Steady-state seconds/tick of one engine via two-window differencing
+    ((wall(T2)-wall(T1))/(T2-T1), min of `reps` runs each) — cancels
+    trace+compile like benchmarks.harness.engine_pertick_speedup."""
+    t1, t2 = ticks_pair
+    walls, last = {}, None
+    for ticks in (t1, t2):
+        # free the previous window's result before timing this one: at
+        # N=8192 the final slot + reputation state is >1GB, and holding it
+        # across windows adds enough allocator noise to invert the
+        # differencing (observed: wall(T2) <= wall(T1), clamped to floor)
+        last = None
+        cfg = simlax.SimLaxConfig(
+            ticks=ticks, train_interval=(interval, interval), latency=1,
+            ttl=2, record_every=10 ** 9, seed=seed, delivery=delivery,
+            shards=shards, compact_budget=budget)
+        sim = simlax.LaxSimulator(sc, topo, spec, get_rep("impl2"), cfg)
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            last = sim.run()
+            best = min(best, time.perf_counter() - t0)
+        walls[ticks] = best
+    # same 0.1ms/tick floor as the harness: compile-variance guard
+    return max((walls[t2] - walls[t1]) / (t2 - t1), 1e-4), last
+
+
+def sharded_vs_single(quick: bool = False):
+    """Per-tick cost of the shard_map-partitioned engine vs the
+    single-device compact engine, one row per N (shards fixed at 8)."""
+    interval, degree, dim = 64, 2, 16
+    # the N=8192 headline runs even under --quick (CI's mode): like
+    # compact_vs_sparse, the acceptance number must be in the CI JSON —
+    # quick only drops the mid-scale row and shortens the windows
+    sizes = (1024, 8192) if quick else (1024, 2048, 8192)
+    ticks_pair = (16, 80) if quick else (24, 120)
+    rows = []
+    for n in sizes:
+        topo = topology_lib.kregular(n, degree)
+        sc = scenarios.toy_scenario(n, dim=dim, malicious=(0,))
+        spec = attacks.FederationSpec.build(
+            n, malicious=(0,),
+            initial_countdown=[1 + (7 * i) % interval for i in range(n)])
+        # activity-matched work buffers (overflow fails fast, so a tight
+        # bench budget crashes rather than under-measures): staggered
+        # phases land ~n*ball/interval due deliveries per tick (ball = 8 at
+        # degree 2 / ttl 2), 2x headroom; the sharded budget is per-shard
+        global_budget = 2 * n * 8 // interval
+        single_s, res_c = _pertick(
+            sc, topo, spec, delivery="compact", ticks_pair=ticks_pair,
+            interval=interval, budget=global_budget, reps=3)
+        # keep only the scalar before timing the other engine — the full
+        # result pins >1GB of final state at N=8192 (see _pertick)
+        deliveries_c, res_c = res_c.stats["deliveries"], None
+        shard_s, res_s = _pertick(
+            sc, topo, spec, delivery="sharded", ticks_pair=ticks_pair,
+            interval=interval, budget=max(1, global_budget // SHARDS),
+            shards=SHARDS, reps=3)
+        deliveries_s, res_s = res_s.stats["deliveries"], None
+        # cheap honesty check (the bitwise pin lives in tests/test_sharded.py)
+        if deliveries_s != deliveries_c:
+            raise AssertionError(
+                f"sharded_vs_single N={n}: deliveries diverged "
+                f"{deliveries_s} != {deliveries_c}")
+        row = {
+            "nodes": n, "shards": SHARDS, "dim": dim,
+            "topology": f"kregular{degree}", "train_interval": interval,
+            "ticks_pair": list(ticks_pair),
+            "single_s_per_tick": round(single_s, 6),
+            "sharded_s_per_tick": round(shard_s, 6),
+            "single_ticks_per_s": round(1.0 / single_s, 2),
+            "sharded_ticks_per_s": round(1.0 / shard_s, 2),
+            "speedup": round(single_s / shard_s, 2),
+        }
+        rows.append(row)
+        print(f"gossip,sharded_vs_single,{n}nodes,shards={SHARDS},"
+              f"{row['speedup']}x,single={single_s:.4f}s/tick,"
+              f"sharded={shard_s:.4f}s/tick")
+    out = dict(rows[-1])  # the largest-N row is the gated headline
+    out["scale_rows"] = rows
+    return out
+
+
+def cond_vs_select(quick: bool = False):
+    """Phase-aligned federations through one vmapped dispatch vs one single
+    run: the per-federation per-tick inflation from `lax.cond` lowering to
+    `select` under vmap (the train/deliver branches run on idle ticks)."""
+    n, batch, interval, dim = 256, 8, 32, 16
+    # wide windows: the single run costs ~0.2ms/tick, so short windows put
+    # the whole wall inside timing noise and the ratio swings 2x run-to-run
+    ticks_pair = (64, 256) if quick else (128, 768)
+    topo = topology_lib.kregular(n, 2)
+    sc = scenarios.toy_scenario(n, dim=dim, malicious=(0,))
+    # ALL nodes inside a federation share one phase (the single run's cond
+    # skips the train branch on interval-1 of every interval ticks);
+    # federations are offset from each other so the batch has no globally
+    # idle tick to hide behind
+    mk_spec = lambda b: attacks.FederationSpec.build(
+        n, malicious=(0,),
+        initial_countdown=[1 + (4 * b) % interval] * n)
+    # aligned phases deliver in bursts (every node's flood lands the same
+    # tick), so the staggered-activity budget would overflow: use the exact
+    # topology.compaction_budget bound (budget=None, cannot overflow)
+    # the single run's per-tick cost is ~0.2ms at this N (the cond skips
+    # the train branch), so reps=5 to keep the tiny denominator stable
+    single_s, _ = _pertick(
+        sc, topo, mk_spec(0), delivery="compact", ticks_pair=ticks_pair,
+        interval=interval, budget=None, reps=5)
+    bspec = attacks.BatchedFederationSpec.build(
+        [mk_spec(b) for b in range(batch)], list(range(batch)))
+    batched_s, _ = _pertick(
+        sc, topo, bspec, delivery="compact", ticks_pair=ticks_pair,
+        interval=interval, budget=None, reps=5)
+    out = {
+        "nodes": n, "batch": batch, "dim": dim, "train_interval": interval,
+        "ticks_pair": list(ticks_pair),
+        "single_s_per_tick": round(single_s, 6),
+        "batched_s_per_fed_per_tick": round(batched_s / batch, 6),
+        "select_overhead": round(batched_s / batch / single_s, 2),
+        "deferred": "phase-sorted batching (docs/SWEEPS.md)",
+    }
+    print(f"gossip,cond_vs_select,{n}nodes,batch={batch},"
+          f"overhead={out['select_overhead']}x,single={single_s:.4f}s/tick,"
+          f"batched_per_fed={batched_s / batch:.4f}s/tick")
+    return out
+
+
+def main(quick: bool = False) -> dict:
+    if jax.device_count() < SHARDS:
+        # re-exec in a fresh interpreter with 8 host devices (the flag must
+        # be set before jax first init, which already happened here)
+        import os
+        import subprocess
+        import sys
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = \
+            f"--xla_force_host_platform_device_count={SHARDS}"
+        env.setdefault("PYTHONPATH", "src")
+        res = subprocess.run(
+            [sys.executable, "-m", "benchmarks.bench_sharded"]
+            + (["--quick"] if quick else []),
+            env=env, capture_output=True, text=True, timeout=2400)
+        print(res.stdout, end="")
+        if res.returncode != 0:
+            raise RuntimeError(
+                f"bench_sharded child exited {res.returncode}: "
+                + res.stderr[-500:])
+        return json.load(open("experiments/bench_sharded.json"))
+    return {
+        "sharded_vs_single": sharded_vs_single(quick=quick),
+        "cond_vs_select": cond_vs_select(quick=quick),
+    }
+
+
+if __name__ == "__main__":
+    import os
+    import sys
+    os.makedirs("experiments", exist_ok=True)
+    json.dump(main(quick="--quick" in sys.argv),
+              open("experiments/bench_sharded.json", "w"), indent=1)

@@ -216,6 +216,152 @@ def _resolve(attack) -> object:
     return get(attack) if isinstance(attack, str) else attack
 
 
+# ============================================================ churn schedule
+@dataclasses.dataclass(frozen=True)
+class MembershipEvent:
+    """One tick's worth of churn: ``joins`` come online and ``leaves`` go
+    offline at the TOP of ``tick``, before any queue drain or training —
+    a node leaving at tick t neither receives nor trains on tick t, and a
+    node joining at tick t participates from tick t onward."""
+    tick: int
+    joins: Tuple[int, ...] = ()
+    leaves: Tuple[int, ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "tick", int(self.tick))
+        object.__setattr__(self, "joins",
+                           tuple(int(i) for i in self.joins))
+        object.__setattr__(self, "leaves",
+                           tuple(int(i) for i in self.leaves))
+        if self.tick < 0:
+            raise ValueError(f"event tick must be >= 0, got {self.tick}")
+        overlap = set(self.joins) & set(self.leaves)
+        if overlap:
+            raise ValueError(
+                f"nodes {sorted(overlap)} both join and leave at tick "
+                f"{self.tick}")
+
+
+@dataclasses.dataclass(frozen=True)
+class MembershipSchedule:
+    """Dynamic membership for one federation run: which nodes are offline
+    from tick 0 (``initial_offline``) and the per-tick join/leave/rejoin
+    event stream. Both simulator engines consume the SAME schedule, so churn
+    scenarios stay single-source like every other role in the spec.
+
+    Semantics (the contract docs/SCALING.md pins):
+
+    * Offline nodes keep their committed params and receive nothing; models
+      in flight toward them when they drop are lost (both engines).
+    * A REJOIN (a node that was online earlier — or started online — coming
+      back) resumes from its committed params with every peer's reputation
+      of it decayed: ``rep <- clip(rejoin_decay * rep, floor, initial)``.
+      First-time joins of ``initial_offline`` nodes get no decay.
+    * Routing/budgets stay the static all-alive worst case: an offline node
+      can only SHRINK the set of deliveries due on a tick, never grow it.
+
+    ``dead`` nodes (the spec's permanent failures) may not appear in any
+    event or in ``initial_offline`` — they never participate.
+    """
+    events: Tuple[MembershipEvent, ...] = ()
+    rejoin_decay: float = 0.5
+    initial_offline: Tuple[int, ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "initial_offline",
+                           tuple(sorted(set(int(i)
+                                            for i in self.initial_offline))))
+        object.__setattr__(self, "rejoin_decay", float(self.rejoin_decay))
+        if not 0.0 <= self.rejoin_decay <= 1.0:
+            raise ValueError(
+                f"rejoin_decay must be in [0, 1], got {self.rejoin_decay}")
+        ticks = [e.tick for e in self.events]
+        if ticks != sorted(ticks):
+            raise ValueError("events must be sorted by tick")
+        if len(set(ticks)) != len(ticks):
+            raise ValueError("at most one MembershipEvent per tick "
+                             "(merge joins/leaves into one event)")
+
+    @classmethod
+    def build(cls, events=(), *, rejoin_decay: float = 0.5,
+              initial_offline: Sequence[int] = ()) -> "MembershipSchedule":
+        """``events`` entries are ``MembershipEvent``s or
+        ``(tick, joins, leaves)`` tuples; they are sorted by tick here."""
+        evs = []
+        for e in events:
+            if not isinstance(e, MembershipEvent):
+                t, joins, leaves = e
+                e = MembershipEvent(tick=t, joins=tuple(joins),
+                                    leaves=tuple(leaves))
+            evs.append(e)
+        evs.sort(key=lambda e: e.tick)
+        return cls(events=tuple(evs), rejoin_decay=rejoin_decay,
+                   initial_offline=tuple(initial_offline))
+
+    def validate(self, num_nodes: int, dead: Sequence[int] = ()) -> None:
+        """Replay the schedule against ``num_nodes``/``dead`` and reject
+        impossible streams: out-of-range ids, events touching dead nodes,
+        joining while online, leaving while offline."""
+        horizon = (max(e.tick for e in self.events) + 1) if self.events \
+            else 1
+        self.timeline(num_nodes, horizon, dead=dead)
+
+    def timeline(self, num_nodes: int, ticks: int,
+                 dead: Sequence[int] = ()) -> Tuple[np.ndarray, np.ndarray]:
+        """Expand to dense per-tick masks: ``(alive_t, rejoin_t)`` both
+        ``(ticks, num_nodes)`` bool. ``alive_t[t, i]`` — node i participates
+        on tick t (events applied at the top of their tick, dead nodes
+        always False); ``rejoin_t[t, i]`` — node i REJOINS at the top of
+        tick t (triggers the reputation decay; first-time joins of
+        ``initial_offline`` nodes don't)."""
+        dead_set = set(int(i) for i in dead)
+        for i in self.initial_offline:
+            if not 0 <= i < num_nodes:
+                raise ValueError(
+                    f"initial_offline id {i} outside [0, {num_nodes})")
+            if i in dead_set:
+                raise ValueError(f"node {i} is dead; it cannot churn")
+        participating = np.ones((num_nodes,), np.bool_)
+        participating[list(dead_set)] = False
+        participating[list(self.initial_offline)] = False
+        ever_online = participating.copy()
+        alive_t = np.zeros((ticks, num_nodes), np.bool_)
+        rejoin_t = np.zeros((ticks, num_nodes), np.bool_)
+        by_tick = {e.tick: e for e in self.events}
+        for t in range(ticks):
+            ev = by_tick.get(t)
+            if ev is not None:
+                for i in ev.leaves:
+                    if not 0 <= i < num_nodes:
+                        raise ValueError(
+                            f"leave id {i} outside [0, {num_nodes})")
+                    if i in dead_set:
+                        raise ValueError(
+                            f"node {i} is dead; it cannot churn")
+                    if not participating[i]:
+                        raise ValueError(
+                            f"node {i} leaves at tick {t} but is already "
+                            "offline")
+                    participating[i] = False
+                for i in ev.joins:
+                    if not 0 <= i < num_nodes:
+                        raise ValueError(
+                            f"join id {i} outside [0, {num_nodes})")
+                    if i in dead_set:
+                        raise ValueError(
+                            f"node {i} is dead; it cannot churn")
+                    if participating[i]:
+                        raise ValueError(
+                            f"node {i} joins at tick {t} but is already "
+                            "online")
+                    participating[i] = True
+                    if ever_online[i]:
+                        rejoin_t[t, i] = True
+                    ever_online[i] = True
+            alive_t[t] = participating
+        return alive_t, rejoin_t
+
+
 @dataclasses.dataclass(frozen=True)
 class FederationSpec:
     """Per-node roles for one federation run — the single source both
@@ -226,12 +372,15 @@ class FederationSpec:
     stragglers: ((node_id, factor), ...) train-interval multipliers
     initial_countdown: per-node ticks until the first train action (length
         num_nodes), or None for the engine's seeded random draw
+    membership: optional MembershipSchedule of join/leave/rejoin churn
+        (None = everyone but ``dead`` participates for the whole run)
     """
     num_nodes: int
     attackers: Tuple[Tuple[int, object], ...] = ()
     dead: Tuple[int, ...] = ()
     stragglers: Tuple[Tuple[int, int], ...] = ()
     initial_countdown: Optional[Tuple[int, ...]] = None
+    membership: Optional[MembershipSchedule] = None
 
     def __post_init__(self):
         for i, _ in self.attackers:
@@ -250,11 +399,15 @@ class FederationSpec:
             raise ValueError(
                 f"initial_countdown has {len(self.initial_countdown)} entries "
                 f"for {self.num_nodes} nodes")
+        if self.membership is not None:
+            self.membership.validate(self.num_nodes, dead=self.dead)
 
     @classmethod
     def build(cls, num_nodes: int, *, malicious=(), attack=None,
               dead: Sequence[int] = (), stragglers: Optional[dict] = None,
-              initial_countdown=None) -> "FederationSpec":
+              initial_countdown=None,
+              membership: Optional[MembershipSchedule] = None
+              ) -> "FederationSpec":
         """The convenient constructor. ``malicious`` is either a sequence of
         node ids (all assigned ``attack``, name or instance; default
         ``gaussian``) or a dict ``{node_id: attack}`` for heterogeneous
@@ -275,7 +428,8 @@ class FederationSpec:
             stragglers=tuple(sorted(
                 (int(k), int(v)) for k, v in (stragglers or {}).items())),
             initial_countdown=(None if initial_countdown is None
-                               else tuple(int(c) for c in initial_countdown)))
+                               else tuple(int(c) for c in initial_countdown)),
+            membership=membership)
 
     @classmethod
     def honest(cls, num_nodes: int) -> "FederationSpec":

@@ -7,6 +7,17 @@ latency, ttl-bounded transaction forwarding, receipt backflow, block
 generation with neighbor confirmations, malicious nodes, stragglers
 (slow-train nodes), and node failure/join (elasticity tests). Messages ride a
 heap-based event queue keyed by delivery tick.
+
+Dynamic membership (``set_membership``): a ``repro.chain.attacks.
+MembershipSchedule`` drives per-tick join/leave/rejoin events. Offline nodes
+freeze their train countdowns, are skipped by recording, and never process a
+transaction — but they still *relay*: routing is static, so a flood passes
+through an offline node unchanged (ttl decremented via an unsigned relay
+receipt, no evaluation, no buffering) exactly as the vectorized engines'
+precomputed delivery schedules assume. A model in flight to an offline node
+is lost for good (it is marked seen during the relay). Rejoining nodes resume
+from their committed params; every peer's local reputation entry for the
+rejoiner is decayed by ``rejoin_decay`` (clipped to [floor, initial]).
 """
 from __future__ import annotations
 
@@ -16,6 +27,7 @@ import random
 from typing import Callable, Dict, List, Optional, Sequence
 
 from repro.chain.node import DFLNode
+from repro.chain.types import Receipt
 
 
 @dataclasses.dataclass
@@ -54,6 +66,8 @@ class Simulator:
             n: self.rand.randint(*cfg.train_interval) for n in self.nodes}
         self.straggler_factor: Dict[str, int] = {}
         self.dead: set[str] = set()
+        self.membership = None                  # MembershipSchedule | None
+        self.offline: set[str] = set()          # churned-out (distinct from dead)
         self.stats = {"tx_sent": 0, "tx_delivered": 0, "tx_dropped_dup": 0,
                       "tx_dropped_expired": 0, "blocks": 0, "fedavg_rounds": 0}
 
@@ -87,6 +101,45 @@ class Simulator:
     def set_straggler(self, name: str, factor: int):
         self.straggler_factor[name] = factor
 
+    def set_membership(self, schedule, *, names: Optional[Sequence[str]] = None):
+        """Attach a ``MembershipSchedule``. ``names`` maps node index ->
+        node name (defaults to insertion order, which matches the lax
+        engines' index order when nodes were built in order)."""
+        names = list(names) if names is not None else list(self.nodes)
+        if len(names) != len(self.nodes):
+            raise ValueError(
+                f"names covers {len(names)} nodes, simulator has {len(self.nodes)}")
+        dead_idx = [i for i, nm in enumerate(names) if nm in self.dead]
+        schedule.validate(len(names), dead=dead_idx)
+        self.membership = schedule
+        self._member_names = names
+        self._events_by_tick = {ev.tick: ev for ev in schedule.events}
+        self._rejoin_decay = float(schedule.rejoin_decay)
+        init_off = set(schedule.initial_offline)
+        self.offline = {names[i] for i in init_off}
+        # rejoin decay applies only to nodes that were online before — a
+        # first join of an initially-offline node decays nothing
+        self._ever_online = {nm for i, nm in enumerate(names) if i not in init_off}
+
+    def _apply_membership_events(self, tick: int):
+        ev = self._events_by_tick.get(tick)
+        if ev is None:
+            return
+        for i in ev.leaves:
+            self.offline.add(self._member_names[i])
+        for i in ev.joins:
+            nm = self._member_names[i]
+            self.offline.discard(nm)
+            if nm in self._ever_online:
+                # rejoin: every peer decays its local view of the rejoiner
+                addr = self.nodes[nm].info.address
+                for nd in self.nodes.values():
+                    impl = nd.rep_impl
+                    cur = nd.reputation.get(addr, impl.initial)
+                    nd.reputation[addr] = min(
+                        impl.initial, max(impl.floor, self._rejoin_decay * cur))
+            self._ever_online.add(nm)
+
     # ------------------------------------------------------------------ steps
     def _broadcast_tx(self, node: DFLNode, tick: int):
         params, _ = node.train_local(tick)
@@ -96,9 +149,37 @@ class Simulator:
         for peer in self.neighbors(node.name):
             self._push(tick + self._latency(), "tx", peer, node.name, tx, params)
 
+    def _relay_tx(self, node: DFLNode, msg: _Msg, tick: int):
+        """Offline pass-through: the node is churned out, so the model is
+        lost to it (marked seen — a later rejoin never delivers it late) but
+        the flood keeps moving. The ttl decrement rides an UNSIGNED relay
+        receipt: Eq. (1) still counts the hop, and ``confirm_block`` only
+        co-signs receipts it can ``verify()``, so the stub never becomes a
+        confirmation."""
+        if msg.tx.d in node.seen_tx:
+            self.stats["tx_dropped_dup"] += 1
+            return
+        node.seen_tx.add(msg.tx.d)
+        if not msg.tx.verify(now=tick):
+            self.stats["tx_dropped_expired"] += 1
+            return
+        nxt = msg.tx.next_received_at_ttl()
+        if nxt <= 0:
+            return
+        msg.tx.receipts.append(Receipt(
+            creator=node.info, transaction_digest=msg.tx.d,
+            received_at_ttl=nxt, accuracy=0.0, create_time=tick))
+        for peer in self.neighbors(node.name):
+            if peer != msg.src:
+                self._push(tick + self._latency(), "tx", peer, node.name,
+                           msg.tx, msg.params)
+
     def _deliver_tx(self, msg: _Msg, tick: int):
         node = self.nodes[msg.dest]
         if msg.dest in self.dead:
+            return
+        if msg.dest in self.offline:
+            self._relay_tx(node, msg, tick)
             return
         receipt, forward = node.receive_transaction(msg.tx, msg.params, tick)
         if receipt is None:
@@ -109,7 +190,7 @@ class Simulator:
         self.stats["tx_delivered"] += 1
         # receipt flows back to the generator (Fig 1) for block assembly
         gen_name = self._addr_to_name(msg.tx.generator.address)
-        if gen_name and gen_name not in self.dead:
+        if gen_name and gen_name not in self.dead and gen_name not in self.offline:
             self._push(tick + self._latency(), "receipt", gen_name,
                        node.name, receipt, None)
         if node.maybe_update_model(tick):
@@ -126,6 +207,8 @@ class Simulator:
         draft = node.draft_block(tick)
         confirmations = []
         for peer in self.neighbors(node.name):
+            if peer in self.offline:
+                continue            # churned-out neighbors cannot witness
             confirmations.extend(self.nodes[peer].confirm_block(draft))
         if node.finalize_block(draft, confirmations):
             self.stats["blocks"] += 1
@@ -133,14 +216,20 @@ class Simulator:
     # -------------------------------------------------------------------- run
     def run(self, progress: Optional[Callable] = None):
         for tick in range(self.cfg.ticks):
+            if self.membership is not None:
+                # top of tick, BEFORE delivery — same order as the lax
+                # engines' membership step (leave/join gates this tick's
+                # arrivals and this tick's countdown decrement)
+                self._apply_membership_events(tick)
             while self.queue and self.queue[0].tick <= tick:
                 msg = heapq.heappop(self.queue)
                 if msg.kind == "tx":
                     self._deliver_tx(msg, tick)
-                elif msg.kind == "receipt" and msg.dest not in self.dead:
+                elif (msg.kind == "receipt" and msg.dest not in self.dead
+                      and msg.dest not in self.offline):
                     self.nodes[msg.dest].attach_receipt(msg.tx)
             for name, node in self.nodes.items():
-                if name in self.dead:
+                if name in self.dead or name in self.offline:
                     continue
                 self.next_train[name] -= 1
                 if self.next_train[name] <= 0:
@@ -150,7 +239,7 @@ class Simulator:
                     self.next_train[name] = base * self.straggler_factor.get(name, 1)
             if tick % self.cfg.record_every == 0:
                 for name, node in self.nodes.items():
-                    if name not in self.dead:
+                    if name not in self.dead and name not in self.offline:
                         node.record(tick, float(self.test_fn(node.params)))
                 if progress:
                     progress(tick, self)

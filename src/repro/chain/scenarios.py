@@ -199,6 +199,9 @@ def make_heap_simulator(scenario: Scenario, topology, spec: FederationSpec,
         sim.set_straggler(names_[i], factor)
     for i in spec.dead:
         sim.kill_node(names_[i])
+    if spec.membership is not None:
+        # same join/leave/rejoin event stream the lax engines scan over
+        sim.set_membership(spec.membership, names=names_)
     return sim
 
 

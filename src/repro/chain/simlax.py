@@ -61,6 +61,31 @@ Receipt evaluation has three interchangeable engines
     three engines are parity-tested to produce identical event streams and
     matching state (tests/test_simlax.py).
 
+``sharded``
+    The compact engine's node axis partitioned over ``SimLaxConfig.shards``
+    devices of a `repro.launch.mesh.make_fed_mesh` mesh via ``shard_map``:
+    each shard carries its ``(N/S, budget)`` block of the slot state, the
+    cross-shard receipt exchange is lowered through the SAME per-offset
+    ppermute schedules the production gossip round uses, and the per-shard
+    work-buffer budget comes from ``topology.compaction_budget`` on the
+    LOCAL adjacency block (worst case over shards; ``compact_budget``
+    overrides it per shard). Bitwise identical to ``compact`` — same
+    scatter-add structure, pinned on a forced 8-host-device mesh in
+    tests/test_sharded.py. Does not compose with ``BatchedFederationSpec``
+    (docs/SCALING.md records why).
+
+Dynamic membership: a `repro.chain.attacks.MembershipSchedule` on
+``FederationSpec.membership`` threads per-tick join/leave/rejoin events
+through this engine (alive/rejoin masks baked as scan consts) and the heap
+engine alike. Offline nodes freeze their train countdowns, receive nothing
+(models in flight toward them are lost), and keep committed params;
+rejoining nodes resume from those params with every peer's reputation of
+them decayed ``rep <- clip(rejoin_decay * rep, floor, initial)``. Budgets
+stay the static all-alive worst case — churn can only shrink a tick's due
+set, and frozen countdowns can re-ALIGN broadcast phases on rejoin, raising
+the per-tick delivery peak above the no-churn run's (tests/test_membership
+.py pins both).
+
 Batched runs: constructing with a ``repro.chain.attacks
 .BatchedFederationSpec`` (B same-N role sheets + per-member seeds; one
 shared scenario/topology/config) vmaps the ENTIRE scan over the batch —
@@ -107,12 +132,15 @@ from typing import Callable, Optional, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.chain import attacks as attacks_lib
 from repro.chain.attacks import BatchedFederationSpec, FederationSpec
 from repro.core import compression
 from repro.core import tracecheck
 from repro.core import topology as topology_lib
+from repro.core.gossip import tree_ppermute
 from repro.core.reputation import ReputationImpl
 
 _NEVER = np.iinfo(np.int32).max
@@ -145,7 +173,7 @@ def clear_scan_cache():
     """Drop every cached compiled scan (tests / memory pressure)."""
     _SCAN_CACHE.clear()
 
-DELIVERY_ENGINES = ("compact", "sparse", "dense")
+DELIVERY_ENGINES = ("compact", "sparse", "dense", "sharded")
 COMPRESS_MODES = (None, "int8")
 
 
@@ -158,6 +186,9 @@ class SimLaxConfig:
     record_every: int = 10
     seed: int = 0
     delivery: str = "compact"         # receipt engine: see DELIVERY_ENGINES
+    shards: Optional[int] = None      # sharded engine: device count to
+    # partition the node axis over (None = all visible devices). Must
+    # divide N; only meaningful with delivery="sharded" (docs/SCALING.md)
     compact_budget: Optional[int] = None
     # ^ overrides the compact engine's work-buffer width (default: the
     #   exact topology.compaction_budget bound). A smaller buffer cuts the
@@ -319,6 +350,17 @@ class LaxSimulator:
             raise ValueError(
                 f"unknown compress mode {cfg.compress!r}; "
                 f"choose from {COMPRESS_MODES}")
+        if cfg.shards is not None and cfg.delivery != "sharded":
+            raise ValueError(
+                f"SimLaxConfig.shards only applies to delivery='sharded' "
+                f"(got delivery={cfg.delivery!r})")
+        if cfg.delivery == "sharded" and batched:
+            raise ValueError(
+                "delivery='sharded' does not compose with "
+                "BatchedFederationSpec yet: the batch vmap and the fed-axis "
+                "shard_map would compete for the same device mesh "
+                "(docs/SCALING.md). Run sharded federations one at a time, "
+                "or batch with the compact engine.")
         # strict <: deliveries are processed before same-tick re-broadcast,
         # so interval == ttl*latency still delivers every hop-ttl arrival
         if cfg.train_interval[0] < cfg.ttl * cfg.latency:
@@ -338,7 +380,9 @@ class LaxSimulator:
             alive = np.ones((n,), np.bool_)
             alive[list(s.dead)] = False
             adj = topology.adj & alive[None, :] & alive[:, None]
-            dist = topology_lib.hop_distance_from_adj(adj)
+            # the engine only consumes distances <= ttl (reach/delay masks,
+            # ring sizes, budgets), so capping the BFS keeps setup O(N^2*ttl)
+            dist = topology_lib.hop_distance_from_adj(adj, max_hops=cfg.ttl)
             reach = (dist >= 1) & (dist <= cfg.ttl)
             alives.append(alive)
             dists.append(dist)
@@ -404,6 +448,81 @@ class LaxSimulator:
                 inv_slots.append(inv_slot)
                 inv_delays.append(inv_delay)
 
+        # sharded engine: fed-axis partition layout — each device carries an
+        # m = N/S receiver block of the scan state; broadcasts are exchanged
+        # between blocks by the same ppermute collective the production
+        # gossip round uses, one permute per occupied shard offset
+        # (docs/SCALING.md)
+        self.shards = None
+        self._offsets = None
+        self.shard_budget = None
+        self._mesh = None
+        src_to_buf = shard_index = slot_delay = slot_valid = None
+        if cfg.delivery == "sharded":
+            S = int(cfg.shards) if cfg.shards is not None \
+                else jax.device_count()
+            if S < 1:
+                raise ValueError(f"shards must be >= 1, got {S}")
+            if n % S != 0:
+                raise ValueError(
+                    f"delivery='sharded' needs num_nodes ({n}) divisible "
+                    f"by shards ({S})")
+            if S > jax.device_count():
+                raise ValueError(
+                    f"shards={S} but only {jax.device_count()} devices are "
+                    "visible (on CPU, force host devices with "
+                    "XLA_FLAGS=--xla_force_host_platform_device_count=S "
+                    "before the first jax import)")
+            m = n // S
+            reach, delay, dist = reaches[0], delays[0], dists[0]
+            alive0 = alives[0]
+            adj0 = topology.adj & alive0[None, :] & alive0[:, None]
+            # per-shard work buffer: each shard compacts only deliveries
+            # landing on ITS receiver block, so its width is the compaction
+            # bound restricted to those receiver columns (shared width =
+            # worst case over shards; cfg.compact_budget overrides it)
+            per_shard = [
+                topology_lib.compaction_budget(
+                    adj0, cfg.ttl, cfg.train_interval, latency=cfg.latency,
+                    dist=dist, receivers=np.arange(p * m, (p + 1) * m))
+                for p in range(S)]
+            want = (max(1, max(per_shard)) if cfg.compact_budget is None
+                    else int(cfg.compact_budget))
+            self.shard_budget = min(want, m * budget)
+            # exchange schedule: shard p needs sent-models from shard q iff
+            # some reach pair crosses q -> p; offset d = (p - q) mod S reads
+            # "receive from the shard d behind me" — one ppermute per
+            # occupied offset, every tick, unconditionally (collectives may
+            # not sit under a data-dependent cond)
+            rblk = np.arange(n) // m
+            pairs = np.argwhere(reach)                      # (dst, src) rows
+            doff = (rblk[pairs[:, 0]] - rblk[pairs[:, 1]]) % S
+            self._offsets = tuple(int(d) for d in sorted(set(doff.tolist()))
+                                  if d != 0)
+            # src_to_buf[p, s]: row of shard p's concatenated exchange
+            # buffer holding global sender s's model (own block first, then
+            # one m-row block per offset). Senders in no exchanged block get
+            # the sentinel last row — gathered only for invalid work items,
+            # whose weight is zeroed.
+            n_blocks = 1 + len(self._offsets)
+            src_to_buf = np.full((S, n), n_blocks * m - 1, np.int32)
+            for p in range(S):
+                src_to_buf[p, p * m:(p + 1) * m] = np.arange(m)
+                for j, d in enumerate(self._offsets):
+                    q = (p - d) % S
+                    src_to_buf[p, q * m:(q + 1) * m] = \
+                        (1 + j) * m + np.arange(m)
+            shard_index = np.arange(S, dtype=np.int32)
+            # receiver-driven arrival scheduling: slot k of dst holds its
+            # k-th in-ball sender, so arrivals are a pure gather over the
+            # replicated trains vector — no cross-shard scatter needed
+            slot_delay = np.take_along_axis(delay, slot_srcs[0], axis=1)
+            slot_valid = np.take_along_axis(reach, slot_srcs[0], axis=1)
+            self.shards = S
+            from repro.launch import mesh as mesh_lib
+            self._mesh = mesh_lib.make_fed_mesh(S, 1, 1)
+            compat.check_partial_auto_shard_map(self._mesh, {"fed"})
+
         # distinct attack instances (union over the batch) each run one
         # masked vmap over ALL nodes; the per-member (G, N) masks select
         # which nodes actually broadcast the poisoned model, and the
@@ -432,6 +551,22 @@ class LaxSimulator:
         # with a few attackers, running them over all N nodes multiplies
         # the per-tick cost several-fold
         self._attack_ids = tuple(np.asarray(i, np.int32) for i in gids)
+        # sharded: each shard runs the attack vmap over its LOCAL attacker
+        # ids (global id - shard start), padded to the max count over shards
+        # with the out-of-range sentinel m (scatters drop it, masks zero it)
+        attack_lids = None
+        if cfg.delivery == "sharded":
+            S, m = self.shards, n // self.shards
+            tables = []
+            for ids in self._attack_ids:
+                per = [ids[(ids >= p * m) & (ids < (p + 1) * m)] - p * m
+                       for p in range(S)]
+                amax = max(1, max(len(x) for x in per))
+                tab = np.full((S, amax), m, np.int32)
+                for p, x in enumerate(per):
+                    tab[p, :len(x)] = x
+                tables.append(tab)
+            attack_lids = tuple(tables)
 
         mals, strags, countdowns, use_countdowns = [], [], [], []
         for s in specs:
@@ -470,9 +605,38 @@ class LaxSimulator:
             consts["slot_src"] = _stack(slot_srcs)
             consts["reach"] = _stack(reaches)
             consts["delay"] = _stack(delays)
+        elif cfg.delivery == "sharded":
+            consts["slot_src"] = _stack(slot_srcs)
+            consts["slot_delay"] = jnp.asarray(slot_delay)
+            consts["slot_valid"] = jnp.asarray(slot_valid)
+            consts["src_to_buf"] = jnp.asarray(src_to_buf)
+            consts["shard_index"] = jnp.asarray(shard_index)
+            consts["attack_lids"] = tuple(
+                jnp.asarray(t) for t in attack_lids)
         else:
             consts["reach"] = _stack(reaches)
             consts["delay"] = _stack(delays)
+        # dynamic membership: expand the schedule to dense per-tick masks
+        # once, host-side; the scan indexes them by tick. The consts stay
+        # ABSENT without membership so churn-free simulators keep their
+        # argument pytrees (and their cached compiled scans) unchanged.
+        self._has_membership = any(s.membership is not None for s in specs)
+        if self._has_membership:
+            alive_ts, rejoin_ts, decays = [], [], []
+            for s, alv in zip(specs, alives, strict=True):
+                if s.membership is None:
+                    alive_ts.append(np.tile(alv, (cfg.ticks, 1)))
+                    rejoin_ts.append(np.zeros((cfg.ticks, n), np.bool_))
+                    decays.append(np.float32(1.0))
+                else:
+                    a_t, r_t = s.membership.timeline(n, cfg.ticks,
+                                                     dead=s.dead)
+                    alive_ts.append(a_t)
+                    rejoin_ts.append(r_t)
+                    decays.append(np.float32(s.membership.rejoin_decay))
+            consts["alive_t"] = _stack(alive_ts)
+            consts["rejoin_t"] = _stack(rejoin_ts)
+            consts["rejoin_decay"] = _stack(decays)
         self._consts = consts
 
         self._train_fn = _normalize_train_fn(
@@ -489,7 +653,9 @@ class LaxSimulator:
             train_data is not None, cfg, rep_impl, n, batched,
             self._attack_instances,
             tuple(tuple(ids.tolist()) for ids in self._attack_ids),
-            self.delivery_budget, self.compact_budget)
+            self.delivery_budget, self.compact_budget,
+            self._has_membership, self.shards, self._offsets,
+            self.shard_budget)
         cached = _SCAN_CACHE.get(self._trace_key)
         if cached is None:
             if batched:
@@ -497,6 +663,8 @@ class LaxSimulator:
                     return jax.vmap(
                         self._scan, in_axes=(None, 0, 0, None, None))(
                             params0, keys, consts, eval_data, train_data)
+            elif cfg.delivery == "sharded":
+                dispatch = self._scan_sharded
             else:
                 dispatch = self._scan
             counted = tracecheck.count_traces(
@@ -606,6 +774,46 @@ class LaxSimulator:
         batch_sender = jnp.where(batch_sender == n, 0, batch_sender)
         return acc_sum, w_sum, buf_cnt, batch_min, batch_sender
 
+    def _deliver_sharded(self, state, slot_ok, eval_data, slot_src, buf,
+                         row_of_src):
+        """The compact engine's flat work buffer, per shard: compact this
+        shard's due (local-receiver, slot) pairs into a static
+        (shard_budget,) buffer, eval via one flat vmap, segment-scatter
+        back. Senders' models are gathered from ``buf``, the concatenated
+        ppermute exchange blocks, through ``row_of_src`` (global sender id
+        -> local buffer row). All shapes are shard-local (m receivers);
+        sender ids stay GLOBAL (rep columns, min_sender)."""
+        n = self.topology.num_nodes
+        m, budget = slot_ok.shape[0], self.delivery_budget
+        flat_ok = slot_ok.ravel()                        # (m * budget,)
+        flat_idx = jnp.nonzero(flat_ok, size=self.shard_budget,
+                               fill_value=m * budget)[0]
+        valid = flat_idx < m * budget
+        rcv = jnp.minimum(flat_idx // budget, m - 1)     # local receiver row
+        src = slot_src[rcv, flat_idx % budget]           # (W,) global sender
+        buf_rows = jax.tree.leaves(buf)[0].shape[0]
+        row = jnp.minimum(row_of_src[src], buf_rows - 1)
+        models = jax.tree.map(lambda b: b[row], buf)     # (W, ...)
+        ed = jax.tree.map(lambda e: e[rcv], eval_data)
+        accs = jax.vmap(self._eval_fn)(models, ed)       # (W,)
+        w_item = jnp.where(valid, state["rep"][rcv, src] * accs, 0.0)
+        scat = jnp.where(valid, rcv, m)                  # m == dropped row
+        acc_sum = jax.tree.map(
+            lambda a, mo: a.at[scat].add(
+                w_item.reshape((-1,) + (1,) * (a.ndim - 1))
+                * mo.astype(jnp.float32), mode="drop"),
+            state["acc_sum"], models)
+        w_sum = state["w_sum"].at[scat].add(w_item, mode="drop")
+        buf_cnt = state["buf_cnt"].at[scat].add(1, mode="drop")
+        masked = jnp.where(valid, accs, jnp.inf)
+        batch_min = jnp.full((m,), jnp.inf, jnp.float32).at[scat].min(
+            masked, mode="drop")
+        tie = valid & (accs == batch_min[rcv])
+        batch_sender = jnp.full((m,), n, jnp.int32).at[scat].min(
+            jnp.where(tie, src, n), mode="drop")
+        batch_sender = jnp.where(batch_sender == n, 0, batch_sender)
+        return acc_sum, w_sum, buf_cnt, batch_min, batch_sender
+
     # -------------------------------------------------------------------- scan
     def _scan(self, params0, key0, consts, eval_data, train_data):
         """One member's full tick loop as a single ``lax.scan``. The
@@ -668,8 +876,27 @@ class LaxSimulator:
             fedavg_rounds=jnp.zeros((), jnp.int32),
         )
 
+        has_membership = self._has_membership
+
         def body(state, t):
             key_t = jax.random.fold_in(key0, t)
+
+            # ---- 0. membership: events apply at the TOP of the tick.
+            # a_t masks this tick's participants; rejoiners get every
+            # peer's reputation COLUMN decayed before any delivery uses it
+            # (attacks.MembershipSchedule — without churn a_t is the static
+            # alive mask and the branch is compiled out).
+            if has_membership:
+                a_t = consts["alive_t"][t]
+                rej = consts["rejoin_t"][t]
+                decayed = jnp.clip(
+                    state["rep"] * consts["rejoin_decay"],
+                    rep_impl.floor, rep_impl.initial)
+                state = dict(state,
+                             rep=jnp.where(rej[None, :], decayed,
+                                           state["rep"]))
+            else:
+                a_t = alive
 
             # ---- 1. deliveries: models whose tick counter hits t.
             # On a no-delivery tick every update below is a no-op, so the
@@ -679,7 +906,11 @@ class LaxSimulator:
             # predicates: every member pays the eval on ticks where ANY
             # member delivers — the batch amortizes dispatch, not work.)
             # due is (dst, src) for the oracles, (dst, slot) for compact.
-            due = (state["arrive"] == t) & alive[:, None]
+            # An arrival at an offline receiver EXPIRES without delivering
+            # (the model in flight is lost, matching the heap engine's
+            # duplicate-dropping first-arrival flood).
+            expired = state["arrive"] == t
+            due = expired & a_t[:, None]
             acc_sum, w_sum, buf_cnt, batch_min, batch_sender = jax.lax.cond(
                 due.any(),
                 lambda s: deliver(s, due),
@@ -691,7 +922,7 @@ class LaxSimulator:
             min_acc = jnp.where(better, batch_min, state["min_acc"])
             min_sender = jnp.where(better, batch_sender,
                                    state["min_sender"])
-            arrive = jnp.where(due, _NEVER, state["arrive"])
+            arrive = jnp.where(expired, _NEVER, state["arrive"])
 
             # ---- 2. weighted FedAvg (Eq. 3) where the buffer filled up
             fire = buf_cnt >= rep_impl.buffer_size           # (N,)
@@ -732,9 +963,13 @@ class LaxSimulator:
 
             # ---- 3. train + broadcast where the countdown expired
             # (cond-gated like delivery: the vmapped train step + poison
-            # sampling only run on ticks where some countdown expired)
-            next_train = state["next_train"] - 1
-            trains = (next_train <= 0) & alive                # (N,)
+            # sampling only run on ticks where some countdown expired).
+            # Offline nodes' countdowns FREEZE (they resume where they left
+            # off, matching the heap engine's skip); without membership the
+            # decrement stays the unconditional -1 of the static mask.
+            next_train = state["next_train"] - (
+                a_t.astype(jnp.int32) if has_membership else 1)
+            trains = (next_train <= 0) & a_t                  # (N,)
 
             def do_train(operand):
                 committed, sent = operand
@@ -832,6 +1067,259 @@ class LaxSimulator:
         return jax.lax.scan(
             body, init, jnp.arange(cfg.ticks, dtype=jnp.int32))
 
+    # ------------------------------------------------------------ sharded scan
+    def _scan_sharded(self, params0, key0, consts, eval_data, train_data):
+        """The compact tick loop partitioned over the ``fed`` mesh axis via
+        shard_map: each of S devices scans an m = N/S receiver block of the
+        state (params/sent/arrive/rep rows, eval/train data), and every tick
+        opens with one ``lax.ppermute`` per occupied shard offset moving the
+        ``sent`` blocks neighbors need — the identical collective schedule
+        shape the production gossip round lowers to. Cross-shard coupling is
+        ONLY that exchange plus the replicated train-countdown vector: the
+        countdown/interval PRNG draws are recomputed identically on every
+        shard (``jax.random.split(key, n)`` row i depends only on i and the
+        key), so broadcast schedules agree without any collective. On one
+        device (S=1) the offsets are empty and this degrades to exactly the
+        compact engine minus its inverse-map scatter. Parity with compact is
+        bitwise (tests/test_sharded.py); docs/SCALING.md has the design."""
+        cfg = self.cfg
+        n = self.topology.num_nodes
+        S = self.shards
+        m = n // S
+        offsets = self._offsets
+        rep_impl = self.rep_impl
+        has_membership = self._has_membership
+        attack_instances = self._attack_instances
+        train_v = jax.vmap(self._train_fn,
+                           in_axes=(0, 0, None if train_data is None else 0))
+        test_v = jax.vmap(self._test_fn)
+        fed = P("fed")
+        # replicated consts (full-N role vectors + attack tables) vs
+        # fed-sharded layout tables (leading axis N or S)
+        sharded_keys = {"slot_src", "slot_delay", "slot_valid",
+                        "src_to_buf", "shard_index", "attack_lids"}
+        const_specs = {k: (fed if k in sharded_keys else P())
+                       for k in consts}
+
+        def inner(params0, key0, consts, eval_data, train_data):
+            start = consts["shard_index"][0] * m       # this shard's row 0
+            row_of_src = consts["src_to_buf"][0]       # (n,) global -> buf
+
+            def loc(x):
+                return jax.lax.dynamic_slice_in_dim(x, start, m, axis=0)
+
+            zeros_like_params = jax.tree.map(
+                lambda x: jnp.zeros(x.shape, jnp.float32), params0)
+            # next_train stays FULL-N and replicated: arrival scheduling
+            # gathers trains at global sender ids, and every shard's
+            # identical PRNG recomputation keeps it consistent for free
+            drawn = jax.vmap(self._interval)(
+                jax.random.split(jax.random.fold_in(key0, 12345), n))
+            init = dict(
+                params=params0,
+                sent=jax.tree.map(jnp.zeros_like, params0),
+                arrive=jnp.full((m, self.delivery_budget), _NEVER,
+                                jnp.int32),
+                rep=jnp.full((m, n), rep_impl.initial, jnp.float32),
+                acc_sum=zeros_like_params,
+                w_sum=jnp.zeros((m,), jnp.float32),
+                buf_cnt=jnp.zeros((m,), jnp.int32),
+                min_acc=jnp.full((m,), jnp.inf, jnp.float32),
+                min_sender=jnp.zeros((m,), jnp.int32),
+                next_train=jnp.where(consts["use_countdown"],
+                                     consts["countdown"], drawn),
+                broadcasts=jnp.zeros((m,), jnp.int32),
+                deliveries=jnp.zeros((), jnp.int32),
+                max_due=jnp.zeros((), jnp.int32),
+                fedavg_rounds=jnp.zeros((), jnp.int32),
+            )
+
+            def body(state, t):
+                key_t = jax.random.fold_in(key0, t)
+
+                # ---- 0. membership (rep columns are global-N)
+                if has_membership:
+                    a_t_full = consts["alive_t"][t]
+                    rej = consts["rejoin_t"][t]
+                    decayed = jnp.clip(
+                        state["rep"] * consts["rejoin_decay"],
+                        rep_impl.floor, rep_impl.initial)
+                    state = dict(state,
+                                 rep=jnp.where(rej[None, :], decayed,
+                                               state["rep"]))
+                else:
+                    a_t_full = consts["alive"]
+                a_loc = loc(a_t_full)
+
+                # ---- neighbor exchange: collectives run UNCONDITIONALLY
+                # (outside the delivery cond) so every shard issues the
+                # same static ppermute schedule every tick
+                blocks = [state["sent"]]
+                for d in offsets:
+                    perm = [(q, (q + d) % S) for q in range(S)]
+                    blocks.append(tree_ppermute(state["sent"], "fed", perm))
+                buf = jax.tree.map(
+                    lambda *bs: jnp.concatenate(bs, axis=0), *blocks)
+
+                # ---- 1. deliveries (local receiver rows)
+                expired = state["arrive"] == t
+                due = expired & a_loc[:, None]
+                acc_sum, w_sum, buf_cnt, batch_min, batch_sender = \
+                    jax.lax.cond(
+                        due.any(),
+                        lambda s: self._deliver_sharded(
+                            s, due, eval_data, consts["slot_src"], buf,
+                            row_of_src),
+                        lambda s: (s["acc_sum"], s["w_sum"], s["buf_cnt"],
+                                   jnp.full((m,), jnp.inf, jnp.float32),
+                                   jnp.zeros((m,), jnp.int32)),
+                        state)
+                better = batch_min < state["min_acc"]
+                min_acc = jnp.where(better, batch_min, state["min_acc"])
+                min_sender = jnp.where(better, batch_sender,
+                                       state["min_sender"])
+                arrive = jnp.where(expired, _NEVER, state["arrive"])
+
+                # ---- 2. weighted FedAvg + punishment (local rows)
+                fire = buf_cnt >= rep_impl.buffer_size       # (m,)
+                safe = w_sum > _EPS
+                apply = fire & safe
+
+                def leaf(acc, p):
+                    avg = acc / jnp.maximum(w_sum, _EPS).reshape(
+                        (-1,) + (1,) * (acc.ndim - 1))
+                    out = 0.5 * (avg + p.astype(jnp.float32))
+                    keep = apply.reshape((-1,) + (1,) * (acc.ndim - 1))
+                    return jnp.where(keep, out,
+                                     p.astype(jnp.float32)).astype(p.dtype)
+
+                params = jax.tree.map(leaf, acc_sum, state["params"])
+                rows_m = jnp.arange(m)
+                hit = fire & (min_acc < jnp.inf)
+                cur = state["rep"][rows_m, min_sender]
+                rep = state["rep"].at[rows_m, min_sender].set(
+                    jnp.where(hit,
+                              jnp.clip(cur - rep_impl.penalty,
+                                       rep_impl.floor, rep_impl.initial),
+                              cur))
+                keep1 = ~fire
+                acc_sum = jax.tree.map(
+                    lambda a: a * keep1.reshape((-1,) + (1,) * (a.ndim - 1)),
+                    acc_sum)
+                w_sum = w_sum * keep1
+                buf_cnt = buf_cnt * keep1
+                min_acc = jnp.where(fire, jnp.inf, min_acc)
+                min_sender = jnp.where(fire, 0, min_sender)
+
+                # ---- 3. train + broadcast; trains is replicated full-N
+                # (so the predicate agrees across shards), the train step
+                # runs on local rows only
+                next_train = state["next_train"] - (
+                    a_t_full.astype(jnp.int32) if has_membership else 1)
+                trains = (next_train <= 0) & a_t_full        # (n,)
+                trains_loc = loc(trains)
+
+                def do_train(operand):
+                    committed, sent = operand
+                    tkeys = loc(jax.random.split(
+                        jax.random.fold_in(key_t, 0), n))
+                    trained = train_v(committed, tkeys, train_data)
+                    mal_loc = loc(consts["malicious"])
+                    params = jax.tree.map(
+                        lambda new, old: jnp.where(
+                            (trains_loc & ~mal_loc).reshape(
+                                (-1,) + (1,) * (new.ndim - 1)),
+                            new, old),
+                        trained, committed)
+                    outgoing = trained
+                    for g, attack in enumerate(attack_instances):
+                        # local attacker ids; keys/masks are gathered at
+                        # the GLOBAL ids from the same full-n split the
+                        # compact engine uses, so poison streams match
+                        # bit-for-bit. Sentinel m rows: mask False +
+                        # dropped scatter.
+                        lids = consts["attack_lids"][g][0]
+                        lclamp = jnp.minimum(lids, m - 1)
+                        gids = jnp.minimum(start + lids, n - 1)
+                        akeys = jax.random.split(
+                            jax.random.fold_in(
+                                key_t, consts["attack_fold"][g]),
+                            n)[gids]
+                        bad = jax.vmap(
+                            lambda k, tr, cm, a=attack: a.apply(k, tr, cm, t)
+                        )(akeys,
+                          jax.tree.map(lambda x: x[lclamp], trained),
+                          jax.tree.map(lambda x: x[lclamp], committed))
+                        mask = (consts["attack_mask"][g][gids]
+                                & (lids < m))
+                        outgoing = jax.tree.map(
+                            lambda o, b, msk=mask, li=lids, lc=lclamp:
+                            o.at[li].set(
+                                jnp.where(
+                                    msk.reshape((-1,) + (1,) * (o.ndim - 1)),
+                                    b.astype(o.dtype), o[lc]),
+                                mode="drop"),
+                            outgoing, bad)
+                    if cfg.compress == "int8":
+                        outgoing = compression.roundtrip_tree(outgoing)
+                    sent = jax.tree.map(
+                        lambda s, o: jnp.where(
+                            trains_loc.reshape((-1,) + (1,) * (s.ndim - 1)),
+                            o, s),
+                        sent, outgoing)
+                    return params, sent
+
+                params, sent = jax.lax.cond(
+                    trains.any(), do_train, lambda operand: operand,
+                    (params, state["sent"]))
+                # receiver-driven arrivals: slot k of local dst is due
+                # t + delay ticks after its (global) sender trains —
+                # identical values to the compact inverse-map scatter
+                sched = trains[consts["slot_src"]] & consts["slot_valid"]
+                arrive = jnp.where(sched, t + consts["slot_delay"], arrive)
+                ikeys = jax.random.split(jax.random.fold_in(key_t, 2), n)
+                fresh = jax.vmap(self._interval)(ikeys) \
+                    * consts["straggler"]
+                next_train = jnp.where(trains, fresh, next_train)
+
+                new_state = dict(
+                    params=params, sent=sent, arrive=arrive, rep=rep,
+                    acc_sum=acc_sum, w_sum=w_sum, buf_cnt=buf_cnt,
+                    min_acc=min_acc, min_sender=min_sender,
+                    next_train=next_train,
+                    broadcasts=state["broadcasts"]
+                    + trains_loc.astype(jnp.int32),
+                    deliveries=state["deliveries"] + due.sum(),
+                    max_due=jnp.maximum(state["max_due"], due.sum()),
+                    fedavg_rounds=state["fedavg_rounds"] + apply.sum(),
+                )
+                acc_row = jax.lax.cond(
+                    t % cfg.record_every == 0,
+                    lambda p: test_v(p).astype(jnp.float32),
+                    lambda p: jnp.zeros((m,), jnp.float32),
+                    params)
+                return new_state, (acc_row, due.sum().astype(jnp.int32)
+                                   .reshape((1,)))
+
+            final, (acc_rows, due_rows) = jax.lax.scan(
+                body, init, jnp.arange(cfg.ticks, dtype=jnp.int32))
+            out_final = dict(final)
+            # every output leaf leaves the shard on axis 0: slice the
+            # replicated countdown to local rows, lift the per-shard scalar
+            # counters to (1,) so they concatenate to (S,) globally
+            out_final["next_train"] = loc(final["next_train"])
+            for k in ("deliveries", "max_due", "fedavg_rounds"):
+                out_final[k] = final[k][None]
+            return {"final": out_final, "acc": acc_rows, "due": due_rows}
+
+        shmapped = compat.shard_map(
+            inner, mesh=self._mesh,
+            in_specs=(fed, P(), const_specs, fed, fed),
+            out_specs={"final": fed, "acc": P(None, "fed"),
+                       "due": P(None, "fed")},
+            axis_names={"fed"}, check_vma=False)
+        return shmapped(params0, key0, consts, eval_data, train_data)
+
     # --------------------------------------------------------------------- run
     def run(self, params0=None):
         """params0: pytree with leading N dim (defaults to the scenario's
@@ -845,6 +1333,34 @@ class LaxSimulator:
                     "run() needs params0 when constructed without a scenario")
             params0 = self.scenario.init_params_stacked()
         cfg = self.cfg
+
+        if cfg.delivery == "sharded":
+            out = self._jit_scan(
+                params0, jax.random.PRNGKey(cfg.seed), self._consts,
+                self._eval_data, self._train_data)
+            final = jax.tree.map(np.asarray, out["final"])
+            due_rows = np.asarray(out["due"])            # (ticks, S)
+            max_shard_due = final["max_due"]             # (S,) per-shard
+            if (max_shard_due > self.shard_budget).any():
+                offenders = np.flatnonzero(max_shard_due > self.shard_budget)
+                raise RuntimeError(
+                    f"sharded delivery overflow: shard "
+                    f"{[int(p) for p in offenders]} had "
+                    f"{[int(d) for d in max_shard_due[offenders]]} due "
+                    f"deliveries on one tick but the per-shard work buffer "
+                    f"holds {self.shard_budget} (SimLaxConfig.compact_budget "
+                    "override; the exact per-shard "
+                    "topology.compaction_budget bound cannot overflow)")
+            # global counters from the per-shard columns
+            merged = dict(final)
+            merged["deliveries"] = final["deliveries"].sum()
+            merged["fedavg_rounds"] = final["fedavg_rounds"].sum()
+            merged["max_due"] = (due_rows.sum(axis=1).max()
+                                 if due_rows.size else 0)
+            return self._package(
+                merged, np.asarray(out["acc"]), self._slot_src_np,
+                {"shards": self.shards, "shard_budget": self.shard_budget,
+                 "max_shard_deliveries": int(max_shard_due.max())})
 
         if not self._batched:
             final, acc_by_tick = self._jit_scan(
@@ -923,7 +1439,7 @@ class LaxSimulator:
         n = self.topology.num_nodes
         rec = np.arange(0, cfg.ticks, cfg.record_every)
         final_arrive = np.asarray(final["arrive"])
-        if cfg.delivery == "compact":
+        if cfg.delivery in ("compact", "sharded"):
             # expand the (N, budget) slot state back to the (N, N) matrix
             # the oracles carry, so final-state parity is one comparison
             dense_arrive = np.full((n, n), _NEVER, np.int32)

@@ -135,25 +135,64 @@ class Topology:
         return sched
 
 
-def hop_distance_from_adj(adj: np.ndarray) -> np.ndarray:
+def hop_distance_from_adj(adj: np.ndarray, *,
+                          max_hops: int | None = None) -> np.ndarray:
     """BFS hop counts over a raw (possibly partially-masked) adjacency;
     unreachable pairs get INT32_MAX. No validity requirements — usable on
-    graphs with isolated nodes (e.g. dead-node-masked simulations)."""
+    graphs with isolated nodes (e.g. dead-node-masked simulations).
+
+    ``max_hops`` caps the search depth: pairs farther than ``max_hops``
+    report INT32_MAX exactly as if unreachable. The tick simulators only
+    consume distances within ``ttl`` (reach masks, delay tables, ring
+    sizes), so capping at ``ttl`` is result-identical for them while
+    turning the all-pairs cost from O(N * edges * diameter) into
+    O(N^2 * max_hops / word-width) — the difference between minutes and
+    sub-second at the sharded engine's N ~ 10^4 scale.
+
+    All sources advance one synchronized frontier per step (a boolean
+    product against the adjacency), so distances are the BFS hop counts
+    bit-for-bit — there is no per-source ordering to diverge. Sparse
+    graphs (max in-degree <= 64) expand frontiers by gathering padded
+    in-neighbor lists, O(N^2 * degree) per hop; dense ones fall back to a
+    float32 matmul (BLAS; exact for row sums <= 2^24)."""
     n = adj.shape[0]
     dist = np.full((n, n), _UNREACH, np.int32)
-    for s in range(n):
-        dist[s, s] = 0
-        frontier = [s]
+    np.fill_diagonal(dist, 0)
+    frontier = np.eye(n, dtype=np.bool_)
+    visited = frontier.copy()
+    limit = n if max_hops is None else min(int(max_hops), n)
+    deg_in = adj.sum(axis=0)
+    k = int(deg_in.max()) if n else 0
+    if k == 0 or limit < 1:
+        return dist
+    if k <= 64:
+        # padded in-neighbor lists: nlist[u] = {v : edge v->u}, pad = n
+        vs, us = np.nonzero(adj)
+        order = np.argsort(us, kind="stable")
+        us_s, vs_s = us[order], vs[order]
+        starts = np.concatenate(
+            ([0], np.cumsum(np.bincount(us_s, minlength=n))[:-1]))
+        nlist = np.full((n, k), n, np.int64)
+        nlist[us_s, np.arange(len(us_s)) - starts[us_s]] = vs_s
+        fr_pad = np.zeros((n, n + 1), np.bool_)  # col n: always-False pad
         d = 0
-        while frontier:
+        while frontier.any() and d < limit:
             d += 1
-            nxt = []
-            for u in frontier:
-                for v in np.flatnonzero(adj[u]):
-                    if dist[s, v] == _UNREACH:
-                        dist[s, v] = d
-                        nxt.append(int(v))
-            frontier = nxt
+            fr_pad[:, :n] = frontier
+            nxt = fr_pad[:, nlist[:, 0]]
+            for j in range(1, k):                # per-column gathers avoid
+                nxt |= fr_pad[:, nlist[:, j]]    # the (N, N, k) temp
+            frontier = nxt & ~visited
+            dist[frontier] = d
+            visited |= frontier
+        return dist
+    adj_f = adj.astype(np.float32)
+    d = 0
+    while frontier.any() and d < limit:
+        d += 1
+        frontier = ((frontier.astype(np.float32) @ adj_f) > 0) & ~visited
+        dist[frontier] = d
+        visited |= frontier
     return dist
 
 
@@ -189,15 +228,24 @@ def delivery_budget(adj: np.ndarray, ttl: int, *,
 
 
 def ring_sizes(adj: np.ndarray, ttl: int, *,
-               dist: np.ndarray | None = None) -> np.ndarray:
+               dist: np.ndarray | None = None,
+               receivers: np.ndarray | None = None) -> np.ndarray:
     """(N, ttl) int32: ``ring_sizes[s, d-1]`` = how many nodes lie at hop
     distance exactly ``d`` from ``s``. Rows sum to ``ttl_ball_sizes`` — the
     ball is the disjoint union of its rings. Works on raw (possibly
-    dead-node-masked) adjacencies like ``hop_distance_from_adj``."""
+    dead-node-masked) adjacencies like ``hop_distance_from_adj``.
+
+    ``receivers`` restricts the count to a subset of receiver columns: the
+    sharded delivery engine budgets each shard by the deliveries landing on
+    ITS nodes only, so each sender's ring is intersected with the shard's
+    receiver block. Senders stay all-N — any node can send into the block.
+    """
     if ttl < 1:
         raise ValueError("ttl must be >= 1")
     if dist is None:
         dist = hop_distance_from_adj(adj)
+    if receivers is not None:
+        dist = dist[:, np.asarray(receivers)]
     n = adj.shape[0]
     out = np.zeros((n, ttl), np.int32)
     for d in range(1, ttl + 1):
@@ -207,7 +255,8 @@ def ring_sizes(adj: np.ndarray, ttl: int, *,
 
 def compaction_budget(adj: np.ndarray, ttl: int, intervals, *,
                       latency: int = 1,
-                      dist: np.ndarray | None = None) -> int:
+                      dist: np.ndarray | None = None,
+                      receivers: np.ndarray | None = None) -> int:
     """Static bound on deliveries due on any ONE tick across the whole
     federation — the compact delivery engine's work-buffer width.
 
@@ -231,13 +280,18 @@ def compaction_budget(adj: np.ndarray, ttl: int, intervals, *,
     ``sum_src max_d |ring(src, d)|``. Always ``<= N * delivery_budget``
     (the sparse engine's total slot count): the compact buffer is never
     larger than the sparse one.
+
+    ``receivers`` restricts the bound to deliveries landing on that subset
+    of nodes (see ``ring_sizes``): the sharded engine sizes each shard's
+    work buffer by its own receiver block, so the per-shard budgets sum to
+    at most the global one (rings partition over disjoint blocks).
     """
     lo = int(intervals[0]) if np.ndim(intervals) else int(intervals)
     if lo < 1:
         raise ValueError(f"min train interval must be >= 1, got {lo}")
     if latency < 1:
         raise ValueError(f"latency must be >= 1, got {latency}")
-    rings = ring_sizes(adj, ttl, dist=dist)          # (N, ttl)
+    rings = ring_sizes(adj, ttl, dist=dist, receivers=receivers)  # (N, ttl)
     g = max(1, -(-lo // latency))                    # ceil(lo / latency)
     # per-sender max-weight subset of distances with pairwise gaps >= g:
     # f[d] = ring[d] + best over earlier picks at distance <= d - g

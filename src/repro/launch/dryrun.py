@@ -21,6 +21,9 @@ JSON file consumed by EXPERIMENTS.md.
 Usage:
     python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
     python -m repro.launch.dryrun --all [--multi-pod] [--dfl]
+    python -m repro.launch.dryrun --engine lax --nodes 64 \
+        --delivery sharded --mesh 8 \
+        --churn 10:leave:3+5 --churn 20:join:3
 """
 import argparse
 import json
@@ -181,6 +184,35 @@ def _parse_attack_args(pairs):
     return out
 
 
+def _parse_churn(args):
+    """--churn TICK:OP:IDS entries (+ --churn-offline / --churn-decay) ->
+    MembershipSchedule, or None when no churn was requested. Entries
+    sharing a tick are merged into one event (the schedule's invariant)."""
+    if not args.churn and not args.churn_offline:
+        return None
+    from repro.chain.attacks import MembershipSchedule
+
+    by_tick = {}
+    for raw in args.churn:
+        parts = raw.split(":")
+        if len(parts) != 3 or parts[1] not in ("join", "leave"):
+            raise SystemExit(
+                f"--churn expects TICK:join|leave:ID+ID..., got {raw!r}")
+        try:
+            tick = int(parts[0])
+            ids = tuple(int(i) for i in parts[2].split("+") if i)
+        except ValueError:
+            raise SystemExit(
+                f"--churn expects integer tick/ids, got {raw!r}")
+        joins, leaves = by_tick.setdefault(tick, (set(), set()))
+        (joins if parts[1] == "join" else leaves).update(ids)
+    offline = tuple(int(i) for i in args.churn_offline.split("+") if i)
+    return MembershipSchedule.build(
+        [(t, tuple(sorted(j)), tuple(sorted(lv)))
+         for t, (j, lv) in sorted(by_tick.items())],
+        rejoin_decay=args.churn_decay, initial_offline=offline)
+
+
 def run_lax_federation(args):
     """--engine lax: drive the vectorized tick simulator end-to-end
     (registered scenario x registered attack) instead of lowering a mesh
@@ -205,15 +237,24 @@ def run_lax_federation(args):
         sc = builder(n, dim=16, malicious=mal)
         interval = (8, 16)
     attack = attacks.make(args.attack, **_parse_attack_args(args.attack_arg))
+    membership = _parse_churn(args)
     spec = attacks.FederationSpec.build(
         n, malicious=mal, attack=attack,
-        initial_countdown=[1 + (5 * i) % interval[0] for i in range(n)])
+        initial_countdown=[1 + (5 * i) % interval[0] for i in range(n)],
+        membership=membership)
     topo = topology_lib.make(args.topology, n, degree=args.topology_degree,
                              seed=1)
+    shards = None
+    if args.delivery == "sharded":
+        # default: as many shards as devices help, capped so the node axis
+        # still divides (validation in SimLaxConfig fails fast otherwise)
+        shards = args.mesh or min(jax.device_count(), n)
+    elif args.mesh:
+        raise SystemExit("--mesh only applies to --delivery sharded")
     cfg = simlax.SimLaxConfig(
         ticks=ticks, train_interval=interval, latency=1,
         ttl=ttl, record_every=max(1, ticks // 8), seed=0,
-        delivery=args.delivery, compress=args.compress)
+        delivery=args.delivery, compress=args.compress, shards=shards)
     sim = simlax.LaxSimulator(sc, topo, spec, get_rep("impl2"), cfg)
     t0 = time.time()
     res = sim.run()
@@ -224,6 +265,8 @@ def run_lax_federation(args):
         "status": "ok", "attack": attack.name,
         "attack_params": _parse_attack_args(args.attack_arg),
         "delivery": args.delivery, "topology": args.topology,
+        "shards": res.stats.get("shards"),
+        "churn_events": len(membership.events) if membership else 0,
         "ttl": ttl, "nodes": n, "ticks": ticks,
         "compress": res.stats["compress"],
         "broadcast_bytes": res.stats["broadcast_bytes"],
@@ -347,10 +390,30 @@ def main():
     ap.add_argument("--ticks", type=int, default=48,
                     help="simulated ticks for --engine lax")
     ap.add_argument("--delivery", default="compact",
-                    choices=("compact", "sparse", "dense"),
+                    choices=("compact", "sparse", "dense", "sharded"),
                     help="receipt engine for --engine lax: compact "
                     "(segment-compacted work buffer, default), sparse "
-                    "(per-receiver slot buffer), dense (N^2 oracle)")
+                    "(per-receiver slot buffer), dense (N^2 oracle), "
+                    "sharded (node axis shard_map-partitioned over the "
+                    "forced host devices — docs/SCALING.md)")
+    ap.add_argument("--mesh", type=int, default=0, metavar="SHARDS",
+                    help="--delivery sharded: partition the node axis over "
+                    "this many of the forced host devices (0 = one shard "
+                    "per device; num nodes must divide evenly)")
+    ap.add_argument("--churn", action="append", default=[],
+                    metavar="TICK:OP:IDS",
+                    help="membership event for --engine lax, repeatable: "
+                    "OP is join|leave, IDS is '+'-separated node ids "
+                    "(e.g. --churn 10:leave:3+5 --churn 20:join:3); "
+                    "entries sharing a tick merge into one event. Rejoins "
+                    "resume from committed params with reputation decayed "
+                    "(docs/SCALING.md)")
+    ap.add_argument("--churn-offline", default="", metavar="ID+ID...",
+                    help="node ids offline from tick 0 (their first join "
+                    "is not a rejoin: no reputation decay)")
+    ap.add_argument("--churn-decay", type=float, default=0.5,
+                    help="rejoin reputation decay factor in [0, 1] "
+                    "(rep <- clip(decay * rep, floor, initial))")
     ap.add_argument("--compress", default=None,
                     type=lambda s: None if s in ("none", "") else s,
                     choices=(None, "int8"), metavar="{none,int8}",

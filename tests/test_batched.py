@@ -59,8 +59,12 @@ def _assert_result_equal(batched, single, b, engine):
                               single.final_state[k]), f"{k}: {ctx}"
 
 
-@pytest.mark.parametrize("engine", simlax.DELIVERY_ENGINES)
+@pytest.mark.parametrize(
+    "engine", [e for e in simlax.DELIVERY_ENGINES if e != "sharded"])
 def test_batched_eight_matches_singles_bitwise(engine):
+    # "sharded" is excluded by contract: BatchedFederationSpec does not
+    # compose with the shard_map engine (see docs/SCALING.md); the engine
+    # raises on the combination, covered in tests/test_sharded.py.
     """The acceptance pin: one batched run() over 8 heterogeneous specs ==
     8 independent single runs, bit for bit, on every delivery engine."""
     n, ticks = 16, 48

@@ -1,0 +1,206 @@
+"""delivery="sharded": the shard_map multi-device engine must be BITWISE
+identical to delivery="compact" — same scatter-add structure, same key
+streams, the node axis merely partitioned over the mesh (docs/SCALING.md).
+
+The multi-device cases run in a fresh interpreter with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 (conftest
+``subprocess_runner``); the in-process cases exercise the S=1 single-device
+fallback, which lowers through the same shard_map path."""
+import numpy as np
+import pytest
+
+from repro.chain import scenarios, simlax
+from repro.chain.attacks import (BatchedFederationSpec, FederationSpec,
+                                 MembershipSchedule)
+from repro.core import topology as T
+from repro.core.reputation import IMPL2
+
+
+def _assert_bitwise(a, b):
+    """Full-result bitwise equality — stricter than the cross-engine
+    allclose contract in tests/test_simlax.py, per the sharded pin."""
+    import jax
+    for k in ("broadcasts", "deliveries", "fedavg_rounds",
+              "max_tick_deliveries"):
+        assert a.stats[k] == b.stats[k], (k, a.stats[k], b.stats[k])
+    np.testing.assert_array_equal(a.stats["broadcasts_per_node"],
+                                  b.stats["broadcasts_per_node"])
+    for k in a.final_state:
+        if k in b.final_state:
+            np.testing.assert_array_equal(np.asarray(a.final_state[k]),
+                                          np.asarray(b.final_state[k]),
+                                          err_msg=k)
+    np.testing.assert_array_equal(a.reputation, b.reputation)
+    np.testing.assert_array_equal(a.acc_history, b.acc_history)
+    jax.tree.map(lambda x, y: np.testing.assert_array_equal(
+        np.asarray(x), np.asarray(y)), a.params, b.params)
+    jax.tree.map(lambda x, y: np.testing.assert_array_equal(
+        np.asarray(x), np.asarray(y)), a.sent, b.sent)
+
+
+def _pair(sc, topo, spec, *, ticks, interval, ttl=2, compress=None,
+          shards=None):
+    out = []
+    for eng in ("compact", "sharded"):
+        cfg = simlax.SimLaxConfig(
+            ticks=ticks, train_interval=(interval, interval), latency=1,
+            ttl=ttl, record_every=8, seed=0, delivery=eng,
+            shards=shards if eng == "sharded" else None, compress=compress)
+        out.append(simlax.LaxSimulator(sc, topo, spec, IMPL2, cfg).run())
+    return out
+
+
+# ============================================== single-device (S=1) fallback
+@pytest.mark.parametrize("compress", [None, "int8"])
+def test_sharded_single_device_matches_compact_bitwise(compress):
+    n, interval = 8, 6
+    sc = scenarios.toy_scenario(n, dim=8, malicious=(0,))
+    spec = FederationSpec.build(
+        n, malicious=(0,),
+        initial_countdown=[3 + (7 * i) % interval for i in range(n)])
+    a, b = _pair(sc, T.full(n), spec, ticks=48, interval=interval,
+                 compress=compress)
+    assert a.stats["deliveries"] > 0
+    assert b.stats["shards"] == 1
+    _assert_bitwise(a, b)
+
+
+def test_sharded_single_device_churn_matches_compact_bitwise():
+    """Membership events thread through the shard_map scan identically:
+    the replicated alive/rejoin rows gate each shard's local slice."""
+    n, interval = 8, 6
+    sc = scenarios.toy_scenario(n, dim=8, malicious=(0,))
+    ms = MembershipSchedule.build(
+        [(8, (), (3,)), (20, (3,), ()), (30, (), (5,))],
+        rejoin_decay=0.5)
+    spec = FederationSpec.build(
+        n, malicious=(0,), membership=ms,
+        initial_countdown=[3 + (7 * i) % interval for i in range(n)])
+    a, b = _pair(sc, T.full(n), spec, ticks=48, interval=interval)
+    assert a.stats["deliveries"] > 0
+    _assert_bitwise(a, b)
+
+
+# ==================================================== config-space contract
+def test_sharded_config_validation():
+    n, interval = 8, 6
+    sc = scenarios.toy_scenario(n, dim=4)
+    spec = FederationSpec.build(n)
+    def cfg(**kw):
+        return simlax.SimLaxConfig(ticks=8, train_interval=(interval, interval),
+                                   latency=1, ttl=1, record_every=4, **kw)
+    # shards= only means something on the sharded engine
+    with pytest.raises(ValueError, match="shards"):
+        simlax.LaxSimulator(sc, T.full(n), spec, IMPL2,
+                            cfg(delivery="compact", shards=2))
+    # N must split evenly over the mesh
+    with pytest.raises(ValueError, match="divisible"):
+        simlax.LaxSimulator(sc, T.full(n), spec, IMPL2,
+                            cfg(delivery="sharded", shards=3))
+    # cannot ask for more shards than visible devices
+    import jax
+    too_many = jax.device_count() + 1
+    while n % too_many:
+        too_many += 1
+    with pytest.raises(ValueError, match="device"):
+        simlax.LaxSimulator(sc, T.full(n), spec, IMPL2,
+                            cfg(delivery="sharded", shards=too_many))
+
+
+def test_sharded_does_not_compose_with_batching():
+    """BatchedFederationSpec x sharding is explicitly rejected (the fed
+    mesh axis is taken by the node partition — docs/SCALING.md)."""
+    n = 8
+    sc = scenarios.toy_scenario(n, dim=4)
+    batch = BatchedFederationSpec.build(
+        [FederationSpec.build(n), FederationSpec.build(n, malicious=(0,))])
+    cfg = simlax.SimLaxConfig(ticks=8, train_interval=(6, 6), latency=1,
+                              ttl=1, record_every=4, delivery="sharded")
+    with pytest.raises(ValueError, match="[Bb]atched"):
+        simlax.LaxSimulator(sc, T.full(n), batch, IMPL2, cfg)
+
+
+# ================================================= forced 8-host-device mesh
+_SUBPROC_COMMON = r"""
+import numpy as np, jax
+assert jax.device_count() == 8, jax.device_count()
+from repro.chain import scenarios, simlax
+from repro.chain.attacks import FederationSpec, MembershipSchedule
+from repro.core import topology as T
+from repro.core.reputation import IMPL2
+
+def pair(sc, topo, spec, *, ticks, interval, ttl, compress=None):
+    out = []
+    for eng in ("compact", "sharded"):
+        cfg = simlax.SimLaxConfig(
+            ticks=ticks, train_interval=(interval, interval), latency=1,
+            ttl=ttl, record_every=8, seed=0, delivery=eng, compress=compress)
+        out.append(simlax.LaxSimulator(sc, topo, spec, IMPL2, cfg).run())
+    return out
+
+def check(a, b):
+    for k in ("broadcasts", "deliveries", "fedavg_rounds",
+              "max_tick_deliveries"):
+        assert a.stats[k] == b.stats[k], (k, a.stats[k], b.stats[k])
+    np.testing.assert_array_equal(a.stats["broadcasts_per_node"],
+                                  b.stats["broadcasts_per_node"])
+    for k in a.final_state:
+        if k in b.final_state:
+            np.testing.assert_array_equal(np.asarray(a.final_state[k]),
+                                          np.asarray(b.final_state[k]),
+                                          err_msg=k)
+    np.testing.assert_array_equal(a.reputation, b.reputation)
+    np.testing.assert_array_equal(a.acc_history, b.acc_history)
+    jax.tree.map(lambda x, y: np.testing.assert_array_equal(
+        np.asarray(x), np.asarray(y)), a.params, b.params)
+    jax.tree.map(lambda x, y: np.testing.assert_array_equal(
+        np.asarray(x), np.asarray(y)), a.sent, b.sent)
+    assert a.stats["deliveries"] > 0
+    assert b.stats["shards"] == 8
+"""
+
+
+def test_sharded_eight_devices_toy_bitwise(subprocess_runner):
+    """The acceptance pin: sharded == compact bit for bit on a REAL
+    8-device mesh — with attackers, int8 wire compression, and churn."""
+    code = _SUBPROC_COMMON + r"""
+n, interval = 16, 6
+sc = scenarios.toy_scenario(n, dim=8, malicious=(0, 5))
+topo = T.kregular(n, 3)
+cd = [3 + (7 * i) % interval for i in range(n)]
+for compress in (None, "int8"):
+    spec = FederationSpec.build(n, malicious=(0, 5), initial_countdown=cd)
+    a, b = pair(sc, topo, spec, ticks=48, interval=interval, ttl=2,
+                compress=compress)
+    check(a, b)
+ms = MembershipSchedule.build(
+    [(7, (), (3, 11)), (19, (3,), ()), (29, (11,), ()), (37, (), (6,))],
+    rejoin_decay=0.5, initial_offline=(9,))
+spec = FederationSpec.build(n, malicious=(0, 5), initial_countdown=cd,
+                            membership=ms)
+a, b = pair(sc, topo, spec, ticks=48, interval=interval, ttl=2)
+check(a, b)
+print("TOY-8DEV-OK")
+"""
+    r = subprocess_runner(code, host_devices=8)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "TOY-8DEV-OK" in r.stdout
+
+
+def test_sharded_eight_devices_lenet_bitwise(subprocess_runner):
+    """Same pin on the paper's real workload: LeNet-5, non-IID shards,
+    gaussian poisoning, one node per device (N=8, S=8)."""
+    code = _SUBPROC_COMMON + r"""
+n, interval = 8, 6
+sc = scenarios.lenet_scenario(n, malicious=(0,), pool=32, eval_size=8,
+                              test_size=32, train_steps=1, batch=8)
+spec = FederationSpec.build(
+    n, malicious=(0,),
+    initial_countdown=[3 + (7 * i) % interval for i in range(n)])
+a, b = pair(sc, T.kregular(n, 2), spec, ticks=24, interval=interval, ttl=2)
+check(a, b)
+print("LENET-8DEV-OK")
+"""
+    r = subprocess_runner(code, host_devices=8)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "LENET-8DEV-OK" in r.stdout

@@ -340,8 +340,10 @@ def test_reputation_crushes_malicious_only():
 
 # ============================================ compact vs sparse vs dense
 def _run_engines(sc, topo, spec, *, ticks, interval, latency=1, ttl=2,
-                 seed=0, engines=simlax.DELIVERY_ENGINES, compact_budget=None,
-                 compress=None):
+                 seed=0, engines=("compact", "sparse", "dense"),
+                 compact_budget=None, compress=None):
+    # default engines = the single-device trio; delivery="sharded" has its
+    # own parity suite (tests/test_sharded.py, forced multi-device mesh)
     out = {}
     for eng in engines:
         cfg = simlax.SimLaxConfig(

@@ -32,6 +32,12 @@ lax engine (per delivery engine x compress):
     full precision
   * no collectives, no f64
 
+sharded engine (per compress):
+  * the shard_map tick scan's only collectives are the neighbor-exchange
+    ppermutes (one per occupied shard offset per sent leaf — the engine's
+    static schedule), no all-gathers of per-shard state, while trips ==
+    cfg.ticks, s8 out of the carry (docs/SCALING.md)
+
 batched engine (per delivery engine x compress):
   * the same invariants over the VMAPPED B=2 heterogeneous-federation
     scan: vmap must add a batch axis, not collectives, not an unrolled
@@ -292,6 +298,82 @@ def audit_lax_engine(engines, out: dict) -> None:
                        out)
 
 
+# -------------------------------------------------------------- sharded engine
+def _make_sharded_sim(compress, n: int = 16, shards: int = 8,
+                      ticks: int = 12):
+    topo = topology_lib.kregular(n, 2)
+    sc = scenarios.toy_scenario(n, dim=8, malicious=(0,))
+    spec = FederationSpec.build(
+        n, malicious=(0,),
+        initial_countdown=[1 + (3 * i) % 4 for i in range(n)])
+    cfg = simlax.SimLaxConfig(ticks=ticks, seed=0, train_interval=(4, 4),
+                              latency=1, ttl=2, delivery="sharded",
+                              shards=shards, compress=compress)
+    return simlax.LaxSimulator(sc, topo, spec, get_rep("impl2"), cfg)
+
+
+def audit_sharded_engine(out: dict, compresses=(None, "int8")) -> None:
+    """delivery="sharded" (docs/SCALING.md): the shard_map tick scan's ONLY
+    collectives are the neighbor-exchange ppermutes — one per occupied
+    shard offset per `sent` leaf, matching the engine's static schedule —
+    and in particular NO all-gather of the (m, budget) slot state or the
+    (m, N) reputation rows; the tick loop stays one while loop at
+    cfg.ticks static trips; int8 stays confined to the body."""
+    for compress in compresses:
+        sim = _make_sharded_sim(compress)
+        text = sim.lower_scan().compile().as_text()
+        res = hlo_cost.analyze(text)
+        sent_leaves = len(jax.tree.leaves(
+            sim.scenario.init_params_stacked()))
+        # hlo_cost trip-weights collectives: one ppermute per occupied
+        # shard offset per sent leaf in the tick body, x cfg.ticks trips
+        expected = len(sim._offsets) * sent_leaves * sim.cfg.ticks
+        count = permute_count(res)
+        total = total_collectives(res)
+        problems = []
+        if count != expected:
+            problems.append(
+                f"permute count {count} != offsets x sent-leaves x ticks "
+                f"{len(sim._offsets)}x{sent_leaves}x{sim.cfg.ticks}="
+                f"{expected}: the neighbor exchange was fused, duplicated, "
+                "or dropped relative to the engine's offset schedule")
+        if total != count:
+            problems.append(
+                f"{total - count} non-permute collectives (all-gather/"
+                "all-reduce) lowered: per-shard state leaked onto the wire")
+        if sim.cfg.ticks not in res.while_trips:
+            problems.append(
+                f"no while loop with static trip count {sim.cfg.ticks}: "
+                f"the sharded tick scan was unrolled or split "
+                f"(trips={res.while_trips})")
+        if "f64[" in text:
+            problems.append("f64 present in compiled module")
+        has_s8 = "s8[" in text
+        if compress == "int8" and not has_s8:
+            problems.append("int8 engine compiled without any s8 op")
+        if compress is None and has_s8:
+            problems.append("fp32 engine unexpectedly contains s8")
+        if while_carry_has(text, "s8["):
+            problems.append(
+                "s8 in a while-loop carry: the wire roundtrip must be "
+                "confined to the tick body (committed params stay f32)")
+        key = f"sharded/{sim.topology.num_nodes}x{sim.shards}/" \
+              f"{compress or 'fp32'}"
+        out[key] = {
+            "ok": not problems,
+            "collectives": total,
+            "permutes": count,
+            "schedule_permutes": expected,
+            "while_trips": sorted(res.while_trips),
+            "has_s8": has_s8,
+            "problems": problems,
+        }
+        print(f"hlo-audit,{'ok' if not problems else 'FAIL'},{key},"
+              f"permutes={count}/{expected},trips={sorted(res.while_trips)},"
+              f"s8={has_s8}"
+              + ("," + ";".join(problems) if problems else ""))
+
+
 # -------------------------------------------------------------- batched engine
 def _make_batched_sim(delivery: str, compress, n: int = 10, ticks: int = 12):
     """B=2 heterogeneous federations (different attacks, a straggler,
@@ -391,6 +473,8 @@ def main(argv=None) -> int:
         engines = ("compact", "sparse", "dense")
     audit_gossip_round(F, round_cells, rows)
     audit_lax_engine(engines, rows)
+    audit_sharded_engine(rows, compresses=((None,) if args.quick
+                                           else (None, "int8")))
     audit_batched_engine(engines, rows)
     audit_retrace(rows)
 

@@ -65,6 +65,9 @@ HOST_SIDE_FUNCS = {
             "host-side stacking of member role sheets",
         "BatchedFederationSpec.attack_union":
             "host-side union over member role sheets",
+        "MembershipSchedule.timeline":
+            "host-side expansion of churn events to dense per-tick "
+            "alive/rejoin masks, baked as scan consts at build time",
     },
 }
 
@@ -97,7 +100,8 @@ ASSERTED_JITTED = {
 # jit/vmap via instance attributes, or called from the other engine).
 # --check-model asserts every pattern still matches at least one function.
 TRACED_SEEDS = {
-    "repro.chain.simlax": {"LaxSimulator._scan"},
+    "repro.chain.simlax": {"LaxSimulator._scan",
+                           "LaxSimulator._scan_sharded"},
     "repro.chain.attacks": {"*.apply"},       # every Attack.apply runs in-scan
     "repro.core.compression": {"*"},          # fully traced wire codec
     "repro.core.fedavg": {"*"},               # fully traced aggregation
